@@ -1,0 +1,59 @@
+"""Shared benchmark harness: timing + CSV rows (`name,us_per_call,derived`)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import RelationalMemoryEngine, RelationalTable, benchmark_schema
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def timeit(fn, iters: int = 5, warmup: int = 1) -> float:
+    """Median wall time in microseconds (device-synchronized)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}")
+
+
+def flush_rows() -> list[tuple[str, float, str]]:
+    out = list(ROWS)
+    ROWS.clear()
+    return out
+
+
+def make_benchmark_table(
+    row_bytes: int = 64, col_bytes: int = 4, n_rows: int = 44_000, seed: int = 0
+) -> RelationalTable:
+    """The paper's synthetic benchmark relation (§6.2 defaults)."""
+    rng = np.random.default_rng(seed)
+    schema = benchmark_schema(row_bytes, col_bytes)
+    if col_bytes == 4:
+        cols = {
+            c.name: rng.integers(-1000, 1000, n_rows).astype(np.int32)
+            for c in schema.columns
+        }
+    else:
+        cols = {
+            c.name: rng.integers(0, 256, (n_rows, col_bytes)).astype(np.uint8)
+            .view(np.dtype((np.bytes_, col_bytes))).reshape(-1)
+            for c in schema.columns
+        }
+    return RelationalTable.from_columns(schema, cols)
+
+
+def fresh_engine(revision: str = "xla", cache_bytes: int = 2 << 20):
+    return RelationalMemoryEngine(revision=revision, cache_bytes=cache_bytes)

@@ -1,0 +1,38 @@
+"""Fig. 10: Q2 (select+project), Q3 (select+aggregate), Q4 (group-by) with
+varying column size at fixed 64B rows — RME fused kernels vs direct row-wise.
+"""
+
+from repro.core import operators as ops
+
+from .common import emit, fresh_engine, make_benchmark_table, timeit
+
+N_ROWS = 20_000
+
+
+def run() -> None:
+    for col_bytes in (4, 8, 16):
+        n_cols = 64 // col_bytes
+        t = make_benchmark_table(row_bytes=64, col_bytes=4, n_rows=N_ROWS)
+        eng = fresh_engine()
+        cs = ops.make_colstore(t, list(t.schema.names))
+
+        us = timeit(lambda: ops.q2_select_project(eng, t, "A1", "A3", 100),
+                    iters=3)
+        emit(f"fig10/q2_c{col_bytes:02d}_rme", us, f"sel~90%,cols={n_cols}")
+        us = timeit(lambda: ops.q2_select_project(eng, t, "A1", "A3", 100,
+                                                  path="row", colstore=cs), iters=3)
+        emit(f"fig10/q2_c{col_bytes:02d}_row", us, "")
+
+        us = timeit(lambda: ops.q3_select_aggregate(eng, t, "A2", "A4", -800),
+                    iters=3)
+        emit(f"fig10/q3_c{col_bytes:02d}_rme", us, "sel~10%")
+        us = timeit(lambda: ops.q3_select_aggregate(eng, t, "A2", "A4", -800,
+                                                    path="row", colstore=cs), iters=3)
+        emit(f"fig10/q3_c{col_bytes:02d}_row", us, "")
+
+        us = timeit(lambda: ops.q4_groupby_avg(eng, t, "A1", "A3", "A2", -800, 64),
+                    iters=3)
+        emit(f"fig10/q4_c{col_bytes:02d}_rme", us, "groups=64")
+        us = timeit(lambda: ops.q4_groupby_avg(eng, t, "A1", "A3", "A2", -800, 64,
+                                               path="row", colstore=cs), iters=3)
+        emit(f"fig10/q4_c{col_bytes:02d}_row", us, "")

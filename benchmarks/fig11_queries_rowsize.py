@@ -1,0 +1,44 @@
+"""Fig. 11: Q2/Q3/Q4 with 4-byte columns and growing row size.
+
+The paper's point: RME latency stays flat (it touches only the enabled
+columns) while the direct row-wise path degrades with row width — cache
+pollution in hardware, extra bytes shipped here.  `derived` carries the
+bytes ratio, which is the hardware-independent form of the result.
+"""
+
+from repro.core import TableGeometry, bytes_moved
+from repro.core import operators as ops
+
+from .common import emit, fresh_engine, make_benchmark_table, timeit
+
+N_ROWS = 20_000
+
+
+def run() -> None:
+    for row_bytes in (32, 64, 128, 256):
+        t = make_benchmark_table(row_bytes=row_bytes, col_bytes=4, n_rows=N_ROWS)
+        eng = fresh_engine()
+        cs = ops.make_colstore(t, list(t.schema.names))
+        geom = TableGeometry.from_schema(t.schema, ["A1", "A3"], N_ROWS)
+        ratio = bytes_moved(geom)["row_wise"] / max(bytes_moved(geom)["rme"], 1)
+
+        us = timeit(lambda: ops.q3_select_aggregate(eng, t, "A2", "A4", -800),
+                    iters=3)
+        emit(f"fig11/q3_r{row_bytes:03d}_rme", us, f"bytes_ratio={ratio:.1f}")
+        us = timeit(lambda: ops.q3_select_aggregate(eng, t, "A2", "A4", -800,
+                                                    path="row", colstore=cs), iters=3)
+        emit(f"fig11/q3_r{row_bytes:03d}_row", us, "")
+
+        us = timeit(lambda: ops.q2_select_project(eng, t, "A1", "A3", 100),
+                    iters=3)
+        emit(f"fig11/q2_r{row_bytes:03d}_rme", us, "")
+        us = timeit(lambda: ops.q2_select_project(eng, t, "A1", "A3", 100,
+                                                  path="row", colstore=cs), iters=3)
+        emit(f"fig11/q2_r{row_bytes:03d}_row", us, "")
+
+        us = timeit(lambda: ops.q4_groupby_avg(eng, t, "A1", "A3", "A2", -800, 64),
+                    iters=3)
+        emit(f"fig11/q4_r{row_bytes:03d}_rme", us, "")
+        us = timeit(lambda: ops.q4_groupby_avg(eng, t, "A1", "A3", "A2", -800, 64,
+                                               path="row", colstore=cs), iters=3)
+        emit(f"fig11/q4_r{row_bytes:03d}_row", us, "")

@@ -1,0 +1,43 @@
+"""Fig. 12: Q5 hash join — RME projects only {key, payload} from both sides.
+
+Matches the paper's setup: primary-key build side, ~50% of probe rows match,
+CPU does the join itself (the RME only optimizes data movement).
+"""
+
+import numpy as np
+
+from repro.core import RelationalTable, TableGeometry, benchmark_schema, bytes_moved
+from repro.core import operators as ops
+
+from .common import emit, fresh_engine, timeit
+
+N_S, N_R = 20_000, 4_096
+
+
+def make_tables(row_bytes: int):
+    rng = np.random.default_rng(0)
+    schema = benchmark_schema(row_bytes, 4)
+    s_cols = {c.name: rng.integers(-1000, 1000, N_S).astype(np.int32)
+              for c in schema.columns}
+    s_cols["A2"] = rng.integers(0, 2 * N_R, N_S).astype(np.int32)  # ~50% match
+    r_cols = {c.name: rng.integers(-1000, 1000, N_R).astype(np.int32)
+              for c in schema.columns}
+    r_cols["A2"] = np.arange(N_R, dtype=np.int32)  # primary key
+    return (RelationalTable.from_columns(schema, s_cols),
+            RelationalTable.from_columns(schema, r_cols))
+
+
+def run() -> None:
+    for row_bytes in (32, 64, 128, 256):
+        s, r = make_tables(row_bytes)
+        eng = fresh_engine()
+        scs = ops.make_colstore(s, ["A1", "A2"])
+        rcs = ops.make_colstore(r, ["A2", "A3"])
+        g = TableGeometry.from_schema(s.schema, ["A1", "A2"], N_S)
+        ratio = bytes_moved(g)["row_wise"] / max(bytes_moved(g)["rme"], 1)
+        us = timeit(lambda: ops.q5_hash_join(eng, s, r).matched, iters=3)
+        emit(f"fig12/r{row_bytes:03d}_rme", us, f"bytes_ratio={ratio:.1f}")
+        us = timeit(lambda: ops.q5_hash_join(eng, s, r, path="row",
+                                             s_colstore=scs, r_colstore=rcs
+                                             ).matched, iters=3)
+        emit(f"fig12/r{row_bytes:03d}_row", us, "")

@@ -1,0 +1,34 @@
+"""Fig. 9: projectivity sweep 1..11 columns (of 16) — the paper's Figure 1
+economics made concrete: row-wise cost is flat (always ships everything),
+columnar cost grows with tuple reconstruction, RME tracks the useful bytes.
+"""
+
+import jax.numpy as jnp
+
+from repro.core import TableGeometry, bytes_moved
+from repro.core import operators as ops
+
+from .common import emit, fresh_engine, make_benchmark_table, timeit
+
+N_ROWS = 20_000
+
+
+def run() -> None:
+    t = make_benchmark_table(n_rows=N_ROWS)
+    for k in range(1, 12):
+        cols = tuple(f"A{i + 1}" for i in range(k))
+        geom = TableGeometry.from_schema(t.schema, cols, N_ROWS)
+        eng = fresh_engine()
+        cs = ops.make_colstore(t, cols)
+        moved = bytes_moved(geom)
+        us_rme = timeit(lambda: (eng.reset(),
+                                 ops.q1_project(eng, t, cols))[1], iters=3)
+        us_row = timeit(lambda: ops.q1_project(eng, t, cols, path="row",
+                                               colstore=cs), iters=3)
+        us_col = timeit(lambda: ops.q1_project(eng, t, cols, path="col",
+                                               colstore=cs), iters=3)
+        d = (f"k={k},rme_bytes={moved['rme']},row_bytes={moved['row_wise']},"
+             f"col_bytes={moved['columnar']}")
+        emit(f"fig9/k{k:02d}_rme", us_rme, d)
+        emit(f"fig9/k{k:02d}_direct_row", us_row, d)
+        emit(f"fig9/k{k:02d}_direct_col", us_col, d)

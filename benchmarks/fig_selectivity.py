@@ -1,0 +1,42 @@
+"""Beyond-paper figure: in-engine selection compaction vs selectivity.
+
+The paper's §8 names selection as the next operator to push into hardware;
+`rme_select.select_compact` implements it (block compaction + fill counts).
+This benchmark sweeps predicate selectivity and reports the bytes a consumer
+receives per path — the compaction payoff the mask-based Q2 path cannot
+give.
+"""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import TableGeometry
+from repro.kernels.rme_select import densify, select_compact
+
+from .common import emit, make_benchmark_table, timeit
+
+N_ROWS = 20_000
+
+
+def run() -> None:
+    t = make_benchmark_table(n_rows=N_ROWS, seed=3)
+    geom = TableGeometry.from_schema(t.schema, ["A1", "A9"], N_ROWS)
+    words = jnp.asarray(t.words())
+    out_bytes_row = geom.out_bytes_per_row
+    for pct, k in ((90, -800), (50, 0), (10, 800), (1, 980)):  # A3 ∈ ±1000
+        blocks, counts = select_compact(
+            words, geom, pred_word=2, pred_op="gt", pred_k=k, block_rows=512
+        )
+        n_sel = int(counts.sum())
+        us = timeit(lambda: select_compact(
+            words, geom, pred_word=2, pred_op="gt", pred_k=k, block_rows=512
+        )[1], iters=3)
+        shipped = n_sel * out_bytes_row
+        masked = N_ROWS * out_bytes_row  # what the mask-based Q2 path ships
+        emit(
+            f"fig_sel/sel{pct:02d}pct", us,
+            f"rows={n_sel},compact_bytes={shipped},masked_bytes={masked},"
+            f"saving={masked / max(shipped, 1):.1f}x",
+        )
+        _ = densify(blocks, counts, total=max(n_sel, 1))

@@ -1,0 +1,50 @@
+"""LM substrate benchmark: train-step and decode-step wall time per arch
+(reduced configs — CPU-runnable, exercising the real framework code paths).
+"""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_smoke_config
+from repro.models import build_model
+from repro.train import AdamWConfig, make_train_step
+from repro.train.step import init_train_state
+
+from .common import emit, timeit
+
+B, S = 4, 128
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    for arch in ARCH_NAMES:
+        cfg = get_smoke_config(arch)
+        model = build_model(cfg)
+        state = init_train_state(model, jax.random.PRNGKey(0))
+        batch = {"labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+        if cfg.is_encdec:
+            batch["enc_embeds"] = jnp.asarray(
+                rng.normal(0, .5, (B, S // cfg.enc_subsample, cfg.d_model)),
+                jnp.float32)
+            batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+        elif cfg.embed_inputs:
+            batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+        else:
+            batch["embeds"] = jnp.asarray(rng.normal(0, .5, (B, S, cfg.d_model)),
+                                          jnp.float32)
+        step = jax.jit(make_train_step(model, AdamWConfig()))
+        us = timeit(lambda: step(state, batch)[1]["loss"], iters=3)
+        emit(f"lm/{arch}_train_step", us, f"tok_per_s={B * S / (us / 1e6):.0f}")
+
+        if cfg.is_encdec or cfg.embed_inputs:
+            pre = {k: v for k, v in batch.items() if k != "labels"}
+            logits, cache = jax.jit(lambda p, b: model.prefill(p, b, S + 16))(
+                state["params"], pre)
+            dstep = jax.jit(model.decode_step)
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            us = timeit(lambda: dstep(state["params"], cache, tok,
+                                      jnp.asarray(S, jnp.int32))[0], iters=5)
+            emit(f"lm/{arch}_decode_step", us,
+                 f"tok_per_s={B / (us / 1e6):.0f}")

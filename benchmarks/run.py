@@ -1,0 +1,53 @@
+"""Benchmark driver: one module per paper table/figure + the LM step bench.
+
+Prints ``name,us_per_call,derived`` CSV rows (and a trailing summary), the
+format consumed by EXPERIMENTS.md.  ``python -m benchmarks.run [pattern]``
+runs the subset whose module name contains ``pattern``.
+"""
+
+import sys
+import time
+
+from . import (
+    fig6_offset_revisions,
+    fig7_q1_colwidth,
+    fig9_projectivity,
+    fig10_queries_colsize,
+    fig11_queries_rowsize,
+    fig12_join,
+    fig13_scaling,
+    fig_selectivity,
+    table2_vmem_budget,
+    lm_step,
+)
+from .common import flush_rows
+
+MODULES = [
+    fig6_offset_revisions,
+    fig7_q1_colwidth,
+    fig9_projectivity,
+    fig10_queries_colsize,
+    fig11_queries_rowsize,
+    fig12_join,
+    fig13_scaling,
+    fig_selectivity,
+    table2_vmem_budget,
+    lm_step,
+]
+
+
+def main() -> None:
+    pattern = sys.argv[1] if len(sys.argv) > 1 else ""
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    total = 0
+    for mod in MODULES:
+        if pattern and pattern not in mod.__name__:
+            continue
+        mod.run()
+        total += len(flush_rows())
+    print(f"# {total} rows in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Checkpointing: atomic, manifest-driven, reshard-on-restore."""
+
+from .checkpoint import CheckpointManager, restore_checkpoint, save_checkpoint
+
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint"]

@@ -1,0 +1,18 @@
+"""Architecture configs: one module per assigned architecture + the paper's own.
+
+``get_config(name)`` returns the full-size config; ``get_smoke_config(name)``
+returns the reduced same-family config used by the CPU smoke tests.  The
+``SHAPES`` registry defines the four assigned input-shape cells and the
+per-family skip rules (DESIGN.md §Shape-cell skips).
+"""
+
+from .base import (  # noqa: F401
+    ArchConfig,
+    ShapeSpec,
+    SHAPES,
+    ARCH_NAMES,
+    get_config,
+    get_smoke_config,
+    cell_status,
+    iter_cells,
+)

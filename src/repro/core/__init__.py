@@ -1,0 +1,28 @@
+"""Relational Memory core: the paper's contribution as a composable JAX module.
+
+Layers (bottom-up):
+  schema      — table layouts + RME geometry (configuration port, Table 1)
+  descriptor  — Requestor Eq. (1)-(6) + byte-exact software fetch model
+  table       — row-major MVCC row store (the single source of truth)
+  ephemeral   — ephemeral variables (lazy column-group views)
+  engine      — the RME: epoch-validated reorg cache + revision datapaths
+  operators   — Q0-Q5 over interchangeable rme/row/col access paths
+  distributed — shard_map row-bank parallel operators for the cluster meshes
+  compression — dictionary + delta/FOR codecs (paper §4)
+"""
+
+from .schema import WORD, Column, TableGeometry, TableSchema, benchmark_schema, paper_schema
+from .table import TS_INF, RelationalTable, columnar_copy
+from .descriptor import BUS_WIDTH, Descriptor, bytes_moved, descriptor_arrays, descriptors, fetch_model
+from .ephemeral import EphemeralView
+from .engine import EngineStats, RelationalMemoryEngine, ReorgCache
+from . import compression, distributed, operators, planner
+
+__all__ = [
+    "BUS_WIDTH", "WORD", "TS_INF",
+    "Column", "TableSchema", "TableGeometry", "benchmark_schema", "paper_schema",
+    "RelationalTable", "columnar_copy",
+    "Descriptor", "descriptors", "descriptor_arrays", "fetch_model", "bytes_moved",
+    "EphemeralView", "EngineStats", "RelationalMemoryEngine", "ReorgCache",
+    "compression", "distributed", "operators", "planner",
+]

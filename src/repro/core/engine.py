@@ -1,0 +1,215 @@
+"""The Relational Memory Engine (RME) — host-side orchestration.
+
+This module is the software incarnation of the paper's Fig. 5 datapath:
+
+* ``register`` plays the **Configuration Port**: it writes the table geometry
+  (row size R, row count N, enabled columns Q with widths/offsets, frame F)
+  and returns an :class:`~repro.core.ephemeral.EphemeralView` handle.
+* The **Reorganization Buffer** (data SPM + metadata SPM) becomes
+  :class:`ReorgCache`: reorganized column groups keyed by geometry, validated
+  by an *epoch*.  The paper invalidates the whole SPM in one cycle by bumping
+  the RME epoch; we do exactly that — ``reset()`` is O(1), it never walks or
+  frees entries eagerly.
+* **Hot vs cold** accesses (paper Fig. 6) map to cache hit vs kernel launch.
+  The engine counts both, plus exact bytes pulled from the row store, so the
+  benchmarks report the same cache-efficiency story as the paper's PMU plots.
+
+The engine's compute path is revision-selectable (``bsl``/``pck``/``mlp``
+Pallas kernels, or the ``xla`` fused-gather path used when lowering for
+non-TPU targets), mirroring the paper's §5.2 hardware revisions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as K
+from repro.kernels.rme_project import vmem_footprint_bytes
+
+from .descriptor import bytes_moved
+from .ephemeral import EphemeralView
+from .schema import TableGeometry
+from .table import RelationalTable
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Counters surfaced to the benchmarks (the 'PMU' of the software RME)."""
+
+    hot_hits: int = 0
+    cold_misses: int = 0
+    rows_projected: int = 0
+    bytes_from_dram: int = 0  # bus-beat-accurate bytes the engine pulled
+    bytes_to_cpu: int = 0  # packed bytes shipped up the hierarchy
+
+    def reset(self) -> None:
+        self.hot_hits = 0
+        self.cold_misses = 0
+        self.rows_projected = 0
+        self.bytes_from_dram = 0
+        self.bytes_to_cpu = 0
+
+
+class ReorgCache:
+    """Epoch-validated cache of reorganized views (the two SPMs of Fig. 5).
+
+    An entry is valid iff its stored epoch equals the cache's current epoch —
+    the paper's single-cycle invalidation. Entries also carry the source table
+    version, so any OLTP mutation (append/update/delete) invalidates affected
+    views without touching unrelated tables.
+    """
+
+    def __init__(self, capacity_bytes: int = 2 << 20):  # paper: 2 MB data SPM
+        self.capacity_bytes = capacity_bytes
+        self.epoch = 0
+        self._entries: dict[tuple, tuple[int, int, jax.Array]] = {}
+        self._bytes = 0
+
+    def reset(self) -> None:
+        """Single-cycle SPM invalidation: bump the epoch; entries expire lazily."""
+        self.epoch += 1
+
+    def get(self, key: tuple, version: int) -> jax.Array | None:
+        hit = self._entries.get(key)
+        if hit is None:
+            return None
+        epoch, ver, arr = hit
+        if epoch != self.epoch or ver != version:
+            del self._entries[key]
+            self._bytes -= arr.size * arr.dtype.itemsize
+            return None
+        return arr
+
+    def put(self, key: tuple, version: int, arr: jax.Array) -> None:
+        nbytes = arr.size * arr.dtype.itemsize
+        if nbytes > self.capacity_bytes:
+            return  # larger than the SPM: streamed, never cached (paper §6 scaling)
+        # evict stale-epoch entries first, then FIFO until it fits
+        for k in [k for k, (e, _, _) in self._entries.items() if e != self.epoch]:
+            _, _, a = self._entries.pop(k)
+            self._bytes -= a.size * a.dtype.itemsize
+        while self._bytes + nbytes > self.capacity_bytes and self._entries:
+            _, (_, _, a) = self._entries.popitem()
+            self._bytes -= a.size * a.dtype.itemsize
+        self._entries[key] = (self.epoch, version, arr)
+        self._bytes += nbytes
+
+    @property
+    def occupancy_bytes(self) -> int:
+        return self._bytes
+
+
+class RelationalMemoryEngine:
+    """Host-side RME: registers ephemeral views and materializes them on access.
+
+    ``revision`` selects the datapath (paper §5.2): ``"bsl"``, ``"pck"``,
+    ``"mlp"`` (Pallas kernels, validated in interpret mode on CPU), or
+    ``"xla"`` (fused gather — the path that lowers for CPU/dry-run targets).
+    """
+
+    def __init__(
+        self,
+        revision: str = "mlp",
+        block_rows: int = K.DEFAULT_BLOCK_ROWS,
+        cache_bytes: int = 2 << 20,
+        interpret: bool = True,
+    ):
+        if revision not in K.REVISIONS:
+            raise ValueError(f"unknown revision {revision!r}; want one of {K.REVISIONS}")
+        self.revision = revision
+        self.block_rows = block_rows
+        self.interpret = interpret
+        self.cache = ReorgCache(cache_bytes)
+        self.stats = EngineStats()
+
+    # ---------------------------------------------------------------- config
+    def register(
+        self,
+        table: RelationalTable,
+        columns: Sequence[str],
+        snapshot_ts: int | None = None,
+        frame: int = 0,
+    ) -> EphemeralView:
+        """Configuration-port write: define a column-group view over ``table``.
+
+        Nothing is materialized here (ephemeral variables "are never
+        instantiated in the main memory"); the returned view triggers the
+        engine on first access.
+        """
+        geom = TableGeometry.from_schema(
+            table.schema, columns, row_count=table.row_count, frame=frame
+        )
+        return EphemeralView(self, table, tuple(columns), geom, snapshot_ts)
+
+    def reset(self) -> None:
+        """The configuration port's software reset SW (Table 1)."""
+        self.cache.reset()
+
+    # --------------------------------------------------------------- engine
+    def _key(self, table: RelationalTable, geom: TableGeometry) -> tuple:
+        return (id(table), geom.cache_key(), self.revision)
+
+    def materialize(self, view: EphemeralView) -> jax.Array:
+        """Assemble the packed column group for ``view`` (cold) or serve it hot."""
+        table, geom = view.table, view.geometry
+        key = self._key(table, geom)
+        hot = self.cache.get(key, table.version)
+        if hot is not None:
+            self.stats.hot_hits += 1
+            return hot
+        self.stats.cold_misses += 1
+        words = jnp.asarray(table.words())
+        packed = K.project_any(
+            words, geom, revision=self.revision, block_rows=self.block_rows,
+            interpret=self.interpret,
+        )
+        moved = bytes_moved(geom)
+        self.stats.rows_projected += geom.row_count
+        self.stats.bytes_from_dram += moved["rme"]
+        self.stats.bytes_to_cpu += moved["columnar"]
+        self.cache.put(key, table.version, packed)
+        return packed
+
+    def aggregate(
+        self,
+        table: RelationalTable,
+        agg_col: str,
+        pred_col: str | None = None,
+        pred_op: str = "none",
+        pred_k=0,
+        snapshot_ts: int | None = None,
+    ) -> tuple[float, float]:
+        """Fused near-memory ``SELECT SUM(agg), COUNT(*) WHERE pred`` (Q0/Q3).
+
+        Only a 2-float scalar leaves the engine; the MVCC snapshot test is
+        fused when a snapshot time is given.
+        """
+        schema = table.schema
+        agg_word = schema.word_offset(agg_col)
+        agg_dtype = schema.column(agg_col).dtype
+        if pred_col is None:
+            pred_word, pred_dtype = agg_word, agg_dtype
+        else:
+            pred_word = schema.word_offset(pred_col)
+            pred_dtype = schema.column(pred_col).dtype
+        ts_word = schema.row_words if snapshot_ts is not None else -1
+        ts = table.now() if snapshot_ts is None else snapshot_ts
+        out = K.aggregate(
+            jnp.asarray(table.words()), agg_word=agg_word, agg_dtype=agg_dtype,
+            pred_word=pred_word, pred_dtype=pred_dtype, pred_op=pred_op,
+            pred_k=pred_k, ts=ts, ts_word=ts_word,
+            block_rows=self.block_rows, interpret=self.interpret,
+        )
+        self.stats.cold_misses += 1
+        self.stats.rows_projected += table.row_count
+        self.stats.bytes_to_cpu += 8
+        return float(out[0]), float(out[1])
+
+    def vmem_budget_bytes(self, geom: TableGeometry) -> int:
+        """The 'area report' analogue: VMEM working set of one engine step."""
+        return vmem_footprint_bytes(geom, self.block_rows, self.revision)

@@ -1,0 +1,109 @@
+"""Ephemeral variables — the paper's software/hardware interface (§3).
+
+An ephemeral variable "does not correspond to a real main memory location";
+accessing it sets the RME in motion.  In JAX the natural translation is a
+*lazy view object*: registration captures the geometry (the configuration-port
+write), and the first data access materializes the packed column group through
+the engine — hot out of the reorganization cache, cold through the projection
+kernel.  The view is never a copy the user must invalidate: any OLTP mutation
+of the base table bumps ``table.version`` and silently turns future accesses
+cold, exactly like the paper's epoch-invalidated SPM.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .schema import TableGeometry
+from .table import RelationalTable, TS_INF
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .engine import RelationalMemoryEngine
+
+
+class EphemeralView:
+    """A registered column-group view; materialized on access, never stored.
+
+    Supports the accesses the paper's C listings perform on ephemeral
+    variables: whole-group reads (``packed()``), per-column reads
+    (``column(name)`` — decoded to the column dtype), and row slicing
+    (``view[i:j]``), all snapshot-consistent when a snapshot time was given.
+    """
+
+    def __init__(
+        self,
+        engine: "RelationalMemoryEngine",
+        table: RelationalTable,
+        columns: tuple[str, ...],
+        geometry: TableGeometry,
+        snapshot_ts: int | None = None,
+    ):
+        self.engine = engine
+        self.table = table
+        self.columns = columns
+        self.geometry = geometry
+        self.snapshot_ts = snapshot_ts
+        # packed layout follows physical column order (the RME walks rows
+        # front-to-back); map user order -> packed word slices once.
+        ordered = sorted(columns, key=table.schema.byte_offset)
+        self._packed_slice: dict[str, tuple[int, int]] = {}
+        acc = 0
+        for name in ordered:
+            w = table.schema.column(name).words
+            self._packed_slice[name] = (acc, w)
+            acc += w
+
+    # ------------------------------------------------------------- accesses
+    def packed(self) -> jax.Array:
+        """The packed (N, out_words) int32 view — what the CPU cache sees."""
+        return self.engine.materialize(self)
+
+    def valid_mask(self) -> jax.Array:
+        """MVCC validity of each physical row at the view's snapshot time."""
+        ts = self.table.now() if self.snapshot_ts is None else self.snapshot_ts
+        words = jnp.asarray(self.table.words())
+        begin = words[:, self.table.schema.row_words]
+        end = words[:, self.table.schema.row_words + 1]
+        return (begin <= ts) & (ts < end)
+
+    def column(self, name: str) -> jax.Array:
+        """One projected column, decoded to its schema dtype (live rows only)."""
+        if name not in self._packed_slice:
+            raise KeyError(f"{name!r} is not part of this ephemeral view {self.columns}")
+        packed = self.packed()
+        off, w = self._packed_slice[name]
+        col = self.table.schema.column(name)
+        raw = packed[:, off : off + w]
+        mask = np.asarray(self.valid_mask())
+        live = np.asarray(raw)[mask]
+        if col.dtype == "char":
+            return live.view(np.uint8).reshape(-1, col.width)
+        if col.dtype == "int32":
+            return jnp.asarray(live.reshape(-1))
+        if col.dtype == "uint32":
+            return jnp.asarray(live.reshape(-1).view(np.uint32))
+        if col.dtype == "float32":
+            return jnp.asarray(live.reshape(-1).view(np.float32))
+        # 8-byte types occupy two words little-endian
+        return jnp.asarray(live.reshape(-1, 2).view(col.np_dtype).reshape(-1))
+
+    def column_words(self, name: str) -> tuple[int, int]:
+        """(word offset, word width) of ``name`` inside the packed view."""
+        return self._packed_slice[name]
+
+    def __getitem__(self, idx) -> jax.Array:
+        return self.packed()[idx]
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.geometry.row_count, self.geometry.out_words_per_row)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (
+            f"EphemeralView(cols={self.columns}, rows={self.geometry.row_count},"
+            f" words/row={self.geometry.out_words_per_row}, ts={self.snapshot_ts})"
+        )

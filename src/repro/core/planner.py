@@ -1,0 +1,102 @@
+"""Per-query execution-strategy selection (paper §4, "Indexes & Execution
+Strategies"): "the query optimizer can decide to execute one query with
+indexes and another query with columns, alternating between a row-at-a-time
+and column-at-a-time execution strategy depending on what is the best fit."
+
+The planner costs each access path in *bytes through the hierarchy* — the
+unit the whole system optimizes — and picks the cheapest:
+
+  row   : N · R                      (full rows; free if the query touches
+                                      ~all columns anyway)
+  rme   : Σ_j beats(j) · B_w         (bus-beat-exact Eq.(3) bursts; ~packed
+                                      bytes + ≤1 beat/(row,col) slack)
+  hot   : N · Σ C_j                  (reorganization-cache hit: packed bytes
+                                      only — checked against live cache
+                                      state, the paper's Fig. 6 hot curve)
+  fused : O(1)                       (aggregations the engine answers with a
+                                      scalar — Q0/Q3-shaped queries)
+
+Selectivity-aware: a fused aggregate is preferred whenever legal; a hot view
+beats everything that must touch DRAM; RME vs row flips exactly at the
+projectivity crossover of the paper's Figure 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from .descriptor import bytes_moved
+from .engine import RelationalMemoryEngine
+from .schema import TableGeometry
+from .table import RelationalTable
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    path: str  # "fused" | "hot" | "rme" | "row"
+    est_bytes: int
+    alternatives: dict[str, int]
+
+    def __str__(self) -> str:
+        alts = ", ".join(f"{k}={v:,}" for k, v in self.alternatives.items())
+        return f"Plan({self.path}, est {self.est_bytes:,} B; {alts})"
+
+
+def plan_query(
+    engine: RelationalMemoryEngine,
+    table: RelationalTable,
+    columns: Sequence[str],
+    aggregate_only: bool = False,
+) -> Plan:
+    """Choose the access path for a query touching ``columns``."""
+    if len(columns) > 11:
+        # beyond the configuration port's Q cap (paper Table 1: max 11
+        # enabled columns) the engine cannot express the view — and at that
+        # projectivity full rows are the right answer anyway (Figure 1)
+        n_bytes = table.row_count * table.schema.row_bytes
+        return Plan(path="row", est_bytes=n_bytes, alternatives={"row": n_bytes})
+    geom = TableGeometry.from_schema(table.schema, columns, table.row_count)
+    moved = bytes_moved(geom)
+    costs = {
+        "row": moved["row_wise"],
+        "rme": moved["rme"],
+        "hot": moved["columnar"],
+    }
+    # hot is only available if the reorganization cache holds a live entry
+    key = (id(table), geom.cache_key(), engine.revision)
+    hot_entry = engine.cache.get(key, table.version)
+    if hot_entry is None:
+        costs.pop("hot")
+    if aggregate_only and len(columns) <= 2:
+        costs["fused"] = 8  # the engine returns [sum, count]
+    path = min(costs, key=costs.get)
+    return Plan(path=path, est_bytes=costs[path], alternatives=costs)
+
+
+def execute_sum(
+    engine: RelationalMemoryEngine,
+    table: RelationalTable,
+    agg_col: str,
+    pred_col: str | None = None,
+    pred_op: str = "none",
+    pred_k=0,
+) -> tuple[float, Plan]:
+    """Plan + execute a Q0/Q3-shaped query through the chosen path."""
+    import jax.numpy as jnp
+
+    cols = [agg_col] + ([pred_col] if pred_col else [])
+    plan = plan_query(engine, table, cols, aggregate_only=True)
+    if plan.path == "fused":
+        s, _ = engine.aggregate(table, agg_col, pred_col, pred_op, pred_k)
+        return s, plan
+    view = engine.register(table, tuple(cols))
+    packed = view.packed()
+    off_a, _ = view.column_words(agg_col)
+    vals = packed[:, off_a].astype(jnp.float32)
+    if pred_col is not None and pred_op != "none":
+        off_p, _ = view.column_words(pred_col)
+        p = packed[:, off_p]
+        mask = p > pred_k if pred_op == "gt" else p < pred_k
+        vals = jnp.where(mask, vals, 0.0)
+    return float(jnp.sum(vals)), plan

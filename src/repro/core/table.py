@@ -1,0 +1,187 @@
+"""Row-major in-memory relational table with MVCC timestamps (paper §4).
+
+The base data is *always* a row store ("the source data tables are always stored
+in physical memory according to the same format — i.e., as a row-store").  Host
+numpy plays the role of DRAM: appends and in-place updates are cheap row-wise
+operations.  Analytics never touch this buffer directly — they go through
+ephemeral column-group views that the RME materializes on the fly (ephemeral.py).
+
+MVCC (paper §4): every row carries two hidden timestamp fields.  ``ts_begin`` is
+set at insertion, ``ts_end`` marks deletion/replacement (``TS_INF`` while live).
+A snapshot at time ``t`` sees rows with ``ts_begin <= t < ts_end`` — snapshot
+isolation, exactly the scheme the paper sketches.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from .schema import WORD, Column, TableSchema
+
+TS_INF = np.iinfo(np.int32).max
+
+_MVCC_COLS = (Column("__ts_begin", "int32"), Column("__ts_end", "int32"))
+
+
+def _storage_schema(schema: TableSchema) -> TableSchema:
+    return TableSchema(schema.columns + _MVCC_COLS)
+
+
+def _encode_column(col: Column, values: np.ndarray, n: int) -> np.ndarray:
+    """Encode ``values`` for ``col`` into an (n, col.words) int32 word array."""
+    if col.dtype == "char":
+        raw = np.zeros((n, col.width), dtype=np.uint8)
+        vals = np.asarray(values, dtype=np.dtype((np.bytes_, col.width)))
+        raw[:] = vals.view(np.uint8).reshape(n, col.width)
+        return raw.view(np.int32).reshape(n, col.words)
+    arr = np.ascontiguousarray(np.asarray(values, dtype=col.np_dtype))
+    return arr.view(np.int32).reshape(n, col.words)
+
+
+def _decode_column(col: Column, words: np.ndarray) -> np.ndarray:
+    """Decode an (n, col.words) int32 word array back to ``col``'s dtype."""
+    n = words.shape[0]
+    raw = np.ascontiguousarray(words, dtype=np.int32)
+    if col.dtype == "char":
+        return raw.view(np.uint8).reshape(n, col.width).view(
+            np.dtype((np.bytes_, col.width))
+        ).reshape(n)
+    return raw.view(col.np_dtype).reshape(n)
+
+
+class RelationalTable:
+    """Append-friendly row store over int32 words (the 'DRAM' of the system).
+
+    Storage is ``(capacity, row_words)`` int32; the user-visible schema is
+    extended with the two MVCC word columns.  ``version`` increments on every
+    mutation — the engine uses it (plus its own epoch) to invalidate cached
+    reorganized views, mirroring the RME's single-cycle SPM invalidation.
+    """
+
+    def __init__(self, schema: TableSchema, capacity: int = 1024):
+        self.schema = schema
+        self.storage_schema = _storage_schema(schema)
+        self._words = np.zeros(
+            (max(capacity, 16), self.storage_schema.row_words), dtype=np.int32
+        )
+        self.row_count = 0
+        self.version = 0
+        self._clock = 0
+
+    # ------------------------------------------------------------------ time
+    def now(self) -> int:
+        return self._clock
+
+    def tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    # --------------------------------------------------------------- storage
+    @property
+    def row_words(self) -> int:
+        return self.storage_schema.row_words
+
+    @property
+    def row_bytes(self) -> int:
+        return self.storage_schema.row_bytes
+
+    def words(self) -> np.ndarray:
+        """The live row-major word buffer (view; do not mutate)."""
+        return self._words[: self.row_count]
+
+    def nbytes(self) -> int:
+        return self.row_count * self.row_bytes
+
+    def _grow(self, need: int) -> None:
+        cap = self._words.shape[0]
+        if need <= cap:
+            return
+        new_cap = max(need, cap * 2)
+        grown = np.zeros((new_cap, self.row_words), dtype=np.int32)
+        grown[: self.row_count] = self._words[: self.row_count]
+        self._words = grown
+
+    # ------------------------------------------------------------------ OLTP
+    def append(self, columns: Mapping[str, Sequence | np.ndarray]) -> np.ndarray:
+        """Append new rows (insert); returns the new physical row indices."""
+        missing = set(self.schema.names) - set(columns)
+        if missing:
+            raise ValueError(f"missing columns {sorted(missing)}")
+        n = len(next(iter(columns.values())))
+        ts = self.tick()
+        self._grow(self.row_count + n)
+        at = self.row_count
+        woff = 0
+        for col in self.schema.columns:
+            enc = _encode_column(col, np.asarray(columns[col.name]), n)
+            self._words[at : at + n, woff : woff + col.words] = enc
+            woff += col.words
+        self._words[at : at + n, woff] = ts  # __ts_begin
+        self._words[at : at + n, woff + 1] = TS_INF  # __ts_end
+        self.row_count += n
+        self.version += 1
+        return np.arange(at, at + n)
+
+    def delete(self, rows: np.ndarray) -> None:
+        """MVCC delete: end the validity of the given physical rows."""
+        ts = self.tick()
+        end_col = self.schema.row_words + 1
+        live = self._words[rows, end_col] == TS_INF
+        self._words[np.asarray(rows)[live], end_col] = ts
+        self.version += 1
+
+    def update(self, rows: np.ndarray, values: Mapping[str, np.ndarray]) -> np.ndarray:
+        """MVCC update: end old versions, append replacements (paper §4)."""
+        rows = np.asarray(rows)
+        current = {
+            name: self.read_column_at(name, rows) for name in self.schema.names
+        }
+        current.update({k: np.asarray(v) for k, v in values.items()})
+        self.delete(rows)
+        return self.append(current)
+
+    # ------------------------------------------------------------------ OLAP
+    def snapshot_mask(self, ts: int | None = None) -> np.ndarray:
+        """Row-validity mask at snapshot time ``ts`` (defaults to now)."""
+        ts = self._clock if ts is None else ts
+        begin = self._words[: self.row_count, self.schema.row_words]
+        end = self._words[: self.row_count, self.schema.row_words + 1]
+        return (begin <= ts) & (ts < end)
+
+    def read_column_at(self, name: str, rows: np.ndarray) -> np.ndarray:
+        col = self.schema.column(name)
+        woff = self.schema.word_offset(name)
+        return _decode_column(col, self._words[rows, woff : woff + col.words])
+
+    def read_column(self, name: str, ts: int | None = None) -> np.ndarray:
+        """Direct row-wise read of one column (the slow path the paper beats)."""
+        mask = self.snapshot_mask(ts)
+        return self.read_column_at(name, np.nonzero(mask)[0])
+
+    def to_rows(self, ts: int | None = None) -> dict[str, np.ndarray]:
+        mask = self.snapshot_mask(ts)
+        idx = np.nonzero(mask)[0]
+        return {n: self.read_column_at(n, idx) for n in self.schema.names}
+
+    # ------------------------------------------------------------- factories
+    @staticmethod
+    def from_columns(
+        schema: TableSchema, columns: Mapping[str, np.ndarray]
+    ) -> "RelationalTable":
+        n = len(next(iter(columns.values())))
+        t = RelationalTable(schema, capacity=n)
+        t.append(columns)
+        return t
+
+
+def columnar_copy(table: RelationalTable, names: Sequence[str]) -> dict[str, np.ndarray]:
+    """A materialized column-store copy — the paper's 'direct columnar' baseline.
+
+    This is what adaptive-layout systems maintain (and must invalidate); the RME
+    makes it unnecessary.  Used only as a comparison point in the benchmarks.
+    """
+    mask = table.snapshot_mask()
+    idx = np.nonzero(mask)[0]
+    return {n: table.read_column_at(n, idx) for n in names}

@@ -1,0 +1,5 @@
+"""HTAP data substrate: row-major record store + ephemeral-projection batches."""
+
+from .pipeline import RecordStore, TrainPipeline, synthetic_corpus
+
+__all__ = ["RecordStore", "TrainPipeline", "synthetic_corpus"]

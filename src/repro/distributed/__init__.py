@@ -1,0 +1,10 @@
+"""Distribution substrate: logical axis rules, collectives, pipeline."""
+
+from .partitioning import (  # noqa: F401
+    axis_rules,
+    current_rules,
+    logical_spec,
+    lsc,
+    param_partition_spec,
+    set_axis_rules,
+)

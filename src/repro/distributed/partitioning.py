@@ -1,0 +1,239 @@
+"""Logical axis rules — one model definition, many meshes.
+
+Model code annotates arrays with *logical* axis names (``batch``, ``seq``,
+``heads``, ``embed``, ``mlp``, ``vocab``, ``expert``, ``kv_seq`` …).  The
+launcher installs a mapping from logical names to physical mesh axes; the same
+model then lowers unchanged for the single-pod ``(data, model)`` mesh, the
+multi-pod ``(pod, data, model)`` mesh (``pod`` folded into the batch axes),
+a pipeline mesh, or the 1-device CPU test mesh (no rules → no constraints).
+
+This is the MaxText/Flax "logical axis" pattern reduced to ~150 lines with no
+framework dependency.  Divisibility is checked per array: a 4-way GQA KV-head
+dim on a 16-way ``model`` axis silently degrades to replicated — the standard
+TP behaviour for narrow KV.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+# Default rule sets for the production meshes (DESIGN.md §5).
+SINGLE_POD_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("data",),
+    "model": ("model",),  # generic TP dim for weight matrices
+    "expert": ("model",),
+    "expert_ff": ("data",),  # per-expert hidden dim: weights-stationary FSDP
+    "heads": ("model",),
+    "kv_heads": ("model",),  # dropped per-array when not divisible
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "kv_seq": ("model",),  # decode-time KV sequence sharding (SP)
+    "fsdp": ("data",),  # weight-matrix sharding over the batch axes (ZeRO-3)
+    "zero": ("data",),  # ZeRO-1 optimizer-state axis (non-FSDP leaves)
+}
+MULTI_POD_RULES = dict(SINGLE_POD_RULES, batch=("pod", "data"), fsdp=("pod", "data"))
+
+
+def set_axis_rules(
+    rules: Mapping[str, Sequence[str]] | None,
+    mesh_shape: Mapping[str, int] | None = None,
+) -> None:
+    _state.rules = None if rules is None else {k: tuple(v) for k, v in rules.items()}
+    _state.mesh_shape = dict(mesh_shape) if mesh_shape else {}
+
+
+def current_rules() -> dict[str, tuple[str, ...]] | None:
+    return getattr(_state, "rules", None)
+
+
+def current_mesh_shape() -> dict[str, int]:
+    return getattr(_state, "mesh_shape", {}) or {}
+
+
+@contextlib.contextmanager
+def axis_rules(
+    rules: Mapping[str, Sequence[str]] | None,
+    mesh_shape: Mapping[str, int] | None = None,
+):
+    prev_r, prev_m = current_rules(), current_mesh_shape()
+    set_axis_rules(rules, mesh_shape)
+    try:
+        yield
+    finally:
+        set_axis_rules(prev_r, prev_m)
+
+
+def rules_for_mesh(mesh: Mesh) -> dict[str, tuple[str, ...]]:
+    names = set(mesh.axis_names)
+    base = MULTI_POD_RULES if "pod" in names else SINGLE_POD_RULES
+    return {k: tuple(a for a in v if a in names) for k, v in base.items()}
+
+
+def _axes_size(phys: Sequence[str]) -> int:
+    sizes = current_mesh_shape()
+    total = 1
+    for a in phys:
+        total *= sizes.get(a, 1)
+    return total
+
+
+def logical_spec(*names: str | None, shape: Sequence[int] | None = None) -> P:
+    """Translate logical axis names to a PartitionSpec under the active rules.
+
+    A mesh axis is used at most once per spec (first logical name wins):
+    e.g. a KV cache (batch, kv_heads, kv_seq, d) with both ``kv_heads`` and
+    ``kv_seq`` mapping to ``model`` shards heads when divisible and falls
+    back to sequence sharding for narrow-KV GQA — the useful behaviour in
+    both regimes, derived from one annotation.
+    """
+    rules = current_rules()
+    if rules is None:
+        return P()
+    out = []
+    used: set[str] = set()
+    for d, n in enumerate(names):
+        phys = rules.get(n) if n is not None else None
+        if phys:
+            phys = tuple(a for a in phys if a not in used)
+        if not phys:
+            out.append(None)
+            continue
+        if shape is not None and shape[d] % max(_axes_size(phys), 1) != 0:
+            out.append(None)
+            continue
+        used.update(phys)
+        out.append(phys if len(phys) > 1 else phys[0])
+    return P(*out)
+
+
+def lsc(x: jax.Array, *names: str | None) -> jax.Array:
+    """Logical ``with_sharding_constraint``; no-op when no rules are active."""
+    if current_rules() is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, logical_spec(*names, shape=x.shape))
+
+
+# --------------------------------------------------------------- parameters
+_COL_NAMES = ("wq", "w_in", "w_gate", "w_up", "w_x", "w_a", "w_branch",
+              "w_bcdt", "w_zx")
+# KV projections are deliberately NOT column-sharded (§Perf iteration 4):
+# with GQA KV narrower than the model axis, sharding k·hd columns forces an
+# all-gather of K/V activations every layer.  The matrices are small —
+# FSDP row-sharding alone holds the memory — and replicated columns mean
+# every device computes its full K/V locally: zero per-layer KV collectives.
+_KV_NAMES = ("wk", "wv")
+_ROW_NAMES = ("wo", "w_out", "w_down")
+
+
+def param_partition_spec(path: tuple[str, ...], leaf) -> P:
+    """Partition spec for a parameter leaf, derived from its tree path.
+
+    TP over ``model`` + FSDP over the batch axes (``fsdp`` rule) — the
+    MaxText-style 2D weight sharding that makes 100B+ parameter states fit
+    16 GB chips.  Naming convention of the model zoo → rule table:
+
+      token_embedding      (vocab, embed)        -> (vocab, fsdp)
+      lm_head              (embed, vocab)        -> (fsdp, vocab)
+      q/k/v/in/gate/up w   (embed, tp-dim)       -> (fsdp, model)
+      out/down w           (tp-dim, embed)       -> (model, fsdp)
+      expert tensors       (expert, in, out)     -> (expert, fsdp, None)
+      stacked unit params  (n_units, *inner)     -> (None, *inner-spec)
+      biases / norm scales / conv kernels        -> replicated
+    """
+    rules = current_rules()
+    if rules is None:
+        return P()
+    shape = tuple(leaf.shape)
+    # stacked per-unit params: strip the scan dim and recurse
+    if path and path[0] in ("units", "tail", "enc_units") and len(shape) >= 1:
+        if path[0] == "tail":  # tail layers are unstacked: no scan dim
+            inner = param_partition_spec(
+                path[1:], jax.ShapeDtypeStruct(shape, jnp.float32)
+            )
+            return inner
+        inner = param_partition_spec(
+            path[1:], jax.ShapeDtypeStruct(shape[1:], jnp.float32)
+        )
+        return P(None, *inner)
+    name = path[-1] if path else ""
+    joined = "/".join(path)
+
+    def ok(dim: int, logical: str, used: set | None = None) -> Any:
+        phys = rules.get(logical)
+        if phys and used:
+            phys = tuple(a for a in phys if a not in used)
+        if phys and shape[dim] % max(_axes_size(phys), 1) == 0:
+            if used is not None:
+                used.update(phys)
+            return phys if len(phys) > 1 else phys[0]
+        return None
+
+    if "token_embedding" in name and len(shape) == 2:
+        used: set[str] = set()
+        v = ok(0, "vocab", used)
+        return P(v, ok(1, "fsdp", used))
+    if name == "lm_head" and len(shape) == 2:
+        used = set()
+        v = ok(1, "vocab", used)
+        return P(ok(0, "fsdp", used), v)
+    if "expert" in joined and len(shape) == 3:
+        # EP over model + FSDP over data on d_model.  §Perf iteration 2
+        # tried weights-stationary sharding (FF dim over data, activations
+        # psum'd) — refuted for top-8 MoE: the dispatch buffer is k× the
+        # token bytes, so psum(buf) ≫ all-gather(weights).  The gather form
+        # with reduced grad-accum wins on both MoE archs.
+        used = set()
+        e = ok(0, "expert", used)
+        return P(e, ok(1, "fsdp", used), None)
+    # int8-quantized serving weights {"q","s"}: TP-only, never FSDP — the
+    # whole point of quantization is that the weights fit without a second
+    # sharding axis, so the decode step has no weight all-gathers at all
+    if name in ("q", "s") and len(path) >= 2:
+        wname = path[-2]
+        if name == "s" or len(shape) == 2:
+            # scale (1, out) or weight (in, out)
+            if wname in _ROW_NAMES and name == "q":
+                return P(ok(0, "model", set()), None)
+            if wname in _ROW_NAMES:  # row-weight scale: out dim is d_model
+                return P(None, None)
+            if wname in _KV_NAMES:
+                return P(None, None)
+            return P(None, ok(1, "model", set()))
+        return P(*([None] * len(shape)))
+    if len(shape) == 2:
+        base = name.split(".")[-1]
+        if any(base == c for c in _KV_NAMES):
+            return P(ok(0, "fsdp", set()), None)
+        if any(base == c or base.startswith(c) for c in _COL_NAMES):
+            used = set()
+            m = ok(1, "model", used)
+            return P(ok(0, "fsdp", used), m)
+        if any(base == r or base.startswith(r) for r in _ROW_NAMES):
+            used = set()
+            m = ok(0, "model", used)
+            return P(m, ok(1, "fsdp", used))
+    return P(*([None] * len(shape)))
+
+
+def params_partition_specs(params_shapes) -> dict:
+    """Map a params shape-pytree to partition specs via tree paths."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    specs = []
+    for kp, leaf in flat:
+        path = tuple(
+            p.key if hasattr(p, "key") else str(getattr(p, "idx", p)) for p in kp
+        )
+        specs.append(param_partition_spec(path, leaf))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named_sharding(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the Relational Memory Engine + LM hot spots.
+
+``rme_project``     — the paper's core contribution (BSL/PCK/MLP revisions)
+``rme_filter``      — fused selection + projection pushdown
+``rme_aggregate``   — fused selection + aggregation and one-hot MXU group-by
+``flash_attention`` — fused GQA attention (the LM cells' memory-term fix)
+``ops``             — jit'd public wrappers;  ``ref`` — pure-jnp oracles
+
+Submodules are imported explicitly (``from repro.kernels import ops``) to
+keep the package import acyclic with ``repro.core``.
+"""

@@ -1,0 +1,180 @@
+"""Fused GQA flash attention — Pallas TPU kernel.
+
+The §Roofline analysis shows every pure-XLA train/prefill cell is memory-
+bound: the blockwise-attention logits (B·S·H·chunk f32) round-trip through
+HBM once per KV chunk per layer.  This kernel keeps the (Bq × Bk) logit
+tile, the running max/denominator and the output accumulator in VMEM —
+attention's HBM traffic drops to the Q/K/V/O tensors themselves, moving the
+cells toward the compute roofline (§Perf iteration 6 quantifies the delta).
+
+Layout: q (BH, S, D), kv (B·KH, S, D); the BlockSpec index map shares one KV
+tile across the G query heads of its group (``bh // G``) so GQA's bandwidth
+advantage survives.  Grid = (BH, nq, nk), k-minor so the VMEM accumulator
+scratch carries across the k dimension; masking covers causality, sliding
+windows and tail padding.  MXU-aligned tiles (multiples of 128) by default.
+
+Validated in interpret mode against the pure-jnp oracle over shape / dtype /
+window / GQA sweeps (tests/test_flash_attention.py); the backward pass is
+XLA's (rematerialized blockwise) — a fused bwd kernel is future work and is
+accounted as such in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 256
+DEFAULT_BLOCK_K = 256
+MASK_VALUE = -1e30
+
+
+def _flash_kernel(
+    spec: tuple,
+    q_ref,  # (1, Bq, D)
+    k_ref,  # (1, Bk, D)
+    v_ref,  # (1, Bk, D)
+    o_ref,  # (1, Bq, D)
+    acc_ref,  # VMEM (Bq, D) f32
+    m_ref,  # VMEM (Bq, 1) f32
+    l_ref,  # VMEM (Bq, 1) f32
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    seq_len: int,
+    block_q: int,
+    block_k: int,
+    n_k: int,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # (Bq, D)
+    k = k_ref[0].astype(jnp.float32)  # (Bk, D)
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Bq, Bk)
+
+    q_pos = iq * block_q + jax.lax.iota(jnp.int32, block_q)[:, None]
+    k_pos = ik * block_k + jax.lax.iota(jnp.int32, block_k)[None, :]
+    dist = q_pos - k_pos
+    mask = (k_pos < seq_len) & (q_pos < seq_len)
+    if causal:
+        mask = mask & (dist >= 0) & (dist < window)
+    else:
+        mask = mask & (jnp.abs(dist) < window)
+    logits = jnp.where(mask, logits, MASK_VALUE)
+
+    m_prev = m_ref[...]  # (Bq, 1)
+    m_new = jnp.maximum(m_prev, logits.max(axis=-1, keepdims=True))
+    p = jnp.exp(logits - m_new)  # (Bq, Bk)
+    alpha = jnp.exp(m_prev - m_new)  # (Bq, 1)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    m_ref[...] = m_new
+    pv = jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (Bq, D)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        o_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, KH, D)
+    v: jax.Array,  # (B, S, KH, D)
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused attention; semantics match ``layers.blockwise_attention``."""
+    b, s, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    scale = d**-0.5
+    win = window if window is not None else s
+
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    pad_q = (-s) % block_q
+    pad_k = (-s) % block_k
+    s_q, s_k = s + pad_q, s + pad_k
+    qh = jnp.moveaxis(q, 2, 1).reshape(b * h, s, d)  # (BH, S, D)
+    kv_shape = (b * kh, s, d)
+    kc = jnp.moveaxis(k, 2, 1).reshape(kv_shape)
+    vc = jnp.moveaxis(v, 2, 1).reshape(kv_shape)
+    if pad_q:
+        qh = jnp.pad(qh, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kc = jnp.pad(kc, ((0, 0), (0, pad_k), (0, 0)))
+        vc = jnp.pad(vc, ((0, 0), (0, pad_k), (0, 0)))
+    n_q = s_q // block_q
+    n_k = s_k // block_k
+
+    kernel = functools.partial(
+        _flash_kernel,
+        (),
+        scale=scale, causal=causal, window=win, seq_len=s,
+        block_q=block_q, block_k=block_k, n_k=n_k,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, iq, ik: (bh, iq, 0)),
+            # one KV tile feeds all G query heads of its group (GQA-aware)
+            pl.BlockSpec((1, block_k, d), lambda bh, iq, ik, g=g: (bh // g, ik, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, iq, ik, g=g: (bh // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s_q, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kc, vc)
+    out = out[:, :s].reshape(b, h, s, d)
+    return jnp.moveaxis(out, 1, 2)  # (B, S, H, D)
+
+
+def attention_hbm_bytes(
+    b: int, s: int, h: int, kh: int, d: int, chunk: int, dtype_bytes: int = 2
+) -> dict:
+    """Modeled per-layer attention HBM traffic: fused kernel vs pure XLA.
+
+    XLA blockwise: Q/K/V/O + the f32 logits and weight tiles spilled per
+    chunk step (2 tiles of B·S·H·chunk f32 per chunk, written + read).
+    Fused kernel: Q/K/V/O only (logits live in VMEM).
+    """
+    qkvo = (2 * b * s * h * d + 2 * b * s * kh * d) * dtype_bytes
+    n_chunks = max(s // chunk, 1)
+    logits_spill = 2 * 2 * b * s * h * chunk * 4 * n_chunks
+    return {
+        "xla_blockwise": qkvo + logits_spill,
+        "fused": qkvo,
+        "savings": logits_spill,
+    }

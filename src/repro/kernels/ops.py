@@ -1,0 +1,52 @@
+"""Public jit'd entry points for the RME kernel suite.
+
+One import surface for the engine and the benchmarks; every function has a
+bit-exact (or float-tolerant) oracle in ``ref.py`` and an interpret-mode sweep
+in ``tests/test_kernels_*.py``.  ``revision`` selects the paper's hardware
+revision; ``"xla"`` is the pure-XLA production path used when the program is
+lowered for targets where the Pallas TPU kernels don't apply (CPU, dry-run).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.schema import TableGeometry
+
+from .rme_aggregate import aggregate, groupby_sum
+from .rme_filter import filter_project
+from .rme_project import (
+    DEFAULT_BLOCK_ROWS,
+    project,
+    project_xla,
+    vmem_footprint_bytes,
+)
+
+REVISIONS = ("bsl", "pck", "mlp", "xla")
+
+
+def project_any(
+    words: jax.Array,
+    geom: TableGeometry,
+    revision: str = "mlp",
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> jax.Array:
+    """Dispatch projection across revisions, including the XLA path."""
+    if revision == "xla":
+        return project_xla(words, geom)
+    return project(words, geom, revision=revision, block_rows=block_rows,
+                   interpret=interpret)
+
+
+__all__ = [
+    "REVISIONS",
+    "DEFAULT_BLOCK_ROWS",
+    "aggregate",
+    "filter_project",
+    "groupby_sum",
+    "project",
+    "project_any",
+    "project_xla",
+    "vmem_footprint_bytes",
+]

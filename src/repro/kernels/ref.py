@@ -1,0 +1,125 @@
+"""Pure-jnp oracles for every RME kernel (the correctness ground truth).
+
+All tables are row-major int32 word buffers of shape ``(N, row_words)``; the
+geometry (static) gives enabled-column word offsets/widths.  Every Pallas kernel
+in this package must match these functions bit-exactly (projection) or to float
+tolerance (aggregation) across the test sweeps.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schema import TableGeometry
+
+
+def gather_indices(geom: TableGeometry) -> np.ndarray:
+    """Word indices within a row for the packed projection, in packed order."""
+    idx = []
+    for off, w in zip(geom.col_word_offsets, geom.col_word_widths):
+        idx.extend(range(off, off + w))
+    return np.asarray(idx, dtype=np.int32)
+
+
+def project_ref(words: jax.Array, geom: TableGeometry) -> jax.Array:
+    """Packed projection: (N, row_words) -> (N, out_words)."""
+    return jnp.take(words, jnp.asarray(gather_indices(geom)), axis=1)
+
+
+def _decode(col_words: jax.Array, dtype: str) -> jax.Array:
+    if dtype == "float32":
+        return jax.lax.bitcast_convert_type(col_words, jnp.float32)
+    if dtype == "int32":
+        return col_words
+    raise ValueError(f"aggregation supports 4-byte numeric columns, got {dtype}")
+
+
+def _predicate(vals: jax.Array, op: str, k) -> jax.Array:
+    if op == "gt":
+        return vals > k
+    if op == "lt":
+        return vals < k
+    if op == "none":
+        return jnp.ones(vals.shape, dtype=bool)
+    raise ValueError(op)
+
+
+def mvcc_mask_ref(words: jax.Array, ts_begin_word: int, ts: int) -> jax.Array:
+    """Snapshot-isolation validity from the two hidden timestamp words."""
+    begin = words[:, ts_begin_word]
+    end = words[:, ts_begin_word + 1]
+    return (begin <= ts) & (ts < end)
+
+
+def aggregate_ref(
+    words: jax.Array,
+    agg_word: int,
+    agg_dtype: str,
+    pred_word: int,
+    pred_dtype: str,
+    pred_op: str,
+    pred_k,
+    valid: jax.Array | None = None,
+) -> jax.Array:
+    """SELECT SUM(a) FROM t WHERE pred(b)  — Q0 (pred_op='none') and Q3."""
+    vals = _decode(words[:, agg_word], agg_dtype).astype(jnp.float32)
+    mask = _predicate(_decode(words[:, pred_word], pred_dtype), pred_op, pred_k)
+    if valid is not None:
+        mask = mask & valid
+    return jnp.sum(jnp.where(mask, vals, 0.0))
+
+
+def filter_project_ref(
+    words: jax.Array,
+    geom: TableGeometry,
+    pred_word: int,
+    pred_dtype: str,
+    pred_op: str,
+    pred_k,
+    valid: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Selection pushdown: packed projection with failing rows zeroed + mask.
+
+    Static-shape TPU adaptation of 'only selected rows are shipped': rows that
+    fail the predicate are never written to the reorganized output (zeros), and
+    the mask lets the consumer run predicated compute.
+    """
+    packed = project_ref(words, geom)
+    mask = _predicate(_decode(words[:, pred_word], pred_dtype), pred_op, pred_k)
+    if valid is not None:
+        mask = mask & valid
+    return jnp.where(mask[:, None], packed, 0), mask
+
+
+def groupby_sum_ref(
+    words: jax.Array,
+    group_word: int,
+    agg_word: int,
+    agg_dtype: str,
+    num_groups: int,
+    pred_word: int | None = None,
+    pred_dtype: str = "int32",
+    pred_op: str = "none",
+    pred_k=0,
+    valid: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """SELECT SUM(a), COUNT(*) FROM t WHERE pred GROUP BY g — Q4 core.
+
+    Group keys are int32 taken modulo ``num_groups`` (static group domain).
+    Returns (sums[G], counts[G]).
+    """
+    g = jnp.remainder(words[:, group_word], num_groups)
+    vals = _decode(words[:, agg_word], agg_dtype).astype(jnp.float32)
+    mask = jnp.ones(g.shape, dtype=bool)
+    if pred_word is not None:
+        mask = _predicate(_decode(words[:, pred_word], pred_dtype), pred_op, pred_k)
+    if valid is not None:
+        mask = mask & valid
+    vals = jnp.where(mask, vals, 0.0)
+    cnt = mask.astype(jnp.float32)
+    sums = jax.ops.segment_sum(vals, g, num_segments=num_groups)
+    counts = jax.ops.segment_sum(cnt, g, num_segments=num_groups)
+    return sums, counts

@@ -1,0 +1,179 @@
+"""ShapeDtypeStruct stand-ins + partition specs for every dry-run cell.
+
+``input_specs`` returns weak-type-correct, shardable ShapeDtypeStructs for
+every model input of a given (arch × shape) cell — the same pattern the
+kernels' dry-run uses: nothing is ever allocated.  ``*_shardings`` translate
+the logical annotations into NamedShardings for jit's in/out_shardings.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeSpec
+from repro.distributed.partitioning import logical_spec, params_partition_specs
+from repro.models import build_model
+from repro.train.optimizer import opt_state_specs
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(arch: str, shape: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a dry-run cell.
+
+    Weak-type-correct and shardable; nothing is allocated.  For train cells
+    this is the training batch; for prefill, the request batch; for decode,
+    {tokens, pos} (the KV cache spec comes from ``cache_shapes``).
+    """
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    if sh.kind == "train":
+        return train_batch_shapes(cfg, sh)
+    if sh.kind == "prefill":
+        return prefill_batch_shapes(cfg, sh)
+    return {
+        "tokens": decode_token_shapes(cfg, sh),
+        "pos": SDS((), jnp.int32),
+    }
+
+
+# ------------------------------------------------------------------ inputs
+def train_batch_shapes(cfg: ArchConfig, sh: ShapeSpec) -> dict:
+    b, s = sh.global_batch, sh.seq_len
+    batch: dict[str, Any] = {"labels": SDS((b, s), jnp.int32)}
+    if cfg.is_encdec:
+        batch["enc_embeds"] = SDS(
+            (b, s // cfg.enc_subsample, cfg.d_model), jnp.bfloat16
+        )
+        batch["tokens"] = SDS((b, s), jnp.int32)
+    elif cfg.embed_inputs:
+        batch["tokens"] = SDS((b, s), jnp.int32)
+    else:
+        batch["embeds"] = SDS((b, s, cfg.d_model), jnp.bfloat16)
+        if cfg.mrope:
+            batch["positions"] = SDS((b, 3, s), jnp.int32)
+    return batch
+
+
+def prefill_batch_shapes(cfg: ArchConfig, sh: ShapeSpec) -> dict:
+    batch = train_batch_shapes(cfg, sh)
+    batch.pop("labels")
+    return batch
+
+
+def decode_token_shapes(cfg: ArchConfig, sh: ShapeSpec) -> Any:
+    b = sh.global_batch
+    if cfg.embed_inputs or cfg.is_encdec:
+        return SDS((b, 1), jnp.int32)
+    return SDS((b, 1, cfg.d_model), jnp.bfloat16)
+
+
+def batch_shardings(mesh: Mesh, batch_shapes) -> Any:
+    def one(x):
+        spec = logical_spec("batch", *([None] * (len(x.shape) - 1)), shape=x.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, batch_shapes)
+
+
+# ------------------------------------------------------------------ params
+def param_shapes(model, dtype: str | None = None) -> Any:
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if dtype is None:
+        return shapes
+    dt = jnp.dtype(dtype)
+    return jax.tree.map(
+        lambda l: SDS(l.shape, dt if jnp.issubdtype(l.dtype, jnp.floating) else l.dtype),
+        shapes,
+    )
+
+
+def param_shardings(mesh: Mesh, shapes) -> Any:
+    specs = params_partition_specs(shapes)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def train_state_shapes(model, cfg: ArchConfig) -> dict:
+    p = param_shapes(model, cfg.param_dtype)
+    return {
+        "params": p,
+        "opt": {
+            "mu": p,
+            "nu": p,
+            "step": SDS((), jnp.int32),
+        },
+    }
+
+
+def train_state_shardings(mesh: Mesh, state_shapes) -> dict:
+    pspecs = params_partition_specs(state_shapes["params"])
+    ospecs = opt_state_specs(state_shapes["params"])
+    as_shard = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+    return {"params": as_shard(pspecs), "opt": as_shard(ospecs)}
+
+
+# ------------------------------------------------------------------- cache
+def cache_shapes(model, cfg: ArchConfig, sh: ShapeSpec) -> Any:
+    return jax.eval_shape(
+        functools.partial(model.init_cache, sh.global_batch, sh.seq_len)
+    )
+
+
+_CACHE_AXES = {
+    # decode KV caches are sequence-sharded (decode-SP): ring writes stay
+    # shard-local and the partial-softmax combine replaces cache gathers
+    "k": ("batch", None, "kv_seq", None),
+    "v": ("batch", None, "kv_seq", None),
+    "cross_k": ("batch", "kv_heads", "kv_seq", None),
+    "cross_v": ("batch", "kv_heads", "kv_seq", None),
+    "ssm": ("batch", "heads", None, None),
+    "conv": ("batch", None, "mlp"),
+    "h": ("batch", "mlp"),
+}
+
+
+def cache_partition_specs(cache_shapes_tree) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes_tree)
+    specs = []
+    for kp, leaf in flat:
+        path = tuple(
+            p.key if hasattr(p, "key") else str(getattr(p, "idx", p)) for p in kp
+        )
+        name = path[-1]
+        axes = _CACHE_AXES.get(name)
+        stacked = path and path[0] == "units"
+        shape = tuple(leaf.shape)
+        if axes is None:
+            specs.append(P(*([None] * len(shape))))
+            continue
+        inner_shape = shape[1:] if stacked else shape
+        spec = logical_spec(*axes, shape=inner_shape)
+        if stacked:
+            spec = P(None, *spec)
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def cache_shardings(mesh: Mesh, cache_shapes_tree) -> Any:
+    specs = cache_partition_specs(cache_shapes_tree)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

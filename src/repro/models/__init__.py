@@ -1,0 +1,10 @@
+"""Model zoo: the ten assigned architectures in pure JAX.
+
+Every architecture is expressed as a *layer pattern* over a small set of
+mixer/channel-mix blocks (``layers.py``), stacked with ``lax.scan`` over
+repeat units so the lowered HLO stays small enough to compile 512-way SPMD
+programs quickly.  ``lm.py`` is the decoder-only family (dense GQA, MoE,
+SSM, hybrid, VLM backbone); ``encdec.py`` covers seamless-m4t.
+"""
+
+from .registry import build_model, MODEL_FAMILIES  # noqa: F401

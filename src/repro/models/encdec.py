@@ -1,0 +1,248 @@
+"""Encoder-decoder family (seamless-m4t): speech-frontend stub + text decoder.
+
+The encoder consumes precomputed frame embeddings (B, S_enc, D) — the conv
+subsampling frontend is a stub per the assignment — through bidirectional
+self-attention layers.  The decoder is a causal LM whose layers add
+cross-attention over the encoder output; cross-KV is computed once at
+prefill and reused by every decode step.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.distributed.partitioning import lsc
+
+from . import layers as L
+from .lm import DecoderLM
+
+
+def _init_cross_attention(key, spec: L.AttnSpec) -> dict:
+    # same projection structure as self-attention, no rope at apply time
+    return L.init_attention(key, spec)
+
+
+def _cross_kv(params: dict, spec: L.AttnSpec, enc_out: jax.Array):
+    """Project encoder output to (B, K, S_enc, Dh) cross K/V (no rope)."""
+    b, s, _ = enc_out.shape
+    dt = enc_out.dtype
+    k = (enc_out @ L.cast(params["wk"], dt)).reshape(b, s, spec.n_kv_heads, spec.head_dim)
+    v = (enc_out @ L.cast(params["wv"], dt)).reshape(b, s, spec.n_kv_heads, spec.head_dim)
+    return k.swapaxes(1, 2), v.swapaxes(1, 2)
+
+
+def _cross_attend(params: dict, spec: L.AttnSpec, x: jax.Array, ck, cv):
+    """q from decoder states x (B,S,D); kv (B,K,S_enc,Dh) precomputed."""
+    b, s, _ = x.shape
+    dt = x.dtype
+    q = (x @ L.cast(params["wq"], dt)).reshape(b, s, spec.n_heads, spec.head_dim)
+    q = lsc(q, "batch", None, "heads", None)
+    kh = spec.n_kv_heads
+    g = spec.n_heads // kh
+    qh = (q * spec.scale).reshape(b, s, kh, g, spec.head_dim).astype(jnp.float32)
+    logits = jnp.einsum("bskgd,bkcd->bskgc", qh, ck.astype(jnp.float32))
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bskgc,bkcd->bskgd", w, cv.astype(jnp.float32))
+    out = out.reshape(b, s, spec.n_heads * spec.head_dim).astype(dt)
+    return lsc(out @ L.cast(params["wo"], dt), "batch", None, None)
+
+
+class EncDecLM:
+    """Same public interface as DecoderLM; batch adds ``enc_embeds``."""
+
+    def __init__(self, cfg: ArchConfig):
+        if not cfg.is_encdec:
+            raise ValueError("EncDecLM needs n_enc_layers > 0")
+        self.cfg = cfg
+        self.compute_dtype = jnp.dtype(cfg.compute_dtype)
+        hd = cfg.resolved_head_dim
+        base = dict(
+            d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=hd, rope_theta=cfg.rope_theta,
+        )
+        self.enc_spec = L.AttnSpec(**base, causal=False)
+        self.dec_spec = L.AttnSpec(**base)
+        self.cross_spec = L.AttnSpec(**base)
+        # decoder-side LM machinery (embedding, head, chunked loss) is reused
+        self._dec = DecoderLM(cfg)
+
+    # ------------------------------------------------------------------ init
+    def _init_enc_layer(self, key) -> dict:
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": L.init_rms_norm(cfg.d_model),
+            "mixer": L.init_attention(k1, self.enc_spec),
+            "ln2": L.init_rms_norm(cfg.d_model),
+            "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_kind),
+        }
+
+    def _init_dec_layer(self, key) -> dict:
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "ln1": L.init_rms_norm(cfg.d_model),
+            "mixer": L.init_attention(k1, self.dec_spec),
+            "ln_x": L.init_rms_norm(cfg.d_model),
+            "cross": _init_cross_attention(k2, self.cross_spec),
+            "ln2": L.init_rms_norm(cfg.d_model),
+            "mlp": L.init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.mlp_kind),
+        }
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        k_emb, k_enc, k_dec, k_head = jax.random.split(key, 4)
+        v, d = cfg.padded_vocab, cfg.d_model
+        return {
+            "token_embedding": L.normal(k_emb, (v, d), 1.0),
+            "enc_units": jax.vmap(self._init_enc_layer)(
+                jax.random.split(k_enc, cfg.n_enc_layers)
+            ),
+            "units": jax.vmap(self._init_dec_layer)(
+                jax.random.split(k_dec, cfg.n_layers)
+            ),
+            "enc_norm": L.init_rms_norm(d),
+            "final_norm": L.init_rms_norm(d),
+            "lm_head": L.normal(k_head, (d, v), d**-0.5),
+        }
+
+    # --------------------------------------------------------------- encoder
+    def encode(self, params: dict, enc_embeds: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        h = lsc(enc_embeds.astype(self.compute_dtype), "batch", None, None)
+        b, s, _ = h.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+        def layer_fn(h, p):
+            hn = L.rms_norm(h, p["ln1"]["scale"])
+            h = h + L.attention_train(
+                p["mixer"], self.enc_spec, hn, positions, chunk=cfg.attn_chunk
+            )
+            hn = L.rms_norm(h, p["ln2"]["scale"])
+            h = h + L.mlp(p["mlp"], hn, cfg.mlp_kind)
+            return lsc(h, "batch", None, None), None
+
+        h, _ = lax.scan(jax.checkpoint(layer_fn), h, params["enc_units"])
+        return L.rms_norm(h, params["enc_norm"]["scale"])
+
+    # --------------------------------------------------------------- decoder
+    def _dec_layer_train(self, p, h, positions, enc_out):
+        cfg = self.cfg
+        hn = L.rms_norm(h, p["ln1"]["scale"])
+        h = h + L.attention_train(
+            p["mixer"], self.dec_spec, hn, positions, chunk=cfg.attn_chunk
+        )
+        hn = L.rms_norm(h, p["ln_x"]["scale"])
+        ck, cv = _cross_kv(p["cross"], self.cross_spec, enc_out)
+        h = h + _cross_attend(p["cross"], self.cross_spec, hn, ck, cv)
+        hn = L.rms_norm(h, p["ln2"]["scale"])
+        h = h + L.mlp(p["mlp"], hn, cfg.mlp_kind)
+        return lsc(h, "batch", None, None)
+
+    def loss(self, params: dict, batch: dict) -> tuple[jax.Array, dict]:
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["enc_embeds"])
+        x = jnp.take(
+            params["token_embedding"].astype(self.compute_dtype),
+            batch["tokens"], axis=0,
+        )
+        x = lsc(x, "batch", None, None)
+        b, s = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+        def layer_fn(h, p):
+            return self._dec_layer_train(p, h, positions, enc_out), None
+
+        h, _ = lax.scan(jax.checkpoint(layer_fn), x, params["units"])
+        h = L.rms_norm(h, params["final_norm"]["scale"])
+        nll = self._dec._chunked_xent(params, h, batch["labels"])
+        return nll, {"nll": nll, "aux": jnp.zeros((), jnp.float32)}
+
+    # --------------------------------------------------------------- serving
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        one = {
+            "self": L.init_attention_cache(
+                self.dec_spec, batch, max_len, self.compute_dtype
+            ),
+            "cross_k": jnp.zeros(
+                (batch, self.cross_spec.n_kv_heads,
+                 max(max_len // cfg.enc_subsample, 1), self.cross_spec.head_dim),
+                self.compute_dtype,
+            ),
+            "cross_v": jnp.zeros(
+                (batch, self.cross_spec.n_kv_heads,
+                 max(max_len // cfg.enc_subsample, 1), self.cross_spec.head_dim),
+                self.compute_dtype,
+            ),
+        }
+        return {
+            "units": jax.tree.map(
+                lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), one
+            )
+        }
+
+    def prefill(self, params: dict, batch: dict, max_len: int) -> tuple:
+        """Encode + run decoder prompt; emits self-KV and cross-KV caches."""
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["enc_embeds"])
+        x = jnp.take(
+            params["token_embedding"].astype(self.compute_dtype),
+            batch["tokens"], axis=0,
+        )
+        b, s = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+        def layer_fn(h, p):
+            hn = L.rms_norm(h, p["ln1"]["scale"])
+            mix, self_cache = L.attention_prefill(
+                p["mixer"], self.dec_spec, hn, positions, max_len,
+                chunk=cfg.attn_chunk,
+            )
+            h = h + mix
+            hn = L.rms_norm(h, p["ln_x"]["scale"])
+            ck, cv = _cross_kv(p["cross"], self.cross_spec, enc_out)
+            h = h + _cross_attend(p["cross"], self.cross_spec, hn, ck, cv)
+            hn = L.rms_norm(h, p["ln2"]["scale"])
+            h = h + L.mlp(p["mlp"], hn, cfg.mlp_kind)
+            cache = {"self": self_cache, "cross_k": ck, "cross_v": cv}
+            return lsc(h, "batch", None, None), cache
+
+        h, caches = lax.scan(layer_fn, lsc(x, "batch", None, None), params["units"])
+        h = L.rms_norm(h, params["final_norm"]["scale"])
+        return self._dec._logits(params, h), {"units": caches}
+
+    def decode_step(
+        self, params: dict, cache: dict, tokens: jax.Array, pos: jax.Array
+    ) -> tuple:
+        cfg = self.cfg
+        x = jnp.take(
+            params["token_embedding"].astype(self.compute_dtype), tokens, axis=0
+        )
+        x = lsc(x, "batch", None, None)
+
+        def layer_fn(h, inp):
+            p, c = inp
+            hn = L.rms_norm(h, p["ln1"]["scale"])
+            mix, self_cache = L.attention_decode(
+                p["mixer"], self.dec_spec, hn, c["self"], pos
+            )
+            h = h + mix
+            hn = L.rms_norm(h, p["ln_x"]["scale"])
+            h = h + _cross_attend(
+                p["cross"], self.cross_spec, hn, c["cross_k"], c["cross_v"]
+            )
+            hn = L.rms_norm(h, p["ln2"]["scale"])
+            h = h + L.mlp(p["mlp"], hn, cfg.mlp_kind)
+            new_c = {"self": self_cache, "cross_k": c["cross_k"],
+                     "cross_v": c["cross_v"]}
+            return lsc(h, "batch", None, None), new_c
+
+        h, caches = lax.scan(layer_fn, x, (params["units"], cache["units"]))
+        h = L.rms_norm(h, params["final_norm"]["scale"])
+        return self._dec._logits(params, h), {"units": caches}

@@ -1,0 +1,16 @@
+"""Model registry: config -> model object (shared init/loss/prefill/decode)."""
+
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig
+
+from .encdec import EncDecLM
+from .lm import DecoderLM
+
+MODEL_FAMILIES = ("dense", "moe", "vlm", "ssm", "audio", "hybrid")
+
+
+def build_model(cfg: ArchConfig):
+    if cfg.is_encdec:
+        return EncDecLM(cfg)
+    return DecoderLM(cfg)

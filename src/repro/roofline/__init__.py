@@ -1,0 +1,11 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+
+from .analysis import (
+    HW,
+    CellResult,
+    collective_bytes,
+    analyze_compiled,
+    roofline_terms,
+)
+
+__all__ = ["HW", "CellResult", "collective_bytes", "analyze_compiled", "roofline_terms"]

@@ -1,0 +1,533 @@
+"""Three-term roofline from the compiled dry-run (no real hardware needed).
+
+    compute term    = HLO_FLOPs    / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes    / (chips × HBM_bw)
+    collective term = wire_bytes   / (chips × link_bw)
+
+All three numerators are *global* quantities = per-device × chips (an SPMD
+module describes one participant), so the terms reduce to per-device values
+over per-chip rates — that is what we compute.
+
+Why not ``compiled.cost_analysis()`` alone: XLA's cost analysis visits each
+``while`` body ONCE, so a model whose 80 layers live inside a ``lax.scan``
+under-counts FLOPs/bytes by ~80× (verified empirically on this backend; see
+EXPERIMENTS.md §Dry-run notes).  We therefore re-derive FLOPs and bytes from
+the optimized HLO module printed with operand shapes, weighting every
+computation by its loop trip count (``known_trip_count`` backend config on
+each ``while`` op, falling back to the `i < C` constant in the loop
+condition).  Raw cost_analysis numbers are retained in the report for
+reference.
+
+Counting conventions (uniform across cells, so ratios are meaningful):
+  * FLOPs: 2 × |out| × contraction for every ``dot``; other ops are ignored
+    (elementwise work is bandwidth-, not compute-bound).
+  * HBM bytes: Σ (operand + output bytes) of every top-level op in
+    control-flow computations, skipping no-data ops (parameter, tuple,
+    get-tuple-element, constant, bitcast, reshape).  Fusion-internal ops
+    never touch HBM and are skipped; the fusion call site carries the
+    traffic.
+  * Collective wire bytes (per chip, ring model): all-gather and
+    all-to-all move out×(N-1)/N, reduce-scatter out×(N-1) (its output is the
+    scattered shard), all-reduce 2×out×(N-1)/N, collective-permute out.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+# ----------------------------------------------------------- hardware model
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12  # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9  # bytes/s per chip
+    ici_bw: float = 50e9  # bytes/s per link (per-chip, one direction)
+    hbm_bytes: float = 16e9
+
+
+HW = Hardware()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_TRIP_RE = re.compile(r"known_trip_count[\"']?\s*:\s*\{\s*[\"']n[\"']\s*:\s*[\"']?(\d+)")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_NO_DATA_OPS = (
+    "parameter(", "constant(", "get-tuple-element(", "tuple(", "bitcast(",
+    "reshape(", "after-all(", "partition-id(", "replica-id(", "iota(",
+    # control flow: the callee's ops are counted (trip-weighted) instead;
+    # counting the carried tuple here would bill the whole loop state per step
+    " while(", "conditional(", "optimization-barrier(",
+)
+
+
+def _dims_elems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    return _dims_elems(dims) * _DTYPE_BYTES.get(dtype, 0)
+
+
+def _split_lhs_rhs(line: str) -> tuple[str, str]:
+    parts = line.split(" = ", 1)
+    return (parts[0], parts[1]) if len(parts) == 2 else ("", line)
+
+
+def _out_bytes(line: str) -> int:
+    """Output-buffer size: largest shape before the opcode on the RHS."""
+    _, rhs = _split_lhs_rhs(line)
+    opcode_at = re.search(r"[a-z][a-z0-9\-\.\$_]*\(", rhs)
+    region = rhs[: opcode_at.start()] if opcode_at else rhs
+    sizes = [_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(region)]
+    return max(sizes) if sizes else 0
+
+
+def _operand_sizes(line: str) -> list[int]:
+    """Operand sizes: shapes inside the top-level call parens."""
+    _, rhs = _split_lhs_rhs(line)
+    m = re.search(r"\(([^)]*)\)", rhs[rhs.find("("):] if "(" in rhs else rhs)
+    if not m:
+        return []
+    return [_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(m.group(1))]
+
+
+def _operand_bytes(line: str) -> int:
+    return sum(_operand_sizes(line))
+
+
+def _hbm_bytes(line: str) -> int:
+    """Modeled HBM traffic of one top-level op (non-fusion).
+
+    * dynamic-slice / gather: read+write the *slice*, never the source
+      buffer (a scan iteration reads one layer of a stacked buffer).
+    * dynamic-update-slice: read+write the *update*; the target is aliased.
+    * otherwise: output + operands, dropping one operand byte-identical to
+      the output (in-place threading through a loop carry).
+    """
+    out = _out_bytes(line)
+    if re.search(r"\bdynamic-slice\(|\bgather\(", line):
+        return 2 * out
+    ops = _operand_sizes(line)
+    if re.search(r"\bdynamic-update-slice\(", line):
+        small = [b for b in ops if b != max(ops)] if ops else []
+        return 2 * sum(small)
+    if ops:
+        big = max(ops)
+        if big == out and out > 0:
+            ops.remove(big)
+    return out + sum(ops)
+
+
+_PARAM_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*([a-z0-9]+)\[([0-9,]*)\][^=]*parameter\(")
+
+
+_PASSTHROUGH_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*[a-z0-9]+\[[0-9,]*\][^=]*"
+    r"(convert|bitcast|copy|reshape|transpose)\(\s*[a-z0-9]+\[[0-9,]*\][^%]*%([\w\.\-]+)\)"
+)
+
+
+def _fusion_effective_bytes(lines: list[str]) -> int:
+    """Modeled HBM traffic of one fusion execution, from its body.
+
+    Fusion internals stay in registers/VMEM; HBM traffic is the body's
+    *parameters* (read) and its root (write) — except parameters that are
+    only dynamic-sliced (read: slice size) or are dynamic-update-slice
+    targets (aliased: read 0, write: update size).  This is what makes a
+    scan over stacked layer weights cost one layer per iteration instead of
+    the whole stack.
+
+    Pure layout/dtype chains (convert/bitcast/copy/reshape/transpose) are
+    followed transparently: XLA CPU emulates a bf16 dynamic-update-slice by
+    upcasting the whole buffer to f32 and back — a lowering artifact a TPU
+    (native bf16 DUS) never pays, so the convert must not turn an aliased
+    update into a whole-buffer rewrite in the model.
+    """
+    params: dict[str, int] = {}
+    alias: dict[str, str] = {}  # passthrough def -> source name
+    sliced_reads: dict[str, int] = {}
+    dus_targets: set[str] = set()
+    dus_defs: set[str] = set()
+    root_bytes = 0
+    root_name = None
+    dus_update_bytes = 0
+
+    def resolve(name: str) -> str:
+        seen = set()
+        while name in alias and name not in seen:
+            seen.add(name)
+            name = alias[name]
+        return name
+
+    for line in lines:
+        pm = _PARAM_RE.match(line)
+        if pm:
+            params[pm.group(1)] = _shape_bytes(pm.group(2), pm.group(3))
+            continue
+        am = _PASSTHROUGH_RE.match(line)
+        if am:
+            alias[am.group(1)] = am.group(3)
+        is_root = line.startswith("ROOT")
+        def_name = None
+        dm = re.match(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=", line)
+        if dm:
+            def_name = dm.group(1)
+        if re.search(r"\bdynamic-slice\(", line):
+            m = re.search(r"dynamic-slice\(\s*[a-z0-9]+\[[0-9,]*\][^%]*%([\w\.\-]+)", line)
+            if m:
+                src = resolve(m.group(1))
+                if src in params:
+                    sliced_reads[src] = sliced_reads.get(src, 0) + _out_bytes(line)
+        if re.search(r"\bdynamic-update-slice\(", line):
+            m = re.search(
+                r"dynamic-update-slice\(\s*[a-z0-9]+\[[0-9,]*\][^%]*%([\w\.\-]+)", line
+            )
+            if m:
+                tgt = resolve(m.group(1))
+                if tgt in params:
+                    dus_targets.add(tgt)
+            sizes = _operand_sizes(line)
+            if sizes:
+                dus_update_bytes += sum(b for b in sizes if b != max(sizes))
+            if def_name:
+                dus_defs.add(def_name)
+        if is_root:
+            root_bytes = _out_bytes(line)
+            root_name = def_name
+    reads = 0
+    for name, size in params.items():
+        if name in dus_targets:
+            continue
+        if name in sliced_reads:
+            reads += min(sliced_reads[name], size)
+        else:
+            reads += size
+    # a root that is (a passthrough of) a dynamic-update-slice writes only
+    # the update; the rest of the buffer is aliased
+    root_is_dus = root_name is not None and (
+        root_name in dus_defs or resolve(root_name) in dus_defs
+    )
+    write = dus_update_bytes if root_is_dus and dus_update_bytes else root_bytes
+    return reads + write
+
+
+def _dot_flops(line: str) -> int:
+    """2 × |out| × contraction-size for a dot op with printed operand shapes."""
+    _, rhs = _split_lhs_rhs(line)
+    out_at = re.search(r"[a-z][a-z0-9\-\.\$_]*\(", rhs)
+    out_shapes = _SHAPE_RE.findall(rhs[: out_at.start()] if out_at else rhs)
+    if not out_shapes:
+        return 0
+    out_elems = max(_dims_elems(s) for _, s in out_shapes)
+    m = re.search(r"\(([^)]*)\)", rhs[out_at.start():] if out_at else rhs)
+    operands = _SHAPE_RE.findall(m.group(1)) if m else []
+    if not operands:
+        return 0
+    lhs_dims = operands[0][1].split(",") if operands[0][1] else []
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    contraction = 1
+    if mc and mc.group(1):
+        for idx in mc.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                contraction *= int(lhs_dims[i])
+    return 2 * out_elems * contraction
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)  # iota form: [n_groups, group_size]<=[...]
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_EXPLICIT_RE.search(line)  # explicit {{0,1},{2,3}}
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+def _wire_bytes(kind: str, line: str) -> int:
+    """Per-chip wire bytes under the ring model (see module docstring)."""
+    out = _out_bytes(line)
+    if kind == "collective-permute":  # point-to-point: no replica_groups
+        return out
+    n = _group_size(line)
+    if n <= 1:
+        return 0
+    if kind == "all-gather":
+        return out * (n - 1) // n
+    if kind == "reduce-scatter":
+        return out * (n - 1)
+    if kind == "all-reduce":
+        return 2 * out * (n - 1) // n
+    return out * (n - 1) // n  # all-to-all
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    lines: list[str] = dataclasses.field(default_factory=list)
+    flops: int = 0
+    bytes_: int = 0
+    collective_bytes: dict[str, int] = dataclasses.field(default_factory=dict)
+    counts: dict[str, int] = dataclasses.field(default_factory=dict)
+    constants: list[int] = dataclasses.field(default_factory=list)
+    # (callee, kind, trip_count) — kind in {"while", "call", "fusion"}
+    calls: list[tuple[str, str, int]] = dataclasses.field(default_factory=list)
+    is_fusion_body: bool = False
+
+
+def _parse_module(hlo: str) -> tuple[dict[str, _Computation], str | None]:
+    comps: dict[str, _Computation] = {}
+    fusion_bodies: set[str] = set()
+    cur: _Computation | None = None
+    entry = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if not line or line.startswith(("//", "#")):
+            continue
+        if line.endswith("{") and " = " not in line.split("(", 1)[0]:
+            m = _HEADER_RE.match(line)
+            if m:
+                cur = _Computation(m.group(2))
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+                continue
+        if cur is None or line == "}":
+            continue
+        cur.lines.append(line)
+        for m in re.finditer(r"\bs32\[\]\s+constant\((\d+)\)", line):
+            cur.constants.append(int(m.group(1)))
+        # ---- flops (dots are counted wherever they live, incl. fusions)
+        if re.search(r"\bdot\(", line):
+            cur.flops += _dot_flops(line)
+        # ---- collectives
+        matched = None
+        for kind in _COLLECTIVES:
+            if re.search(rf"\b{kind}(-start)?\(", line):
+                matched = kind
+                break
+        if matched and "-done" not in line:
+            b = _wire_bytes(matched, line)
+            cur.collective_bytes[matched] = (
+                cur.collective_bytes.get(matched, 0) + b
+            )
+            cur.counts[matched] = cur.counts.get(matched, 0) + 1
+        # ---- call-graph edges
+        if " while(" in line:
+            body = re.search(r"body=%?([\w\.\-]+)", line)
+            cond = re.search(r"condition=%?([\w\.\-]+)", line)
+            tm = _TRIP_RE.search(line)
+            trip = int(tm.group(1)) if tm else 0  # 0 -> resolve from condition
+            if body:
+                cur.calls.append((body.group(1), "while", trip))
+                if not trip and cond:
+                    cur.calls.append((cond.group(1), "cond_of:" + body.group(1), 0))
+            continue
+        is_fusion_line = bool(re.search(r"\bfusion\(", line))
+        for name in re.findall(r"calls=%?([\w\.\-]+)", line):
+            fusion_bodies.add(name)
+            cur.calls.append((name, "fusion", 1))
+        for name in re.findall(r"to_apply=%?([\w\.\-]+)", line):
+            cur.calls.append((name, "call", 1))
+        for grp in re.findall(r"branch_computations=\{([^}]*)\}", line):
+            for name in re.findall(r"%?([\w\.\-]+)", grp):
+                cur.calls.append((name, "call", 1))
+    for name in fusion_bodies:
+        if name in comps:
+            comps[name].is_fusion_body = True
+    # second pass: HBM bytes. Fusion bodies get effective-read accounting;
+    # other computations bill their top-level non-fusion ops.
+    for comp in comps.values():
+        if comp.is_fusion_body:
+            comp.bytes_ = _fusion_effective_bytes(comp.lines)
+            continue
+        total = 0
+        for line in comp.lines:
+            if " = " not in line or any(op in line for op in _NO_DATA_OPS):
+                continue
+            if re.search(r"\bfusion\(", line):
+                continue  # billed through the callee's effective bytes
+            total += _hbm_bytes(line)
+        comp.bytes_ = total
+    return comps, entry
+
+
+def hlo_stats(hlo: str) -> dict[str, Any]:
+    """Trip-count-weighted FLOPs / HBM bytes / collective wire bytes."""
+    comps, entry_name = _parse_module(hlo)
+    flops = 0
+    hbm = 0
+    coll = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    entry = comps.get(entry_name) if entry_name else None
+    if entry is None:
+        for c in comps.values():
+            flops += c.flops
+            hbm += c.bytes_
+            for k, b in c.collective_bytes.items():
+                coll[k] += b
+                counts[k] += c.counts.get(k, 0)
+        return {"flops": flops, "hbm_bytes": hbm,
+                "collectives": {**coll, "total": sum(coll.values())},
+                "op_counts": counts, "trip_weighted": False}
+
+    stack: set[str] = set()
+
+    def walk(comp: _Computation, mult: int) -> None:
+        nonlocal flops, hbm
+        if comp.name in stack or mult <= 0:
+            return
+        stack.add(comp.name)
+        flops += comp.flops * mult
+        hbm += comp.bytes_ * mult
+        for k, b in comp.collective_bytes.items():
+            coll[k] += b * mult
+            counts[k] += comp.counts.get(k, 0) * mult
+        for callee, kind, trip in comp.calls:
+            if kind.startswith("cond_of:"):
+                continue
+            sub = comps.get(callee)
+            if sub is None:
+                continue
+            m = mult
+            if kind == "while":
+                if not trip:  # fall back to the `i < C` condition constant
+                    cond_names = [
+                        c for c, k, _ in comp.calls if k == f"cond_of:{callee}"
+                    ]
+                    for cn in cond_names:
+                        cc = comps.get(cn)
+                        if cc and cc.constants:
+                            trip = max(cc.constants)
+                    trip = trip or 1
+                m = mult * trip
+            walk(sub, m)
+        stack.discard(comp.name)
+
+    walk(entry, 1)
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "collectives": {**coll, "total": sum(coll.values())},
+        "op_counts": counts,
+        "trip_weighted": True,
+    }
+
+
+def collective_bytes(hlo: str) -> dict[str, Any]:
+    """Back-compat wrapper: collective wire bytes only."""
+    stats = hlo_stats(hlo)
+    return {**stats["collectives"], "op_counts": stats["op_counts"]}
+
+
+def compiled_hlo_text(compiled) -> str:
+    """Optimized HLO with operand shapes (needed for dot FLOP counting)."""
+    try:
+        from jax._src.lib import _jax as xe  # jaxlib
+
+        opts = xe.HloPrintOptions()
+        opts.print_operand_shape = True
+        opts.print_backend_config = True
+        mods = compiled.runtime_executable().hlo_modules()
+        return "\n".join(m.to_string(opts) for m in mods)
+    except Exception:  # noqa: BLE001 — fall back to the public printer
+        return compiled.as_text()
+
+
+# ------------------------------------------------------------------ report
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective: dict[str, Any]
+    memory: dict[str, float]
+    model_flops: float  # 6·N·D (or 6·N_active·D) for the whole step
+    xla_cost_analysis: dict[str, float] | None = None
+    status: str = "ok"
+
+    def terms(self, hw: Hardware = HW) -> dict[str, float]:
+        return roofline_terms(
+            self.flops_per_device, self.bytes_per_device,
+            self.collective.get("total", 0), hw,
+        )
+
+    def summary(self, hw: Hardware = HW) -> dict[str, Any]:
+        t = self.terms(hw)
+        dominant = max(t, key=t.get)
+        useful = (
+            self.model_flops / (self.flops_per_device * self.n_devices)
+            if self.flops_per_device else 0.0
+        )
+        bound = max(t.values())
+        return {
+            **t,
+            "dominant": dominant,
+            "useful_flops_ratio": useful,
+            "roofline_fraction": (t["compute"] / bound) if bound else 0.0,
+            "step_time_lower_bound_s": bound,
+        }
+
+
+def roofline_terms(
+    flops_per_device: float,
+    bytes_per_device: float,
+    collective_bytes_per_device: float,
+    hw: Hardware = HW,
+) -> dict[str, float]:
+    return {
+        "compute": flops_per_device / hw.peak_flops,
+        "memory": bytes_per_device / hw.hbm_bw,
+        "collective": collective_bytes_per_device / hw.ici_bw,
+    }
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
+                     n_devices: int, model_flops: float) -> CellResult:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    xla_cost = {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+    }
+    mem = compiled.memory_analysis()
+    memory = {
+        "argument_bytes": float(getattr(mem, "argument_size_in_bytes", 0)),
+        "output_bytes": float(getattr(mem, "output_size_in_bytes", 0)),
+        "temp_bytes": float(getattr(mem, "temp_size_in_bytes", 0)),
+        "alias_bytes": float(getattr(mem, "alias_size_in_bytes", 0)),
+        "peak_bytes": float(getattr(mem, "argument_size_in_bytes", 0))
+        + float(getattr(mem, "temp_size_in_bytes", 0))
+        + float(getattr(mem, "output_size_in_bytes", 0))
+        - float(getattr(mem, "alias_size_in_bytes", 0)),
+    }
+    stats = hlo_stats(compiled_hlo_text(compiled))
+    return CellResult(
+        arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
+        flops_per_device=float(stats["flops"]),
+        bytes_per_device=float(stats["hbm_bytes"]),
+        collective={**stats["collectives"], "op_counts": stats["op_counts"]},
+        memory=memory, model_flops=model_flops, xla_cost_analysis=xla_cost,
+    )

@@ -1,0 +1,89 @@
+"""Render the §Roofline markdown table from dry-run cell JSONs.
+
+Usage: PYTHONPATH=src python -m repro.roofline.report results/dryrun [mesh]
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load_cells(directory: str) -> list[dict]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        cells.append(json.load(open(f)))
+    return cells
+
+
+def fmt_table(cells: list[dict], mesh: str = "pod16x16") -> str:
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | "
+        "dominant | peak GiB/dev | model TFLOP | useful | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    rows = [c for c in cells if c.get("mesh") == mesh or (
+        c.get("status", "").startswith("SKIP") and c.get("mesh") == mesh)]
+    rows.sort(key=lambda c: (c["arch"], order.get(c["shape"], 9)))
+    for c in rows:
+        if c.get("status", "ok").startswith("SKIP"):
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | — | — | — | SKIP "
+                f"(full attention @500k) | — | — | — | — |"
+            )
+            continue
+        t = c["terms"]
+        lines.append(
+            "| {arch} | {shape} | {c:.3f} | {m:.3f} | {k:.3f} | {dom} | "
+            "{peak:.1f} | {mf:.1f} | {useful:.2f} | {frac:.3f} |".format(
+                arch=c["arch"], shape=c["shape"], c=t["compute"],
+                m=t["memory"], k=t["collective"], dom=c["dominant"],
+                peak=c["memory"]["peak_bytes"] / 2**30,
+                mf=c["model_flops"] / 1e12,
+                useful=c.get("useful_flops_ratio", 0),
+                frac=c.get("roofline_fraction", 0),
+            )
+        )
+    return "\n".join(lines)
+
+
+def fmt_compare(base_dir: str, opt_dir: str, mesh: str = "pod16x16") -> str:
+    """Before/after table for §Perf (step-time lower bound per cell)."""
+    base = {(c["arch"], c["shape"]): c for c in load_cells(base_dir)
+            if c.get("mesh") == mesh and not c.get("status", "ok").startswith("SKIP")}
+    opt = {(c["arch"], c["shape"]): c for c in load_cells(opt_dir)
+           if c.get("mesh") == mesh and not c.get("status", "ok").startswith("SKIP")}
+    lines = [
+        "| arch | shape | LB before (s) | LB after (s) | speedup | "
+        "dominant before→after |",
+        "|---|---|---|---|---|---|",
+    ]
+    for key in sorted(base):
+        if key not in opt:
+            continue
+        b, o = base[key], opt[key]
+        lb_b = b.get("step_time_lower_bound_s", 0)
+        lb_o = o.get("step_time_lower_bound_s", 0)
+        if not lb_b or not lb_o:
+            continue
+        lines.append(
+            f"| {key[0]} | {key[1]} | {lb_b:.3f} | {lb_o:.3f} | "
+            f"{lb_b/lb_o:.2f}× | {b['dominant']}→{o['dominant']} |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    directory = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    mesh = sys.argv[2] if len(sys.argv) > 2 else "pod16x16"
+    if len(sys.argv) > 3 and sys.argv[3] == "--compare":
+        print(fmt_compare(sys.argv[4], directory, mesh))
+        return
+    print(fmt_table(load_cells(directory), mesh))
+
+
+if __name__ == "__main__":
+    main()

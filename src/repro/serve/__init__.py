@@ -1,0 +1,5 @@
+"""Serving substrate: prefill/decode step factories + batched sessions."""
+
+from .engine import ServeSession, make_decode_step, make_prefill
+
+__all__ = ["ServeSession", "make_decode_step", "make_prefill"]

@@ -1,0 +1,117 @@
+"""Batched serving: continuous decode over a fixed-capacity request batch.
+
+``serve_step`` (what the decode-shape dry-runs lower) is one cached decode
+step over the whole batch: (params, cache, tokens, pos) -> (logits, cache).
+``ServeSession`` wraps it with a small scheduler: requests join free slots,
+finished slots free on EOS/length, every slot shares the same jitted step —
+the standard continuous-batching shape for TPU serving (static shapes; slot
+liveness is a mask, not a dynamic batch).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_prefill(model, max_len: int) -> Callable:
+    def prefill(params, batch):
+        return model.prefill(params, batch, max_len)
+
+    return prefill
+
+
+def make_decode_step(model) -> Callable:
+    def decode_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    return decode_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeSession:
+    """Greedy continuous-batching session over one model + cache capacity.
+
+    The implementation is deliberately synchronous (one decode step per
+    ``tick``): scheduling policy, slot reuse, and EOS handling are the parts
+    a cluster serving stack needs correct; async plumbing is orthogonal.
+    """
+
+    def __init__(self, model, params, batch_slots: int, max_len: int,
+                 eos_id: int = -1):
+        self.model = model
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.prefill_fn = jax.jit(make_prefill(model, max_len))
+        self.decode_fn = jax.jit(make_decode_step(model))
+        self.cache = model.init_cache(batch_slots, max_len)
+        self.live: dict[int, Request] = {}  # slot -> request
+        self.pos = 0
+        self.queue: list[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        """Admit queued requests into free slots (same-length prompt batch)."""
+        free = [s for s in range(self.slots) if s not in self.live]
+        admit = self.queue[: len(free)]
+        if not admit:
+            return
+        del self.queue[: len(admit)]
+        s_len = max(len(r.prompt) for r in admit)
+        toks = np.zeros((self.slots, s_len), np.int32)
+        for slot, r in zip(free, admit):
+            toks[slot, -len(r.prompt):] = r.prompt
+            self.live[slot] = r
+        logits, cache = self.prefill_fn(self.params, {"tokens": jnp.asarray(toks)})
+        self.cache = cache
+        self.pos = s_len
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        for slot, r in zip(free, admit):
+            r.out.append(int(nxt[slot]))
+
+    def tick(self) -> bool:
+        """One decode step for every live slot; returns False when idle."""
+        if not self.live and self.queue:
+            self._admit()
+        if not self.live:
+            return False
+        toks = np.zeros((self.slots, 1), np.int32)
+        for slot, r in self.live.items():
+            toks[slot, 0] = r.out[-1] if r.out else 0
+        logits, self.cache = self.decode_fn(
+            self.params, self.cache, jnp.asarray(toks),
+            jnp.asarray(self.pos, jnp.int32),
+        )
+        self.pos += 1
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        for slot in list(self.live):
+            r = self.live[slot]
+            tok = int(nxt[slot])
+            r.out.append(tok)
+            if tok == self.eos_id or len(r.out) >= r.max_new or (
+                self.pos >= self.max_len - 1
+            ):
+                r.done = True
+                del self.live[slot]
+        return True
+
+    def run_to_completion(self, max_ticks: int = 10_000) -> None:
+        for _ in range(max_ticks):
+            if not self.tick() and not self.queue:
+                break

@@ -1,0 +1,11 @@
+"""Training substrate: AdamW + ZeRO-1, train-step factory, trainer loop."""
+
+from .optimizer import AdamWConfig, adamw_init, adamw_update, opt_state_specs
+from .step import TrainState, make_train_step, train_state_specs
+from .trainer import Trainer, TrainerConfig
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "opt_state_specs",
+    "TrainState", "make_train_step", "train_state_specs",
+    "Trainer", "TrainerConfig",
+]

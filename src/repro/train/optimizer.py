@@ -1,0 +1,148 @@
+"""AdamW with global-norm clipping and ZeRO-1 moment sharding.
+
+Pure-function optimizer (no optax dependency): ``adamw_init`` builds the
+moment pytree, ``adamw_update`` applies one step.  ZeRO-1 comes from
+*sharding*, not algorithm: ``opt_state_specs`` assigns each moment tensor the
+parameter's TP spec plus the ``zero`` (data) axis on its first shardable dim,
+so moments occupy 1/(data×model) of their replicated size while parameters
+stay TP-sharded/DP-replicated.  XLA inserts the all-gather of the sharded
+update into the parameter layout — the classic ZeRO-1 schedule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.partitioning import (
+    current_mesh_shape,
+    current_rules,
+    params_partition_specs,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to min_lr_ratio·lr."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.decay_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def adamw_init(params) -> dict:
+    zeros = lambda p: jnp.zeros_like(p)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    """One AdamW step. Returns (params, state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        # moment math in f32, stored back in the moment dtype (bf16 for the
+        # MoE giants) — otherwise bf16 + f32 silently promotes the optimizer
+        # state to f32 in the output, doubling its footprint and breaking
+        # the donated-buffer aliasing of the train step
+        mu_f = b1 * mu.astype(jnp.float32) + (1 - b1) * g
+        nu_f = b2 * nu.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = mu_f / c1
+        vhat = nu_f / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, mu_f.astype(mu.dtype), nu_f.astype(nu.dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(tdef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, metrics
+
+
+def _with_zero_axis(spec: P, shape: tuple[int, ...]) -> P:
+    """Add the ZeRO ('zero' rule) axes to the first unsharded, divisible dim.
+
+    FSDP-sharded weights already consume the data axis — those moments are
+    left as-is (they are already fully sharded); the zero axis only lands on
+    leaves (biases, norm scales, stacked vectors) the FSDP rules skipped.
+    """
+    rules = current_rules() or {}
+    zero = rules.get("zero")
+    if not zero:
+        return spec
+    used: set[str] = set()
+    for e in spec:
+        if e is None:
+            continue
+        for a in (e if isinstance(e, (tuple, list)) else (e,)):
+            used.add(a)
+    zero = tuple(a for a in zero if a not in used)
+    if not zero:
+        return spec
+    sizes = current_mesh_shape()
+    n = 1
+    for a in zero:
+        n *= sizes.get(a, 1)
+    if n <= 1:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for d, e in enumerate(entries):
+        if e is None and shape[d] % n == 0 and shape[d] > 0:
+            entries[d] = zero if len(zero) > 1 else zero[0]
+            return P(*entries)
+    return spec
+
+
+def opt_state_specs(params_shapes) -> dict:
+    """Partition specs for the optimizer state (ZeRO-1 over the data axis)."""
+    base = params_partition_specs(params_shapes)
+    flat_s, tdef = jax.tree.flatten(base)
+    flat_p = jax.tree.leaves(params_shapes)
+    zeroed = [
+        _with_zero_axis(s, tuple(p.shape)) for s, p in zip(flat_s, flat_p)
+    ]
+    moments = jax.tree.unflatten(tdef, zeroed)
+    return {"mu": moments, "nu": moments, "step": P()}

@@ -1,0 +1,185 @@
+"""RME engine behaviour: ephemeral views, hot/cold, epochs, MVCC, operators."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (
+    RelationalMemoryEngine,
+    RelationalTable,
+    TS_INF,
+    benchmark_schema,
+    compression,
+)
+from repro.core import operators as ops
+
+
+@pytest.fixture
+def table():
+    rng = np.random.default_rng(0)
+    schema = benchmark_schema(64, 4)
+    n = 500
+    cols = {c.name: rng.integers(-100, 100, n).astype(np.int32)
+            for c in schema.columns}
+    return RelationalTable.from_columns(schema, cols)
+
+
+def test_ephemeral_view_is_lazy_and_hot_after_first_access(table):
+    eng = RelationalMemoryEngine(revision="mlp")
+    view = eng.register(table, ("A1", "A5"))
+    assert eng.stats.cold_misses == 0  # registration materializes nothing
+    _ = view.packed()
+    assert eng.stats.cold_misses == 1
+    _ = view.packed()
+    _ = view.column("A1")
+    assert eng.stats.cold_misses == 1  # hot
+    assert eng.stats.hot_hits >= 2
+
+
+def test_oltp_mutation_invalidates_views(table):
+    eng = RelationalMemoryEngine()
+    view = eng.register(table, ("A1",))
+    a1 = np.asarray(view.column("A1"))
+    table.append({c: np.array([7], np.int32) for c in table.schema.names})
+    view2 = eng.register(table, ("A1",))
+    a1b = np.asarray(view2.column("A1"))
+    assert len(a1b) == len(a1) + 1
+    assert a1b[-1] == 7
+    assert eng.stats.cold_misses == 2  # second access was cold (version bump)
+
+
+def test_engine_reset_is_epoch_bump(table):
+    eng = RelationalMemoryEngine()
+    v = eng.register(table, ("A2",))
+    _ = v.packed()
+    epoch0 = eng.cache.epoch
+    eng.reset()  # single-cycle invalidation
+    assert eng.cache.epoch == epoch0 + 1
+    _ = eng.register(table, ("A2",)).packed()
+    assert eng.stats.cold_misses == 2
+
+
+def test_reorg_cache_capacity_eviction(table):
+    # tiny SPM: second view evicts the first
+    eng = RelationalMemoryEngine(cache_bytes=500 * 8 + 64)
+    v1 = eng.register(table, ("A1",))
+    v2 = eng.register(table, ("A2", "A3", "A4"))
+    _ = v1.packed()
+    _ = v2.packed()  # too big to cache alongside v1
+    _ = v1.packed()
+    assert eng.stats.cold_misses >= 2
+
+
+def test_mvcc_update_creates_new_version(table):
+    eng = RelationalMemoryEngine()
+    n0 = int(table.snapshot_mask().sum())
+    ts_before = table.now()
+    rows = np.arange(5)
+    table.update(rows, {"A1": np.full(5, 999, np.int32)})
+    # live view sees updated values, same live count
+    assert int(table.snapshot_mask().sum()) == n0
+    live = eng.register(table, ("A1",))
+    a1 = np.asarray(live.column("A1"))
+    assert (a1 == 999).sum() == 5
+    # snapshot before the update still sees the old values
+    old = eng.register(table, ("A1",), snapshot_ts=ts_before)
+    a1_old = np.asarray(old.column("A1"))
+    assert (a1_old == 999).sum() == 0
+    assert len(a1_old) == n0
+
+
+@given(st.lists(st.sampled_from(["append", "delete", "update"]),
+                min_size=1, max_size=12))
+@settings(max_examples=30, deadline=None)
+def test_mvcc_snapshot_isolation_property(ops_seq):
+    """Any interleaving of OLTP ops: old snapshots are immutable."""
+    rng = np.random.default_rng(7)
+    schema = benchmark_schema(32, 4)
+    t = RelationalTable.from_columns(
+        schema, {c.name: rng.integers(0, 10, 20).astype(np.int32)
+                 for c in schema.columns}
+    )
+    snapshots = [(t.now(), t.to_rows())]
+    for op in ops_seq:
+        live = np.nonzero(t.snapshot_mask())[0]
+        if op == "append":
+            t.append({c.name: rng.integers(0, 10, 3).astype(np.int32)
+                      for c in schema.columns})
+        elif op == "delete" and len(live):
+            t.delete(live[: max(1, len(live) // 4)])
+        elif op == "update" and len(live):
+            t.update(live[:2], {"A1": np.full(2, 77, np.int32)})
+        snapshots.append((t.now(), t.to_rows()))
+    for ts, expect in snapshots:
+        got = t.to_rows(ts)
+        for name in expect:
+            np.testing.assert_array_equal(got[name], expect[name])
+
+
+def test_all_queries_cross_path_equality(table):
+    eng = RelationalMemoryEngine()
+    all_cols = list(table.schema.names)
+    cs = ops.make_colstore(table, all_cols)
+    q0 = {p: ops.q0_sum(eng, table, "A1", path=p, colstore=cs) for p in ops.PATHS}
+    assert len({round(v, 2) for v in q0.values()}) == 1
+    q3 = {p: ops.q3_select_aggregate(eng, table, "A2", "A4", 5, path=p, colstore=cs)
+          for p in ops.PATHS}
+    assert len({round(v, 2) for v in q3.values()}) == 1
+    q4 = {p: np.asarray(ops.q4_groupby_avg(eng, table, "A1", "A3", "A2", 5, 16,
+                                           path=p, colstore=cs))
+          for p in ops.PATHS}
+    np.testing.assert_allclose(q4["rme"], q4["row"], rtol=1e-5)
+    np.testing.assert_allclose(q4["rme"], q4["col"], rtol=1e-5)
+
+
+def test_join_cross_path(table):
+    rng = np.random.default_rng(9)
+    schema = table.schema
+    n_r = 128
+    r_cols = {c.name: rng.integers(-50, 50, n_r).astype(np.int32)
+              for c in schema.columns}
+    r_cols["A2"] = np.arange(n_r, dtype=np.int32)  # primary key
+    rt = RelationalTable.from_columns(schema, r_cols)
+    eng = RelationalMemoryEngine()
+    rcs = ops.make_colstore(rt, ["A2", "A3"])
+    scs = ops.make_colstore(table, ["A1", "A2"])
+    res = {p: ops.q5_hash_join(eng, table, rt, path=p, s_colstore=scs,
+                               r_colstore=rcs) for p in ops.PATHS}
+    for p in ("row", "col"):
+        np.testing.assert_array_equal(
+            np.asarray(res["rme"].matched), np.asarray(res[p].matched)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(res["rme"].r_proj), np.asarray(res[p].r_proj)
+        )
+
+
+def test_engine_data_movement_accounting(table):
+    eng = RelationalMemoryEngine()
+    _ = eng.register(table, ("A1",)).packed()
+    row_wise = table.row_count * 64  # full rows through the hierarchy
+    assert eng.stats.bytes_to_cpu == table.row_count * 4
+    assert eng.stats.bytes_from_dram < row_wise
+
+
+# --------------------------------------------------------------- codecs
+@given(st.lists(st.integers(-1000, 1000), min_size=1, max_size=500))
+@settings(max_examples=50, deadline=None)
+def test_dict_codec_roundtrip(values):
+    vals = np.asarray(values, dtype=np.int64)
+    codec = compression.DictCodec.fit(vals)
+    codes = codec.encode(vals)
+    np.testing.assert_array_equal(np.asarray(codec.decode(jnp.asarray(codes))), vals)
+    assert codes.dtype == np.int32
+
+
+@given(st.lists(st.integers(0, 1 << 30), min_size=1, max_size=500),
+       st.sampled_from([16, 128, 1024]))
+@settings(max_examples=50, deadline=None)
+def test_delta_codec_roundtrip(values, frame):
+    vals = np.asarray(values, dtype=np.int64)
+    codec = compression.DeltaCodec.fit(vals, frame)
+    out = np.asarray(codec.decode(jnp.asarray(codec.encode(vals))))
+    np.testing.assert_array_equal(out, vals)

@@ -1,0 +1,87 @@
+"""Query planner + selection-compaction kernel tests."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import RelationalMemoryEngine, RelationalTable, TableGeometry, benchmark_schema
+from repro.core.planner import execute_sum, plan_query
+from repro.kernels.rme_select import densify, select_compact, select_compact_ref
+
+
+@pytest.fixture
+def table():
+    rng = np.random.default_rng(0)
+    schema = benchmark_schema(64, 4)
+    n = 700
+    return RelationalTable.from_columns(
+        schema,
+        {c.name: rng.integers(-100, 100, n).astype(np.int32)
+         for c in schema.columns},
+    )
+
+
+# ---------------------------------------------------------------- planner
+def test_planner_prefers_fused_for_aggregates(table):
+    eng = RelationalMemoryEngine()
+    plan = plan_query(eng, table, ["A1"], aggregate_only=True)
+    assert plan.path == "fused"
+    s, plan = execute_sum(eng, table, "A1")
+    assert plan.path == "fused"
+    expect = table.read_column("A1").astype(np.float64).sum()
+    np.testing.assert_allclose(s, expect, rtol=1e-6)
+
+
+def test_planner_rme_vs_row_crossover(table):
+    """Low projectivity -> rme; ~full projectivity -> row (Figure 1)."""
+    eng = RelationalMemoryEngine()
+    low = plan_query(eng, table, ["A1", "A5"])
+    assert low.path == "rme"
+    high = plan_query(eng, table, [f"A{i+1}" for i in range(16)])
+    assert high.path == "row"  # all columns: packed view buys nothing
+
+
+def test_planner_uses_hot_cache(table):
+    eng = RelationalMemoryEngine()
+    cols = ("A1", "A5")
+    _ = eng.register(table, cols).packed()  # warm the reorg cache
+    plan = plan_query(eng, table, cols)
+    assert plan.path == "hot"
+    # OLTP write invalidates -> back to rme
+    table.append({n: np.array([1], np.int32) for n in table.schema.names})
+    plan2 = plan_query(eng, table, cols)
+    assert plan2.path == "rme"
+
+
+# ------------------------------------------------------- select_compact
+@pytest.mark.parametrize("pred_op,k,block_rows", [
+    ("gt", 0, 128), ("lt", -50, 64), ("gt", 99, 256),  # last: ~0% selectivity
+])
+def test_select_compact_matches_oracle(table, pred_op, k, block_rows):
+    geom = TableGeometry.from_schema(table.schema, ["A1", "A9"], table.row_count)
+    words = jnp.asarray(table.words())
+    blocks, counts = select_compact(
+        words, geom, pred_word=2, pred_op=pred_op, pred_k=k,
+        block_rows=block_rows,
+    )
+    ref = select_compact_ref(words, geom, 2, "int32", pred_op, k)
+    assert int(counts.sum()) == len(ref)
+    dense = np.asarray(densify(blocks, counts, total=max(len(ref), 1)))
+    if len(ref):
+        np.testing.assert_array_equal(dense[: len(ref)], ref)
+    # zero fill beyond counts within each block
+    b = np.asarray(blocks)
+    c = np.asarray(counts)
+    for i in range(b.shape[0]):
+        assert (b[i, c[i]:] == 0).all()
+
+
+def test_select_compact_bytes_scale_with_selectivity(table):
+    """The point of the kernel: shipped bytes ∝ selected rows."""
+    geom = TableGeometry.from_schema(table.schema, ["A1"], table.row_count)
+    words = jnp.asarray(table.words())
+    _, c_all = select_compact(words, geom, pred_word=2, pred_op="gt", pred_k=-1000)
+    _, c_few = select_compact(words, geom, pred_word=2, pred_op="gt", pred_k=90)
+    assert int(c_all.sum()) == table.row_count
+    assert int(c_few.sum()) < table.row_count // 10

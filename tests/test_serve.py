@@ -1,0 +1,73 @@
+"""Serving substrate: continuous-batching session over the smoke models."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.serve import ServeSession
+from repro.serve.engine import Request
+
+
+def test_serve_session_batched_requests():
+    cfg = get_smoke_config("qwen3-8b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sess = ServeSession(model, params, batch_slots=4, max_len=64)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rid=i, prompt=rng.integers(0, cfg.vocab, 16).astype(np.int32),
+                max_new=8)
+        for i in range(6)  # more requests than slots: tests slot reuse
+    ]
+    for r in reqs:
+        sess.submit(r)
+    sess.run_to_completion()
+    for r in reqs:
+        assert r.done
+        assert 1 <= len(r.out) <= 8
+        assert all(0 <= t < cfg.padded_vocab for t in r.out)
+
+
+def test_serve_greedy_matches_manual_decode():
+    """Session output == hand-rolled prefill+decode for a single request."""
+    cfg = get_smoke_config("internlm2-20b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab, 12).astype(np.int32)
+
+    sess = ServeSession(model, params, batch_slots=1, max_len=32)
+    req = Request(rid=0, prompt=prompt, max_new=5)
+    sess.submit(req)
+    sess.run_to_completion()
+
+    toks = jnp.asarray(prompt)[None, :]
+    logits, cache = jax.jit(lambda p, b: model.prefill(p, b, 32))(
+        params, {"tokens": toks}
+    )
+    out = [int(jnp.argmax(logits, -1)[0])]
+    step = jax.jit(model.decode_step)
+    for t in range(len(prompt), len(prompt) + 4):
+        logits, cache = step(
+            params, cache, jnp.asarray([[out[-1]]], jnp.int32),
+            jnp.asarray(t, jnp.int32),
+        )
+        out.append(int(jnp.argmax(logits, -1)[0]))
+    assert req.out == out
+
+
+def test_serve_ssm_session():
+    """Attention-free arch serves through the same session machinery."""
+    cfg = get_smoke_config("mamba2-1.3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    sess = ServeSession(model, params, batch_slots=2, max_len=48)
+    rng = np.random.default_rng(2)
+    for i in range(2):
+        sess.submit(Request(rid=i, prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32), max_new=6))
+    sess.run_to_completion()
+    assert all(r.done for r in sess.queue) or not sess.queue
