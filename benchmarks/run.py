@@ -16,6 +16,7 @@ from . import (
     fig11_queries_rowsize,
     fig12_join,
     fig13_scaling,
+    fig_scan_sharing,
     fig_selectivity,
     table2_vmem_budget,
     lm_step,
@@ -30,6 +31,7 @@ MODULES = [
     fig11_queries_rowsize,
     fig12_join,
     fig13_scaling,
+    fig_scan_sharing,
     fig_selectivity,
     table2_vmem_budget,
     lm_step,

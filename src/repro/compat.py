@@ -1,0 +1,57 @@
+"""Version-portable aliases for jax APIs that moved between releases.
+
+The repo targets current jax, but the hermetic CI image pins an older
+release; everything that moved namespaces between the two goes through this
+module so call sites stay clean:
+
+* ``shard_map`` — ``jax.shard_map`` (new) vs ``jax.experimental.shard_map``
+  (old; replication checking relaxed to match the new default semantics).
+* ``set_mesh`` — ``jax.sharding.set_mesh``/``use_mesh`` context manager (new)
+  vs entering the ``Mesh`` itself (old with-mesh semantics).
+* ``pcast`` — varying-axis casts are a no-op under the old replication
+  system, which infers replicated→varying transitions itself.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax import lax
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - depends on installed jax
+    from jax._src import mesh as _mesh_lib
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, /, *, mesh=None, **kwargs):
+        # new jax resolves a missing mesh from the ambient set_mesh context;
+        # the old API requires it explicitly, so pull it from thread state
+        if mesh is None:
+            mesh = _mesh_lib.thread_resources.env.physical_mesh
+            if mesh.empty:
+                raise ValueError("shard_map: no mesh given and none active")
+        kwargs.setdefault("check_rep", False)
+        return _shard_map(f, mesh=mesh, **kwargs)
+
+try:
+    pcast = lax.pcast
+except AttributeError:  # pragma: no cover - depends on installed jax
+
+    def pcast(x, axes, to):  # noqa: ARG001 - mirror the new signature
+        return x
+
+if hasattr(jax.sharding, "set_mesh"):
+    set_mesh = jax.sharding.set_mesh
+elif hasattr(jax.sharding, "use_mesh"):  # pragma: no cover
+    set_mesh = jax.sharding.use_mesh
+else:  # pragma: no cover - depends on installed jax
+
+    @contextlib.contextmanager
+    def set_mesh(mesh):
+        with mesh:
+            yield mesh
+
+
+__all__ = ["pcast", "set_mesh", "shard_map"]

@@ -5,24 +5,32 @@ Layers (bottom-up):
   descriptor  — Requestor Eq. (1)-(6) + byte-exact software fetch model
   table       — row-major MVCC row store (the single source of truth)
   ephemeral   — ephemeral variables (lazy column-group views)
-  engine      — the RME: epoch-validated reorg cache + revision datapaths
+  engine      — the RME: epoch-validated reorg cache + device row store +
+                revision datapaths + scan-sharing batch materialization
+  executor    — BatchExecutor: coalesce pending views, one shared scan/table
   operators   — Q0-Q5 over interchangeable rme/row/col access paths
   distributed — shard_map row-bank parallel operators for the cluster meshes
   compression — dictionary + delta/FOR codecs (paper §4)
 """
 
-from .schema import WORD, Column, TableGeometry, TableSchema, benchmark_schema, paper_schema
+from .schema import (
+    WORD, Column, TableGeometry, TableSchema, benchmark_schema,
+    merge_geometries, paper_schema,
+)
 from .table import TS_INF, RelationalTable, columnar_copy
 from .descriptor import BUS_WIDTH, Descriptor, bytes_moved, descriptor_arrays, descriptors, fetch_model
 from .ephemeral import EphemeralView
-from .engine import EngineStats, RelationalMemoryEngine, ReorgCache
-from . import compression, distributed, operators, planner
+from .engine import DeviceRowStore, EngineStats, RelationalMemoryEngine, ReorgCache
+from .executor import BatchExecutor, materialize_batch
+from . import compression, distributed, executor, operators, planner
 
 __all__ = [
     "BUS_WIDTH", "WORD", "TS_INF",
-    "Column", "TableSchema", "TableGeometry", "benchmark_schema", "paper_schema",
+    "Column", "TableSchema", "TableGeometry", "benchmark_schema",
+    "merge_geometries", "paper_schema",
     "RelationalTable", "columnar_copy",
     "Descriptor", "descriptors", "descriptor_arrays", "fetch_model", "bytes_moved",
-    "EphemeralView", "EngineStats", "RelationalMemoryEngine", "ReorgCache",
-    "compression", "distributed", "operators", "planner",
+    "EphemeralView", "DeviceRowStore", "EngineStats", "RelationalMemoryEngine",
+    "ReorgCache", "BatchExecutor", "materialize_batch",
+    "compression", "distributed", "executor", "operators", "planner",
 ]

@@ -19,6 +19,7 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+from repro.compat import shard_map
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -62,7 +63,7 @@ def dist_project(
     def local(w):
         return project_xla(w, geom)
 
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh, in_specs=P(axes, None), out_specs=P(axes, None)
     )(words)
 
@@ -100,7 +101,7 @@ def dist_aggregate(
         part = jnp.stack([jnp.sum(jnp.where(mask, vals, 0.0)), jnp.sum(mask)])
         return jax.lax.psum(part, axes)
 
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh, in_specs=P(axes, None), out_specs=P()
     )(words)
 
@@ -144,7 +145,7 @@ def dist_groupby(
         )
         return jax.lax.psum(acc, axes)
 
-    out = jax.shard_map(local, mesh=mesh, in_specs=P(axes, None), out_specs=P())(words)
+    out = shard_map(local, mesh=mesh, in_specs=P(axes, None), out_specs=P())(words)
     return out[:, 0], out[:, 1]
 
 
@@ -181,7 +182,7 @@ def dist_join(
         matched = rk[pos] == s_key
         return s_val, jnp.where(matched, rv[pos], 0), matched
 
-    return jax.shard_map(
+    return shard_map(
         local,
         mesh=mesh,
         in_specs=(P(axes, None), P(axes, None)),

@@ -17,11 +17,33 @@ This module is the software incarnation of the paper's Fig. 5 datapath:
 The engine's compute path is revision-selectable (``bsl``/``pck``/``mlp``
 Pallas kernels, or the ``xla`` fused-gather path used when lowering for
 non-TPU targets), mirroring the paper's §5.2 hardware revisions.
+
+Scan-sharing batch execution
+----------------------------
+In the paper, the row store lives next to the RME — it is never copied to get
+scanned.  The software analogue is :class:`DeviceRowStore`: each table's word
+buffer is uploaded host→device **once** and kept resident, keyed by
+``(table.uid, table.version)``, so cold materializations and fused aggregates
+stop re-shipping DRAM on every call (``EngineStats.bytes_uploaded`` /
+``uploads`` count the transfers that do happen).
+
+On top of that sits :meth:`RelationalMemoryEngine.materialize_many` (driven by
+:class:`repro.core.executor.BatchExecutor`): pending ephemeral views are
+coalesced per table and served by the multi-output kernel in
+``repro.kernels.rme_project_multi`` — one Fetch-Unit stream per table per
+batch, every view's packed block emitted from that single pass.  Bus-beat
+bytes are attributed to the shared scan exactly once, via the *union* geometry
+(:func:`repro.core.schema.merge_geometries`), and every view lands in the
+:class:`ReorgCache` so subsequent accesses are hot.  ``aggregate_async`` is
+the non-blocking sibling of ``aggregate``: it returns the device-resident
+``[sum, count]`` scalar pair without forcing a host sync, so batched query
+loops no longer serialize on every aggregate.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from typing import Sequence
 
 import jax
@@ -33,7 +55,7 @@ from repro.kernels.rme_project import vmem_footprint_bytes
 
 from .descriptor import bytes_moved
 from .ephemeral import EphemeralView
-from .schema import TableGeometry
+from .schema import TableGeometry, merge_geometries
 from .table import RelationalTable
 
 
@@ -43,16 +65,22 @@ class EngineStats:
 
     hot_hits: int = 0
     cold_misses: int = 0
+    shared_scans: int = 0  # batched multi-view passes over a row store
     rows_projected: int = 0
     bytes_from_dram: int = 0  # bus-beat-accurate bytes the engine pulled
     bytes_to_cpu: int = 0  # packed bytes shipped up the hierarchy
+    bytes_uploaded: int = 0  # host→device row-store transfer bytes
+    uploads: int = 0  # host→device row-store transfer count
 
     def reset(self) -> None:
         self.hot_hits = 0
         self.cold_misses = 0
+        self.shared_scans = 0
         self.rows_projected = 0
         self.bytes_from_dram = 0
         self.bytes_to_cpu = 0
+        self.bytes_uploaded = 0
+        self.uploads = 0
 
 
 class ReorgCache:
@@ -85,16 +113,35 @@ class ReorgCache:
             return None
         return arr
 
+    def peek(self, key: tuple, version: int) -> jax.Array | None:
+        """Hotness probe without side effects: stale entries are left in place.
+
+        The planner uses this — costing a query must not mutate cache state
+        (``get`` deletes stale entries as it misses, which made planning a
+        write operation).
+        """
+        hit = self._entries.get(key)
+        if hit is None:
+            return None
+        epoch, ver, arr = hit
+        if epoch != self.epoch or ver != version:
+            return None
+        return arr
+
     def put(self, key: tuple, version: int, arr: jax.Array) -> None:
         nbytes = arr.size * arr.dtype.itemsize
         if nbytes > self.capacity_bytes:
             return  # larger than the SPM: streamed, never cached (paper §6 scaling)
+        old = self._entries.pop(key, None)
+        if old is not None:
+            self._bytes -= old[2].size * old[2].dtype.itemsize
         # evict stale-epoch entries first, then FIFO until it fits
         for k in [k for k, (e, _, _) in self._entries.items() if e != self.epoch]:
             _, _, a = self._entries.pop(k)
             self._bytes -= a.size * a.dtype.itemsize
         while self._bytes + nbytes > self.capacity_bytes and self._entries:
-            _, (_, _, a) = self._entries.popitem()
+            oldest = next(iter(self._entries))  # FIFO: evict the oldest insert
+            _, _, a = self._entries.pop(oldest)
             self._bytes -= a.size * a.dtype.itemsize
         self._entries[key] = (self.epoch, version, arr)
         self._bytes += nbytes
@@ -102,6 +149,66 @@ class ReorgCache:
     @property
     def occupancy_bytes(self) -> int:
         return self._bytes
+
+
+class DeviceRowStore:
+    """Device-resident row-store buffers, keyed by ``(table.uid, version)``.
+
+    The paper's row store sits beside the RME in DRAM; nothing ever copies it
+    to scan it.  Our 'DRAM' is host numpy, so the first access to a table must
+    ship its word buffer to the device — but only the first: the buffer stays
+    resident until the table mutates (version bump), at which point the next
+    access uploads the new version and drops the old one.  One buffer is kept
+    per table identity (``uid``, never recycled — unlike ``id()``), a weakref
+    finalizer drops the buffer when its table is garbage collected, and every
+    upload is charged to the engine's PMU (``bytes_uploaded`` / ``uploads``).
+    """
+
+    def __init__(self, stats: EngineStats | None = None):
+        self.stats = stats
+        self._buffers: dict[int, tuple[int, jax.Array]] = {}
+        self._finalized: set[int] = set()  # uids with a registered finalizer
+
+    @staticmethod
+    def _finalize_entry(store_ref: "weakref.ref[DeviceRowStore]", uid: int) -> None:
+        store = store_ref()
+        if store is not None:
+            store._buffers.pop(uid, None)
+            store._finalized.discard(uid)
+
+    def get(self, table: RelationalTable) -> jax.Array:
+        ent = self._buffers.get(table.uid)
+        if ent is not None and ent[0] == table.version:
+            return ent[1]
+        host = table.words()
+        arr = jnp.asarray(host)
+        if table.uid not in self._finalized:
+            # dead tables must not pin device memory: evict with their owner.
+            # The finalizer must hold the store weakly — a strong reference
+            # (e.g. the bound `self._buffers.pop`) would let any long-lived
+            # table pin a dead engine's whole buffer set.  One finalizer per
+            # uid: clear()/drop() + re-upload must not accumulate more.
+            weakref.finalize(table, self._finalize_entry, weakref.ref(self), table.uid)
+            self._finalized.add(table.uid)
+        self._buffers[table.uid] = (table.version, arr)
+        if self.stats is not None:
+            self.stats.uploads += 1
+            self.stats.bytes_uploaded += host.size * host.itemsize
+        return arr
+
+    def contains(self, table: RelationalTable) -> bool:
+        ent = self._buffers.get(table.uid)
+        return ent is not None and ent[0] == table.version
+
+    def drop(self, table: RelationalTable) -> None:
+        self._buffers.pop(table.uid, None)
+
+    def clear(self) -> None:
+        self._buffers.clear()
+
+    @property
+    def occupancy_bytes(self) -> int:
+        return sum(a.size * a.dtype.itemsize for _, a in self._buffers.values())
 
 
 class RelationalMemoryEngine:
@@ -126,6 +233,7 @@ class RelationalMemoryEngine:
         self.interpret = interpret
         self.cache = ReorgCache(cache_bytes)
         self.stats = EngineStats()
+        self.rowstore = DeviceRowStore(self.stats)
 
     # ---------------------------------------------------------------- config
     def register(
@@ -152,7 +260,11 @@ class RelationalMemoryEngine:
 
     # --------------------------------------------------------------- engine
     def _key(self, table: RelationalTable, geom: TableGeometry) -> tuple:
-        return (id(table), geom.cache_key(), self.revision)
+        return (table.uid, geom.cache_key(), self.revision)
+
+    def device_words(self, table: RelationalTable) -> jax.Array:
+        """The table's device-resident word buffer (uploaded at most once per version)."""
+        return self.rowstore.get(table)
 
     def materialize(self, view: EphemeralView) -> jax.Array:
         """Assemble the packed column group for ``view`` (cold) or serve it hot."""
@@ -163,7 +275,7 @@ class RelationalMemoryEngine:
             self.stats.hot_hits += 1
             return hot
         self.stats.cold_misses += 1
-        words = jnp.asarray(table.words())
+        words = self.device_words(table)
         packed = K.project_any(
             words, geom, revision=self.revision, block_rows=self.block_rows,
             interpret=self.interpret,
@@ -174,6 +286,102 @@ class RelationalMemoryEngine:
         self.stats.bytes_to_cpu += moved["columnar"]
         self.cache.put(key, table.version, packed)
         return packed
+
+    def materialize_many(self, views: Sequence[EphemeralView]) -> list[jax.Array]:
+        """Materialize a batch of views with one shared scan per table.
+
+        Views are coalesced per table; each table's cold views are served by a
+        single pass of the multi-output kernel (``rme_project_multi``), its
+        bus-beat bytes charged **once** via the union geometry.  Hot views are
+        served from the reorganization cache exactly as in :meth:`materialize`,
+        and every cold result is cached so the batch warms the SPM for all of
+        its members.  Results are returned in input order.
+        """
+        results: list[jax.Array | None] = [None] * len(views)
+        pending: dict[int, list[tuple[int, EphemeralView, tuple]]] = {}
+        tables: dict[int, RelationalTable] = {}
+        for i, view in enumerate(views):
+            key = self._key(view.table, view.geometry)
+            hot = self.cache.get(key, view.table.version)
+            if hot is not None:
+                self.stats.hot_hits += 1
+                results[i] = hot
+                continue
+            pending.setdefault(view.table.uid, []).append((i, view, key))
+            tables[view.table.uid] = view.table
+        for tid, entries in pending.items():
+            table = tables[tid]
+            uniq: dict[tuple, TableGeometry] = {}
+            for _, view, key in entries:
+                uniq.setdefault(key, view.geometry)
+            keys = tuple(uniq)
+            geoms = tuple(uniq.values())
+            words = self.device_words(table)
+            if len(geoms) == 1:
+                # nothing to share: stay on the per-view datapath (keeps the
+                # bsl/pck revision kernels) and don't count a shared scan
+                packed = (K.project_any(
+                    words, geoms[0], revision=self.revision,
+                    block_rows=self.block_rows, interpret=self.interpret,
+                ),)
+                self.stats.rows_projected += geoms[0].row_count
+                self.stats.bytes_from_dram += bytes_moved(geoms[0])["rme"]
+            else:
+                packed = K.project_multi(
+                    words, geoms, revision=self.revision,
+                    block_rows=self.block_rows, interpret=self.interpret,
+                )
+                union = merge_geometries(geoms)
+                self.stats.shared_scans += 1
+                self.stats.rows_projected += union.row_count
+                self.stats.bytes_from_dram += bytes_moved(union)["rme"]
+            self.stats.cold_misses += len(entries)
+            by_key = dict(zip(keys, packed))
+            for key, geom in zip(keys, geoms):
+                self.stats.bytes_to_cpu += geom.row_count * geom.out_bytes_per_row
+                self.cache.put(key, table.version, by_key[key])
+            for i, _, key in entries:
+                results[i] = by_key[key]
+        return results  # type: ignore[return-value]
+
+    def aggregate_async(
+        self,
+        table: RelationalTable,
+        agg_col: str,
+        pred_col: str | None = None,
+        pred_op: str = "none",
+        pred_k=0,
+        snapshot_ts: int | None = None,
+    ) -> jax.Array:
+        """Non-blocking fused aggregate: returns the device ``[sum, count]`` pair.
+
+        Nothing syncs with the host here — the caller decides when (whether)
+        to pull the scalars down, so batched query loops can enqueue many
+        aggregates before blocking once.  The row store is read from the
+        device-resident buffer: repeated aggregates over an unchanged table
+        perform zero host→device transfers after the first call.  No
+        ``bytes_to_cpu`` are charged here — nothing crosses to the host until
+        a caller syncs (the blocking :meth:`aggregate` charges its 8 bytes).
+        """
+        schema = table.schema
+        agg_word = schema.word_offset(agg_col)
+        agg_dtype = schema.column(agg_col).dtype
+        if pred_col is None:
+            pred_word, pred_dtype = agg_word, agg_dtype
+        else:
+            pred_word = schema.word_offset(pred_col)
+            pred_dtype = schema.column(pred_col).dtype
+        ts_word = schema.row_words if snapshot_ts is not None else -1
+        ts = table.now() if snapshot_ts is None else snapshot_ts
+        out = K.aggregate(
+            self.device_words(table), agg_word=agg_word, agg_dtype=agg_dtype,
+            pred_word=pred_word, pred_dtype=pred_dtype, pred_op=pred_op,
+            pred_k=pred_k, ts=ts, ts_word=ts_word,
+            block_rows=self.block_rows, interpret=self.interpret,
+        )
+        self.stats.cold_misses += 1
+        self.stats.rows_projected += table.row_count
+        return out
 
     def aggregate(
         self,
@@ -187,27 +395,15 @@ class RelationalMemoryEngine:
         """Fused near-memory ``SELECT SUM(agg), COUNT(*) WHERE pred`` (Q0/Q3).
 
         Only a 2-float scalar leaves the engine; the MVCC snapshot test is
-        fused when a snapshot time is given.
+        fused when a snapshot time is given.  This is the blocking wrapper
+        around :meth:`aggregate_async` — the ``float()`` calls are the only
+        host sync.
         """
-        schema = table.schema
-        agg_word = schema.word_offset(agg_col)
-        agg_dtype = schema.column(agg_col).dtype
-        if pred_col is None:
-            pred_word, pred_dtype = agg_word, agg_dtype
-        else:
-            pred_word = schema.word_offset(pred_col)
-            pred_dtype = schema.column(pred_col).dtype
-        ts_word = schema.row_words if snapshot_ts is not None else -1
-        ts = table.now() if snapshot_ts is None else snapshot_ts
-        out = K.aggregate(
-            jnp.asarray(table.words()), agg_word=agg_word, agg_dtype=agg_dtype,
-            pred_word=pred_word, pred_dtype=pred_dtype, pred_op=pred_op,
-            pred_k=pred_k, ts=ts, ts_word=ts_word,
-            block_rows=self.block_rows, interpret=self.interpret,
+        out = self.aggregate_async(
+            table, agg_col, pred_col=pred_col, pred_op=pred_op, pred_k=pred_k,
+            snapshot_ts=snapshot_ts,
         )
-        self.stats.cold_misses += 1
-        self.stats.rows_projected += table.row_count
-        self.stats.bytes_to_cpu += 8
+        self.stats.bytes_to_cpu += 8  # the [sum, count] pair crosses on sync
         return float(out[0]), float(out[1])
 
     def vmem_budget_bytes(self, geom: TableGeometry) -> int:

@@ -65,7 +65,7 @@ class EphemeralView:
     def valid_mask(self) -> jax.Array:
         """MVCC validity of each physical row at the view's snapshot time."""
         ts = self.table.now() if self.snapshot_ts is None else self.snapshot_ts
-        words = jnp.asarray(self.table.words())
+        words = self.engine.device_words(self.table)
         begin = words[:, self.table.schema.row_words]
         end = words[:, self.table.schema.row_words + 1]
         return (begin <= ts) & (ts < end)

@@ -19,6 +19,7 @@ benchmarks report time + exact bytes moved per path.
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from typing import Mapping
 
 import jax
@@ -131,7 +132,7 @@ def q2_select_project(
         geom = TableGeometry.from_schema(table.schema, [proj], table.row_count)
         pw = table.schema.word_offset(pred)
         packed, mask = filter_project(
-            jnp.asarray(table.words()), geom, pred_word=pw,
+            engine.device_words(table), geom, pred_word=pw,
             pred_dtype=table.schema.column(pred).dtype, pred_op="gt", pred_k=k,
             block_rows=engine.block_rows, interpret=engine.interpret,
         )
@@ -179,7 +180,7 @@ def q4_groupby_avg(
 
         s = table.schema
         sums, counts = groupby_sum(
-            jnp.asarray(table.words()), group_word=s.word_offset(group),
+            engine.device_words(table), group_word=s.word_offset(group),
             agg_word=s.word_offset(agg), num_groups=num_groups,
             agg_dtype=s.column(agg).dtype, pred_word=s.word_offset(pred),
             pred_dtype=s.column(pred).dtype, pred_op="lt", pred_k=k,
@@ -207,6 +208,90 @@ class JoinResult:
     matched: jax.Array  # bool mask
 
 
+# Sorted build-side index cache for q5: argsort over the build table is the
+# join's dominant host-side cost, and the build side is usually the stable
+# dimension table — re-sorting it per probe throws that work away.  Keyed by
+# (table uid, version, key col, payload col, path) so any OLTP mutation of
+# the build side invalidates, exactly like the reorg cache (uid, not id():
+# the cache is module-global and must never alias a recycled address).  The
+# "col" path is never cached — its data comes from a caller-supplied colstore
+# the table's version says nothing about.  FIFO-bounded by bytes, and a dead
+# build table's entries are dropped by a weakref finalizer so the global
+# cache cannot pin device arrays of collected tables.
+_BUILD_INDEX_CACHE: dict[tuple, tuple[jax.Array, jax.Array]] = {}
+_BUILD_INDEX_CAPACITY = 64 << 20
+_build_index_bytes = 0  # incremental occupancy (kept exact by every mutation)
+_BUILD_INDEX_FINALIZED: set[int] = set()
+JOIN_BUILD_STATS = {"hits": 0, "misses": 0}
+
+
+def _entry_bytes(entry: tuple[jax.Array, jax.Array]) -> int:
+    return sum(a.size * a.dtype.itemsize for a in entry)
+
+
+def _pop_build_entry(k: tuple) -> None:
+    global _build_index_bytes
+    entry = _BUILD_INDEX_CACHE.pop(k, None)
+    if entry is not None:
+        _build_index_bytes -= _entry_bytes(entry)
+
+
+def clear_join_build_cache() -> None:
+    global _build_index_bytes
+    _BUILD_INDEX_CACHE.clear()
+    _build_index_bytes = 0
+    JOIN_BUILD_STATS["hits"] = 0
+    JOIN_BUILD_STATS["misses"] = 0
+
+
+def _drop_build_entries(uid: int, keep_version: int | None = None) -> None:
+    """Drop a table's cached indexes (all of them, or all but one version)."""
+    if keep_version is None:
+        _BUILD_INDEX_FINALIZED.discard(uid)
+    for k in [k for k in _BUILD_INDEX_CACHE
+              if k[0] == uid and k[1] != keep_version]:
+        _pop_build_entry(k)
+
+
+def _probe_build_index(
+    r_table: RelationalTable, key: str, r_proj: str, path: str
+) -> tuple[jax.Array, jax.Array] | None:
+    """Warm-path probe, called *before* the build side is materialized — a hit
+    must skip the build-side column reads entirely, not just the argsort."""
+    if path == "col":  # colstore contents are not keyed by the table version
+        return None
+    hit = _BUILD_INDEX_CACHE.get((r_table.uid, r_table.version, key, r_proj, path))
+    if hit is not None:
+        JOIN_BUILD_STATS["hits"] += 1
+    else:
+        JOIN_BUILD_STATS["misses"] += 1
+    return hit
+
+
+def _insert_build_index(
+    entry: tuple[jax.Array, jax.Array],
+    r_table: RelationalTable,
+    key: str,
+    r_proj: str,
+    path: str,
+) -> None:
+    global _build_index_bytes
+    if path == "col":
+        return
+    # versions are monotonic: this table's older entries can never hit again
+    _drop_build_entries(r_table.uid, keep_version=r_table.version)
+    nbytes = _entry_bytes(entry)
+    if nbytes > _BUILD_INDEX_CAPACITY:
+        return  # larger than the whole budget: never cached
+    while _build_index_bytes + nbytes > _BUILD_INDEX_CAPACITY and _BUILD_INDEX_CACHE:
+        _pop_build_entry(next(iter(_BUILD_INDEX_CACHE)))
+    _BUILD_INDEX_CACHE[(r_table.uid, r_table.version, key, r_proj, path)] = entry
+    _build_index_bytes += nbytes
+    if r_table.uid not in _BUILD_INDEX_FINALIZED:
+        weakref.finalize(r_table, _drop_build_entries, r_table.uid)
+        _BUILD_INDEX_FINALIZED.add(r_table.uid)
+
+
 def q5_hash_join(
     engine: RelationalMemoryEngine,
     s_table: RelationalTable,
@@ -229,23 +314,35 @@ def q5_hash_join(
     the single-pass hash table build + probe of the paper, but MXU/VPU-friendly
     (no dynamic-size hash buckets) — a TPU adaptation noted in DESIGN.md.
     """
+    # probe the sorted-index cache before touching the build side at all: a
+    # warm hit skips the build-side column reads, not just the argsort
+    cached = _probe_build_index(r_table, key, r_proj, path)
     if path == "rme":
         sv = engine.register(s_table, (s_proj, key))
-        rv = engine.register(r_table, (key, r_proj))
-        s_key = sv.packed()[:, sv.column_words(key)[0]]
-        s_val = sv.packed()[:, sv.column_words(s_proj)[0]]
-        r_key = rv.packed()[:, rv.column_words(key)[0]]
-        r_val = rv.packed()[:, rv.column_words(r_proj)[0]]
+        if cached is None:
+            rv = engine.register(r_table, (key, r_proj))
+            # both sides go through the batch path: one shared scan per table
+            s_packed, r_packed = engine.materialize_many([sv, rv])
+            r_key = r_packed[:, rv.column_words(key)[0]]
+            r_val = r_packed[:, rv.column_words(r_proj)[0]]
+        else:
+            s_packed = sv.packed()
+        s_key = s_packed[:, sv.column_words(key)[0]]
+        s_val = s_packed[:, sv.column_words(s_proj)[0]]
     else:
         view = None
         s_key = _col_any(engine, s_table, s_colstore, view, key, path)
         s_val = _col_any(engine, s_table, s_colstore, view, s_proj, path)
-        r_key = _col_any(engine, r_table, r_colstore, view, key, path)
-        r_val = _col_any(engine, r_table, r_colstore, view, r_proj, path)
+        if cached is None:
+            r_key = _col_any(engine, r_table, r_colstore, view, key, path)
+            r_val = _col_any(engine, r_table, r_colstore, view, r_proj, path)
 
-    order = jnp.argsort(r_key)
-    rk_sorted = r_key[order]
-    rv_sorted = r_val[order]
+    if cached is not None:
+        rk_sorted, rv_sorted = cached
+    else:
+        order = jnp.argsort(r_key)
+        rk_sorted, rv_sorted = r_key[order], r_val[order]
+        _insert_build_index((rk_sorted, rv_sorted), r_table, key, r_proj, path)
     pos = jnp.searchsorted(rk_sorted, s_key)
     pos = jnp.clip(pos, 0, rk_sorted.shape[0] - 1)
     matched = rk_sorted[pos] == s_key

@@ -28,7 +28,7 @@ from typing import Sequence
 
 from .descriptor import bytes_moved
 from .engine import RelationalMemoryEngine
-from .schema import TableGeometry
+from .schema import MAX_ENABLED_COLUMNS, TableGeometry, merge_geometries
 from .table import RelationalTable
 
 
@@ -50,10 +50,10 @@ def plan_query(
     aggregate_only: bool = False,
 ) -> Plan:
     """Choose the access path for a query touching ``columns``."""
-    if len(columns) > 11:
-        # beyond the configuration port's Q cap (paper Table 1: max 11
-        # enabled columns) the engine cannot express the view — and at that
-        # projectivity full rows are the right answer anyway (Figure 1)
+    if len(columns) > MAX_ENABLED_COLUMNS:
+        # beyond the configuration port's Q cap the engine cannot express the
+        # view — and at that projectivity full rows are the right answer
+        # anyway (Figure 1)
         n_bytes = table.row_count * table.schema.row_bytes
         return Plan(path="row", est_bytes=n_bytes, alternatives={"row": n_bytes})
     geom = TableGeometry.from_schema(table.schema, columns, table.row_count)
@@ -63,15 +63,86 @@ def plan_query(
         "rme": moved["rme"],
         "hot": moved["columnar"],
     }
-    # hot is only available if the reorganization cache holds a live entry
-    key = (id(table), geom.cache_key(), engine.revision)
-    hot_entry = engine.cache.get(key, table.version)
+    # hot is only available if the reorganization cache holds a live entry;
+    # peek() probes without get()'s delete-on-stale side effect — planning a
+    # query must not mutate cache state
+    key = (table.uid, geom.cache_key(), engine.revision)
+    hot_entry = engine.cache.peek(key, table.version)
     if hot_entry is None:
         costs.pop("hot")
     if aggregate_only and len(columns) <= 2:
         costs["fused"] = 8  # the engine returns [sum, count]
     path = min(costs, key=costs.get)
     return Plan(path=path, est_bytes=costs[path], alternatives=costs)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPlan:
+    """Co-planned query batch over one table (scan-sharing credit applied).
+
+    ``shared`` is True when serving every rme-path view from one multi-output
+    scan moves fewer bytes than materializing each independently; the engine's
+    ``materialize_many`` is then the chosen executor.  Views the per-query
+    planner already routes elsewhere (hot cache, fused aggregate, full-row
+    scan) keep their individual plans and costs on both sides of the
+    comparison.
+    """
+
+    shared: bool
+    est_bytes: int  # cost of the chosen strategy
+    shared_bytes: int  # union-scan cost: one pass serves all rme views
+    independent_bytes: int  # sum of the per-view plans
+    per_view: tuple[Plan, ...]
+
+    def __str__(self) -> str:
+        return (
+            f"BatchPlan({'shared' if self.shared else 'independent'},"
+            f" est {self.est_bytes:,} B; shared={self.shared_bytes:,},"
+            f" independent={self.independent_bytes:,}, views={len(self.per_view)})"
+        )
+
+
+def plan_batch(
+    engine: RelationalMemoryEngine,
+    table: RelationalTable,
+    groups: Sequence[Sequence[str]],
+) -> BatchPlan:
+    """Co-plan several column-group queries over ``table``.
+
+    The per-query planner prices each view alone; the batch planner then
+    credits a shared scan — every view the RME can express (≤ Q-cap columns,
+    not already hot) is priced as part of **one** pass whose bus-beat bytes
+    follow the union geometry (overlapping column intervals are fetched once
+    for the whole batch), which is exactly what ``materialize_many`` executes.
+    A view whose solo plan fell to the row path at the projectivity crossover
+    still joins the shared scan: co-planned, its columns ride a stream that is
+    already paid for.
+    """
+    plans = tuple(plan_query(engine, table, list(g)) for g in groups)
+    independent = sum(p.est_bytes for p in plans)
+    shareable = [
+        p.path in ("rme", "row") and len(g) <= MAX_ENABLED_COLUMNS
+        for g, p in zip(groups, plans)
+    ]
+    shared_geoms = [
+        TableGeometry.from_schema(table.schema, list(g), table.row_count)
+        for g, ok in zip(groups, shareable)
+        if ok
+    ]
+    unshared = sum(p.est_bytes for p, ok in zip(plans, shareable) if not ok)
+    if len(shared_geoms) >= 2:
+        union = merge_geometries(shared_geoms)
+        shared_bytes = bytes_moved(union)["rme"] + unshared
+    else:
+        shared_bytes = independent
+    shared = shared_bytes < independent
+    return BatchPlan(
+        shared=shared,
+        est_bytes=min(shared_bytes, independent),
+        shared_bytes=shared_bytes,
+        independent_bytes=independent,
+        per_view=plans,
+    )
 
 
 def execute_sum(

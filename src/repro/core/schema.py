@@ -21,6 +21,11 @@ import numpy as np
 
 WORD = 4  # bytes per TPU lane word; all layout math is word-aligned.
 
+# The configuration port's Q cap (paper Table 1: at most 11 enabled columns).
+# Per-view geometries and the planner both honor it; union geometries built
+# for shared-scan *accounting* may exceed it (see merge_geometries).
+MAX_ENABLED_COLUMNS = 11
+
 # numpy dtypes allowed for decoded columns. char fields are fixed-width byte
 # strings handled as raw words.
 _SUPPORTED = {
@@ -142,7 +147,7 @@ class TableGeometry:
     col_widths: tuple[int, ...]  # C_Aj  (bytes)
     col_rel_offsets: tuple[int, ...]  # O_Aj  (bytes, relative chain)
     frame: int = 0  # F
-    max_columns: int = 11  # paper's implementation artifact; kept as default cap
+    max_columns: int = MAX_ENABLED_COLUMNS  # the configuration port's Q cap
 
     def __post_init__(self):
         q = len(self.col_widths)
@@ -240,6 +245,46 @@ class TableGeometry:
             col_rel_offsets=tuple(rel),
             frame=frame,
         )
+
+
+def merge_geometries(geoms: Sequence[TableGeometry]) -> TableGeometry:
+    """Union geometry of several views over one row layout (the shared scan).
+
+    When the engine serves a batch of ephemeral views from a single Fetch-Unit
+    stream, the bytes it pulls from the row store are governed by the *union*
+    of the enabled-column byte intervals: overlapping and adjacent intervals
+    collapse into one burst chain, so co-planned views are charged for the
+    shared scan exactly once.  ``max_columns`` is lifted to whatever the merge
+    produces — the union is an accounting geometry, not a configuration-port
+    write, so the paper's Q cap does not apply.
+    """
+    if not geoms:
+        raise ValueError("merge_geometries needs at least one geometry")
+    row_bytes = geoms[0].row_bytes
+    if any(g.row_bytes != row_bytes for g in geoms):
+        raise ValueError("cannot merge geometries over different row layouts")
+    intervals = sorted(
+        (o, o + w)
+        for g in geoms
+        for o, w in zip(g.abs_offsets, g.col_widths)
+    )
+    merged: list[list[int]] = []
+    for s, e in intervals:
+        if merged and s <= merged[-1][1]:
+            merged[-1][1] = max(merged[-1][1], e)
+        else:
+            merged.append([s, e])
+    widths = tuple(e - s for s, e in merged)
+    rel = [merged[0][0]]
+    for j in range(1, len(merged)):
+        rel.append(merged[j][0] - merged[j - 1][0])
+    return TableGeometry(
+        row_bytes=row_bytes,
+        row_count=max(g.row_count for g in geoms),
+        col_widths=widths,
+        col_rel_offsets=tuple(rel),
+        max_columns=max(len(merged), MAX_ENABLED_COLUMNS),
+    )
 
 
 def paper_schema() -> TableSchema:

@@ -14,11 +14,17 @@ isolation, exactly the scheme the paper sketches.
 
 from __future__ import annotations
 
+import itertools
 from typing import Mapping, Sequence
 
 import numpy as np
 
 from .schema import WORD, Column, TableSchema
+
+# process-unique table identities for engine-side caches: id() values are
+# recycled by the allocator, so a dead table's address can resurrect its
+# cache entries — uid never repeats
+_TABLE_UIDS = itertools.count()
 
 TS_INF = np.iinfo(np.int32).max
 
@@ -68,6 +74,7 @@ class RelationalTable:
         )
         self.row_count = 0
         self.version = 0
+        self.uid = next(_TABLE_UIDS)  # never-recycled cache identity
         self._clock = 0
 
     # ------------------------------------------------------------------ time

@@ -19,6 +19,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+from repro.compat import pcast, shard_map
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
@@ -64,8 +65,8 @@ def pipeline_apply(
                 return (nxt, out), None
 
             # carries become pod-varying inside the loop; mark them as such
-            zero = lax.pcast(jnp.zeros_like(mb[0]), (axis,), to="varying")
-            out0 = lax.pcast(jnp.zeros_like(mb), (axis,), to="varying")
+            zero = pcast(jnp.zeros_like(mb[0]), (axis,), to="varying")
+            out0 = pcast(jnp.zeros_like(mb), (axis,), to="varying")
             (_, out), _ = lax.scan(
                 tick, (zero, out0), jnp.arange(n_ticks)
             )
@@ -76,7 +77,7 @@ def pipeline_apply(
                 out = lax.psum(out * mask, axis)
             return out.reshape((-1,) + out.shape[2:])
 
-        return jax.shard_map(
+        return shard_map(
             local,
             mesh=mesh,
             in_specs=(P(axis), P()),

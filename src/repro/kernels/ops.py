@@ -21,6 +21,7 @@ from .rme_project import (
     project_xla,
     vmem_footprint_bytes,
 )
+from .rme_project_multi import project_multi, project_multi_xla
 
 REVISIONS = ("bsl", "pck", "mlp", "xla")
 
@@ -47,6 +48,8 @@ __all__ = [
     "groupby_sum",
     "project",
     "project_any",
+    "project_multi",
+    "project_multi_xla",
     "project_xla",
     "vmem_footprint_bytes",
 ]

@@ -28,6 +28,7 @@ import traceback
 
 import jax
 import jax.numpy as jnp
+from repro.compat import set_mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, ARCH_NAMES, cell_status, get_config
@@ -57,7 +58,7 @@ def lower_cell(arch: str, shape: str, multi_pod: bool):
     mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
     model = build_model(cfg)
 
-    with axis_rules(rules, mesh_shape), jax.sharding.set_mesh(mesh):
+    with axis_rules(rules, mesh_shape), set_mesh(mesh):
         if sh.kind == "train":
             state_shapes = S.train_state_shapes(model, cfg)
             state_shardings = S.train_state_shardings(mesh, state_shapes)

@@ -16,6 +16,7 @@ import argparse
 
 import jax
 import jax.numpy as jnp
+from repro.compat import set_mesh
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
@@ -59,7 +60,7 @@ def main() -> None:
     store.ingest(tok, lab)
     pipe = TrainPipeline(store, batch_size=args.batch, seed=0)
 
-    with axis_rules(rules, mesh_shape), jax.sharding.set_mesh(mesh):
+    with axis_rules(rules, mesh_shape), set_mesh(mesh):
         state = init_train_state(model, jax.random.PRNGKey(0))
         state_sh = S.train_state_shardings(
             mesh, jax.eval_shape(lambda: state)

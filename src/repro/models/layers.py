@@ -21,6 +21,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+from repro.compat import shard_map
 from jax import lax
 
 from repro.distributed.partitioning import (
@@ -423,7 +424,7 @@ def _attention_decode_sp(
         out = acc_tot / jnp.maximum(l_tot[..., None], 1e-30)
         return out, ck, cv
 
-    out, ck, cv = jax.shard_map(
+    out, ck, cv = shard_map(
         local,
         in_specs=(rep_spec, rep_spec, rep_spec, cache_spec, cache_spec,
                   jax.sharding.PartitionSpec()),
@@ -739,7 +740,7 @@ def moe_block(params: Params, spec: MoESpec, x: jax.Array) -> jax.Array:
         y = lax.dynamic_slice(y, (bshard * tl, 0), (tl, d))
         return y.reshape(bl, sl, d)
 
-    y = jax.shard_map(
+    y = shard_map(
         local_stationary if stationary else local_gather,
         in_specs=(
             P(bspec, None, None),  # x: batch-sharded, replicated over model

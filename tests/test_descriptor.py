@@ -7,12 +7,13 @@ satisfy the paper's alignment/over-fetch invariants.
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import TableGeometry, benchmark_schema, descriptors, fetch_model
-from repro.core.descriptor import bytes_moved, descriptor_arrays
+from repro.core.descriptor import bytes_moved
 from repro.core.schema import WORD
-from repro.core.table import RelationalTable
 
 
 @st.composite
@@ -88,37 +89,5 @@ def test_bytes_moved_ordering(geom):
     assert m["columnar"] == geom.row_count * geom.out_bytes_per_row
 
 
-def test_vectorized_matches_scalar():
-    schema = benchmark_schema(64, 4)
-    geom = TableGeometry.from_schema(schema, ["A1", "A7", "A13"], 100)
-    arrs = descriptor_arrays(geom)
-    descs = descriptors(geom)
-    for d in descs:
-        assert arrs["r_addr"][d.i, d.j] == d.r_addr
-        assert arrs["r_burst"][d.i, d.j] == d.r_burst
-        assert arrs["w_addr"][d.i, d.j] == d.w_addr
-        assert arrs["e_start"][d.i, d.j] == d.e_start
-        assert arrs["e_end"][d.i, d.j] == d.e_end
-
-
-def test_offset_insensitivity():
-    """Fig. 6's second message: burst count is offset-independent except when
-    the column straddles a bus line (the paper's spikes at offsets 13-15,
-    29-31, 45-47 — at word granularity: an 8B column at offset ≡ 12 mod 16)."""
-    n = 64
-    beats = {}
-    for off_words in range(0, 14):
-        geom = TableGeometry(
-            row_bytes=64, row_count=n, col_widths=(8,),
-            col_rel_offsets=(off_words * WORD,),
-        )
-        rng = np.random.default_rng(0)
-        mem = rng.integers(0, 256, geom.row_bytes * n, dtype=np.uint8)
-        _, b = fetch_model(mem, geom, bus_width=16)
-        beats[off_words * WORD] = b
-    base = beats[0]
-    for off, b in beats.items():
-        if off % 16 == 12:  # 8B column starting 4B before a bus boundary
-            assert b == 2 * base, (off, b, base)  # the paper's spike
-        else:
-            assert b == base, (off, b, base)
+# test_vectorized_matches_scalar / test_offset_insensitivity live in
+# test_descriptor_basic.py so they run without hypothesis.

@@ -1,0 +1,49 @@
+"""Deterministic descriptor tests split out of test_descriptor.py.
+
+test_descriptor.py is hypothesis-based end to end (its geometry strategy is a
+``@st.composite``), so it importorskips when hypothesis is absent; these
+deterministic checks of the Requestor math keep running in that tier-1
+environment.
+"""
+
+import numpy as np
+
+from repro.core import TableGeometry, benchmark_schema, descriptors, fetch_model
+from repro.core.descriptor import descriptor_arrays
+from repro.core.schema import WORD
+
+
+def test_vectorized_matches_scalar():
+    schema = benchmark_schema(64, 4)
+    geom = TableGeometry.from_schema(schema, ["A1", "A7", "A13"], 100)
+    arrs = descriptor_arrays(geom)
+    descs = descriptors(geom)
+    for d in descs:
+        assert arrs["r_addr"][d.i, d.j] == d.r_addr
+        assert arrs["r_burst"][d.i, d.j] == d.r_burst
+        assert arrs["w_addr"][d.i, d.j] == d.w_addr
+        assert arrs["e_start"][d.i, d.j] == d.e_start
+        assert arrs["e_end"][d.i, d.j] == d.e_end
+
+
+def test_offset_insensitivity():
+    """Fig. 6's second message: burst count is offset-independent except when
+    the column straddles a bus line (the paper's spikes at offsets 13-15,
+    29-31, 45-47 — at word granularity: an 8B column at offset ≡ 12 mod 16)."""
+    n = 64
+    beats = {}
+    for off_words in range(0, 14):
+        geom = TableGeometry(
+            row_bytes=64, row_count=n, col_widths=(8,),
+            col_rel_offsets=(off_words * WORD,),
+        )
+        rng = np.random.default_rng(0)
+        mem = rng.integers(0, 256, geom.row_bytes * n, dtype=np.uint8)
+        _, b = fetch_model(mem, geom, bus_width=16)
+        beats[off_words * WORD] = b
+    base = beats[0]
+    for off, b in beats.items():
+        if off % 16 == 12:  # 8B column starting 4B before a bus boundary
+            assert b == 2 * base, (off, b, base)  # the paper's spike
+        else:
+            assert b == base, (off, b, base)

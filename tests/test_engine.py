@@ -2,7 +2,6 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
 
@@ -90,34 +89,6 @@ def test_mvcc_update_creates_new_version(table):
     assert len(a1_old) == n0
 
 
-@given(st.lists(st.sampled_from(["append", "delete", "update"]),
-                min_size=1, max_size=12))
-@settings(max_examples=30, deadline=None)
-def test_mvcc_snapshot_isolation_property(ops_seq):
-    """Any interleaving of OLTP ops: old snapshots are immutable."""
-    rng = np.random.default_rng(7)
-    schema = benchmark_schema(32, 4)
-    t = RelationalTable.from_columns(
-        schema, {c.name: rng.integers(0, 10, 20).astype(np.int32)
-                 for c in schema.columns}
-    )
-    snapshots = [(t.now(), t.to_rows())]
-    for op in ops_seq:
-        live = np.nonzero(t.snapshot_mask())[0]
-        if op == "append":
-            t.append({c.name: rng.integers(0, 10, 3).astype(np.int32)
-                      for c in schema.columns})
-        elif op == "delete" and len(live):
-            t.delete(live[: max(1, len(live) // 4)])
-        elif op == "update" and len(live):
-            t.update(live[:2], {"A1": np.full(2, 77, np.int32)})
-        snapshots.append((t.now(), t.to_rows()))
-    for ts, expect in snapshots:
-        got = t.to_rows(ts)
-        for name in expect:
-            np.testing.assert_array_equal(got[name], expect[name])
-
-
 def test_all_queries_cross_path_equality(table):
     eng = RelationalMemoryEngine()
     all_cols = list(table.schema.names)
@@ -165,21 +136,19 @@ def test_engine_data_movement_accounting(table):
 
 
 # --------------------------------------------------------------- codecs
-@given(st.lists(st.integers(-1000, 1000), min_size=1, max_size=500))
-@settings(max_examples=50, deadline=None)
-def test_dict_codec_roundtrip(values):
-    vals = np.asarray(values, dtype=np.int64)
+def test_dict_codec_roundtrip():
+    rng = np.random.default_rng(3)
+    vals = rng.integers(-1000, 1000, 400).astype(np.int64)
     codec = compression.DictCodec.fit(vals)
     codes = codec.encode(vals)
     np.testing.assert_array_equal(np.asarray(codec.decode(jnp.asarray(codes))), vals)
     assert codes.dtype == np.int32
 
 
-@given(st.lists(st.integers(0, 1 << 30), min_size=1, max_size=500),
-       st.sampled_from([16, 128, 1024]))
-@settings(max_examples=50, deadline=None)
-def test_delta_codec_roundtrip(values, frame):
-    vals = np.asarray(values, dtype=np.int64)
-    codec = compression.DeltaCodec.fit(vals, frame)
-    out = np.asarray(codec.decode(jnp.asarray(codec.encode(vals))))
-    np.testing.assert_array_equal(out, vals)
+def test_delta_codec_roundtrip():
+    rng = np.random.default_rng(4)
+    for frame in (16, 128, 1024):
+        vals = rng.integers(0, 1 << 30, 300).astype(np.int64)
+        codec = compression.DeltaCodec.fit(vals, frame)
+        out = np.asarray(codec.decode(jnp.asarray(codec.encode(vals))))
+        np.testing.assert_array_equal(out, vals)

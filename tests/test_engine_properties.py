@@ -1,0 +1,64 @@
+"""Hypothesis property tests split out of test_engine.py.
+
+These need ``hypothesis`` (requirements-dev.txt); the deterministic engine
+tests stay in test_engine.py so the tier-1 suite keeps its engine coverage
+when hypothesis is absent.
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import RelationalTable, benchmark_schema, compression
+
+
+@given(st.lists(st.sampled_from(["append", "delete", "update"]),
+                min_size=1, max_size=12))
+@settings(max_examples=30, deadline=None)
+def test_mvcc_snapshot_isolation_property(ops_seq):
+    """Any interleaving of OLTP ops: old snapshots are immutable."""
+    rng = np.random.default_rng(7)
+    schema = benchmark_schema(32, 4)
+    t = RelationalTable.from_columns(
+        schema, {c.name: rng.integers(0, 10, 20).astype(np.int32)
+                 for c in schema.columns}
+    )
+    snapshots = [(t.now(), t.to_rows())]
+    for op in ops_seq:
+        live = np.nonzero(t.snapshot_mask())[0]
+        if op == "append":
+            t.append({c.name: rng.integers(0, 10, 3).astype(np.int32)
+                      for c in schema.columns})
+        elif op == "delete" and len(live):
+            t.delete(live[: max(1, len(live) // 4)])
+        elif op == "update" and len(live):
+            t.update(live[:2], {"A1": np.full(2, 77, np.int32)})
+        snapshots.append((t.now(), t.to_rows()))
+    for ts, expect in snapshots:
+        got = t.to_rows(ts)
+        for name in expect:
+            np.testing.assert_array_equal(got[name], expect[name])
+
+
+@given(st.lists(st.integers(-1000, 1000), min_size=1, max_size=500))
+@settings(max_examples=50, deadline=None)
+def test_dict_codec_roundtrip_property(values):
+    vals = np.asarray(values, dtype=np.int64)
+    codec = compression.DictCodec.fit(vals)
+    codes = codec.encode(vals)
+    np.testing.assert_array_equal(np.asarray(codec.decode(jnp.asarray(codes))), vals)
+    assert codes.dtype == np.int32
+
+
+@given(st.lists(st.integers(0, 1 << 30), min_size=1, max_size=500),
+       st.sampled_from([16, 128, 1024]))
+@settings(max_examples=50, deadline=None)
+def test_delta_codec_roundtrip_property(values, frame):
+    vals = np.asarray(values, dtype=np.int64)
+    codec = compression.DeltaCodec.fit(vals, frame)
+    out = np.asarray(codec.decode(jnp.asarray(codec.encode(vals))))
+    np.testing.assert_array_equal(out, vals)

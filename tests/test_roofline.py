@@ -100,6 +100,7 @@ def test_collectives_detected_in_compiled_program():
     env["PYTHONPATH"] = os.path.join(repo, "src")
     code = textwrap.dedent("""
         import jax, jax.numpy as jnp
+        from repro import compat
         from jax.sharding import PartitionSpec as P
         from repro.launch.mesh import make_mesh
         from repro.roofline.analysis import compiled_hlo_text, hlo_stats
@@ -107,7 +108,7 @@ def test_collectives_detected_in_compiled_program():
         mesh = make_mesh((8,), ("data",))
         def f(x):
             return jax.lax.psum(x * 2, "data")
-        c = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("data"),
+        c = jax.jit(compat.shard_map(f, mesh=mesh, in_specs=P("data"),
                                   out_specs=P())).lower(
             jax.ShapeDtypeStruct((1024,), jnp.float32)).compile()
         stats = hlo_stats(compiled_hlo_text(c))
@@ -143,9 +144,10 @@ def test_dus_scan_bytes_not_whole_buffer():
     buffer_bytes = 100 * 1024 * 1024 * 4
     # honest per-iteration traffic: carry read+write (8 MB), carry copy
     # (4 MB), add read+slice write (8 MB) ≈ 20 MB × 100 = 5× the stacked
-    # buffer, plus its one-time zero-init (1×).  Billing the whole buffer
-    # per iteration (the naive parse) would be ~100×.
-    assert stats["hbm_bytes"] < 8 * buffer_bytes, (
+    # buffer, plus its one-time zero-init (1×); some XLA versions emit one
+    # more per-iteration carry copy (~8×).  Billing the whole buffer per
+    # iteration (the naive parse) would be ~100×.
+    assert stats["hbm_bytes"] < 10 * buffer_bytes, (
         stats["hbm_bytes"] / buffer_bytes
     )
     assert stats["hbm_bytes"] > 2 * buffer_bytes  # sanity floor

@@ -1,0 +1,308 @@
+"""Scan-sharing batch executor + device row store + cache accounting fixes."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (
+    BatchExecutor,
+    RelationalMemoryEngine,
+    RelationalTable,
+    ReorgCache,
+    TableGeometry,
+    benchmark_schema,
+    bytes_moved,
+    materialize_batch,
+    merge_geometries,
+)
+from repro.core import operators as ops
+from repro.core.planner import plan_batch, plan_query
+from repro.kernels.ops import REVISIONS
+
+GROUPS = (("A1",), ("A1", "A2", "A3", "A4"), ("A2", "A4"))
+
+
+@pytest.fixture
+def table():
+    rng = np.random.default_rng(0)
+    schema = benchmark_schema(64, 4)
+    n = 500
+    return RelationalTable.from_columns(
+        schema,
+        {c.name: rng.integers(-100, 100, n).astype(np.int32)
+         for c in schema.columns},
+    )
+
+
+# ------------------------------------------------------- materialize_many
+@pytest.mark.parametrize("revision", REVISIONS)
+def test_materialize_many_matches_per_view(table, revision):
+    batch_eng = RelationalMemoryEngine(revision=revision)
+    solo_eng = RelationalMemoryEngine(revision=revision)
+    views = [batch_eng.register(table, g) for g in GROUPS]
+    batched = batch_eng.materialize_many(views)
+    for view, got in zip(views, batched):
+        solo = solo_eng.register(table, view.columns).packed()
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(solo))
+
+
+def test_materialize_many_serves_hot_and_dedupes(table):
+    eng = RelationalMemoryEngine()
+    warm = eng.register(table, ("A2", "A4"))
+    _ = warm.packed()  # pre-warm one member of the batch
+    views = [eng.register(table, g) for g in GROUPS] + [
+        eng.register(table, ("A1",))  # duplicate geometry of GROUPS[0]
+    ]
+    hot_before = eng.stats.hot_hits
+    scans_before = eng.stats.shared_scans
+    outs = eng.materialize_many(views)
+    assert eng.stats.hot_hits == hot_before + 1  # ("A2","A4") served hot
+    assert eng.stats.shared_scans == scans_before + 1  # one pass for the rest
+    np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(outs[3]))
+    # the batch warmed the cache: re-access is hot
+    _ = views[1].packed()
+    assert eng.stats.cold_misses == 1 + len(GROUPS)  # warm-up + 3 batch misses
+
+
+def test_batch_counts_scan_bytes_once(table):
+    eng = RelationalMemoryEngine()
+    views = [eng.register(table, g) for g in GROUPS]
+    geoms = [v.geometry for v in views]
+    eng.materialize_many(views)
+    union_bytes = bytes_moved(merge_geometries(geoms))["rme"]
+    per_view_bytes = sum(bytes_moved(g)["rme"] for g in geoms)
+    assert eng.stats.bytes_from_dram == union_bytes
+    assert union_bytes < per_view_bytes  # overlapping views share the stream
+    # packed bytes to the CPU are still per view
+    assert eng.stats.bytes_to_cpu == sum(bytes_moved(g)["columnar"] for g in geoms)
+
+
+def test_batch_executor_coalesces_across_tables(table):
+    rng = np.random.default_rng(1)
+    other = RelationalTable.from_columns(
+        table.schema,
+        {c.name: rng.integers(-5, 5, 64).astype(np.int32)
+         for c in table.schema.columns},
+    )
+    eng = RelationalMemoryEngine()
+    ex = BatchExecutor(eng)
+    v1 = ex.add_columns(table, ("A1", "A3"))
+    v2 = ex.add_columns(other, ("A2",))
+    v3 = ex.add(eng.register(table, ("A5",)))
+    assert len(ex) == 3
+    outs = ex.submit()
+    assert len(ex) == 0 and ex.submit() == []
+    # table got a genuine 2-view shared scan; other's singleton group stays a
+    # plain per-view materialization and must not count as sharing
+    assert eng.stats.shared_scans == 1
+    solo = RelationalMemoryEngine()
+    for view, got in zip((v1, v2, v3), outs):
+        expect = solo.register(view.table, view.columns).packed()
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+    # materialize_batch is the one-shot spelling of the same path
+    again = materialize_batch(eng, [v1, v2, v3])
+    for got, ref in zip(again, outs):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_executor_rejects_foreign_views(table):
+    eng1, eng2 = RelationalMemoryEngine(), RelationalMemoryEngine()
+    ex = BatchExecutor(eng1)
+    with pytest.raises(ValueError):
+        ex.add(eng2.register(table, ("A1",)))
+
+
+# --------------------------------------------------------- device row store
+def test_device_rowstore_uploads_once_then_serves_resident(table):
+    eng = RelationalMemoryEngine()
+    _ = eng.register(table, ("A1",)).packed()
+    assert eng.stats.uploads == 1
+    assert eng.stats.bytes_uploaded == table.row_count * table.row_bytes
+    # more cold views, aggregates, and batches: same resident buffer
+    _ = eng.register(table, ("A2", "A3")).packed()
+    _ = eng.aggregate(table, "A1")
+    eng.materialize_many([eng.register(table, ("A5", "A7"))])
+    assert eng.stats.uploads == 1
+
+
+def test_repeated_aggregate_zero_reupload(table):
+    eng = RelationalMemoryEngine()
+    s1, c1 = eng.aggregate(table, "A1")
+    uploads_after_first = eng.stats.uploads
+    s2, _ = eng.aggregate(table, "A1")
+    s3, _ = eng.aggregate(table, "A2", "A4", "lt", 10)
+    assert uploads_after_first == 1
+    assert eng.stats.uploads == 1  # zero host→device transfers after the first
+    assert s1 == s2
+    expect = table.read_column("A1").astype(np.float64).sum()
+    np.testing.assert_allclose(s1, expect, rtol=1e-6)
+    assert c1 == table.row_count
+
+
+def test_device_rowstore_invalidates_on_mutation(table):
+    eng = RelationalMemoryEngine()
+    _ = eng.aggregate(table, "A1")
+    assert eng.rowstore.contains(table)
+    table.append({c: np.array([3], np.int32) for c in table.schema.names})
+    assert not eng.rowstore.contains(table)  # stale version
+    s, n = eng.aggregate(table, "A1")
+    assert eng.stats.uploads == 2  # exactly one re-upload for the new version
+    assert n == table.row_count
+    expect = table.read_column("A1").astype(np.float64).sum()
+    np.testing.assert_allclose(s, expect, rtol=1e-6)
+
+
+def test_caches_survive_table_id_recycling():
+    """uid (not id()) keys: a fresh table at a dead table's address is never
+    served the dead table's device buffer, and dead buffers are dropped."""
+    import gc
+
+    schema = benchmark_schema(64, 4)
+    eng = RelationalMemoryEngine()
+    for fill in (1, 2, 3):
+        t = RelationalTable.from_columns(
+            schema, {c.name: np.full(8, fill, np.int32) for c in schema.columns}
+        )
+        s, _ = eng.aggregate(t, "A1")
+        assert s == 8 * fill
+        del t
+        gc.collect()
+    assert eng.stats.uploads == 3  # three distinct tables, three uploads
+    # the weakref finalizers released every dead table's device buffer
+    assert eng.rowstore.occupancy_bytes == 0
+
+
+def test_aggregate_async_returns_device_pair(table):
+    eng = RelationalMemoryEngine()
+    out = eng.aggregate_async(table, "A1", "A3", "gt", 0)
+    assert out.shape == (2,)
+    s, c = eng.aggregate(table, "A1", "A3", "gt", 0)
+    assert float(out[0]) == s and float(out[1]) == c
+
+
+# ----------------------------------------------------------- cache fixes
+def _arr(words: int) -> jnp.ndarray:
+    return jnp.zeros((words,), dtype=jnp.int32)
+
+
+def test_reorg_cache_overwrite_does_not_leak_bytes():
+    cache = ReorgCache(capacity_bytes=1 << 20)
+    for _ in range(10):
+        cache.put(("k",), 0, _arr(100))
+    assert cache.occupancy_bytes == 400  # one live entry, not ten
+
+
+def test_reorg_cache_evicts_fifo():
+    cache = ReorgCache(capacity_bytes=3 * 400)
+    cache.put(("a",), 0, _arr(100))
+    cache.put(("b",), 0, _arr(100))
+    cache.put(("c",), 0, _arr(100))
+    cache.put(("d",), 0, _arr(100))  # must evict the oldest ("a"), not "c"
+    assert cache.peek(("a",), 0) is None
+    assert cache.peek(("b",), 0) is not None
+    assert cache.peek(("c",), 0) is not None
+    assert cache.peek(("d",), 0) is not None
+
+
+def test_reorg_cache_peek_has_no_side_effects():
+    cache = ReorgCache(capacity_bytes=1 << 20)
+    cache.put(("k",), 0, _arr(100))
+    assert cache.peek(("k",), 1) is None  # stale version
+    assert cache.occupancy_bytes == 400  # ...but the entry is untouched
+    assert cache.peek(("k",), 0) is not None
+
+
+def test_planning_does_not_mutate_cache(table):
+    eng = RelationalMemoryEngine()
+    _ = eng.register(table, ("A1", "A5")).packed()
+    occupancy = eng.cache.occupancy_bytes
+    table.append({c: np.array([1], np.int32) for c in table.schema.names})
+    plan = plan_query(eng, table, ["A1", "A5"])  # stale entry probed, kept
+    assert plan.path == "rme"
+    assert eng.cache.occupancy_bytes == occupancy
+
+
+# ---------------------------------------------------------------- planner
+def test_plan_batch_credits_shared_scan(table):
+    eng = RelationalMemoryEngine()
+    bp = plan_batch(eng, table, GROUPS)
+    assert bp.shared
+    assert bp.shared_bytes < bp.independent_bytes
+    assert bp.est_bytes == bp.shared_bytes
+    geoms = [TableGeometry.from_schema(table.schema, list(g), table.row_count)
+             for g in GROUPS]
+    assert bp.shared_bytes == bytes_moved(merge_geometries(geoms))["rme"]
+
+
+def test_plan_batch_single_view_is_independent(table):
+    eng = RelationalMemoryEngine()
+    bp = plan_batch(eng, table, [("A1", "A5")])
+    assert not bp.shared
+    assert bp.shared_bytes == bp.independent_bytes == bp.per_view[0].est_bytes
+
+
+# ------------------------------------------------------- merge_geometries
+def test_merge_geometries_unions_intervals():
+    schema = benchmark_schema(64, 4)
+    g1 = TableGeometry.from_schema(schema, ["A1", "A2"], 10)
+    g2 = TableGeometry.from_schema(schema, ["A2", "A3", "A8"], 10)
+    u = merge_geometries([g1, g2])
+    # A1..A3 are adjacent/overlapping -> one 12-byte interval; A8 stands alone
+    assert u.col_widths == (12, 4)
+    assert u.abs_offsets == (0, 28)
+    assert u.row_count == 10
+    with pytest.raises(ValueError):
+        merge_geometries([])
+
+
+def test_merge_geometries_lifts_column_cap():
+    schema = benchmark_schema(128, 4)  # 32 columns
+    geoms = [TableGeometry.from_schema(schema, [f"A{2 * i + 1}"], 5)
+             for i in range(11)]  # 11 disjoint single-column views
+    extra = TableGeometry.from_schema(schema, ["A26"], 5)
+    u = merge_geometries(geoms + [extra])
+    assert u.q == 12  # beyond the per-view Q cap: fine for accounting
+
+
+# ------------------------------------------------- bytes_moved closed form
+def test_bytes_moved_periodic_closed_form_matches_oracle():
+    from repro.core import descriptor_arrays
+
+    for row_bytes, cols, n in [
+        (64, ["A1", "A5"], 777),
+        (64, ["A2"], 1),
+        (36, ["A3", "A7", "A9"], 500),  # row size not a bus-width multiple
+        (20, ["A1", "A4"], 333),
+    ]:
+        schema = benchmark_schema(row_bytes, 4)
+        geom = TableGeometry.from_schema(schema, cols, n)
+        for bus in (8, 16, 32, 64):
+            oracle = int(descriptor_arrays(geom, bus)["r_burst"].sum()) * bus
+            assert bytes_moved(geom, bus)["rme"] == oracle, (row_bytes, cols, bus)
+
+
+# ------------------------------------------------------------- q5 cache
+def test_join_build_index_cache(table):
+    rng = np.random.default_rng(9)
+    n_r = 64
+    r_cols = {c.name: rng.integers(-50, 50, n_r).astype(np.int32)
+              for c in table.schema.columns}
+    r_cols["A2"] = np.arange(n_r, dtype=np.int32)
+    rt = RelationalTable.from_columns(table.schema, r_cols)
+    eng = RelationalMemoryEngine()
+    ops.clear_join_build_cache()
+    first = ops.q5_hash_join(eng, table, rt)
+    assert ops.JOIN_BUILD_STATS == {"hits": 0, "misses": 1}
+    second = ops.q5_hash_join(eng, table, rt)
+    assert ops.JOIN_BUILD_STATS == {"hits": 1, "misses": 1}
+    np.testing.assert_array_equal(np.asarray(first.matched),
+                                  np.asarray(second.matched))
+    np.testing.assert_array_equal(np.asarray(first.r_proj),
+                                  np.asarray(second.r_proj))
+    # build-side mutation invalidates the sorted index (version key changes),
+    # and the dead version's entry is dropped rather than accumulating
+    rt.update(np.array([0]), {"A3": np.array([999], np.int32)})
+    _ = ops.q5_hash_join(eng, table, rt)
+    assert ops.JOIN_BUILD_STATS["misses"] == 2
+    assert len([k for k in ops._BUILD_INDEX_CACHE if k[0] == rt.uid]) == 1
