@@ -1,4 +1,12 @@
-"""Shared benchmark harness: timing + CSV rows (`name,us_per_call,derived`)."""
+"""Shared benchmark harness: timing + CSV rows (`name,us_per_call,derived`).
+
+Smoke mode (``python -m benchmarks.run --smoke``, used as a CI job) shrinks
+every figure to a seconds-long regression probe: ``bench_rows`` caps table
+sizes and ``timeit`` drops to a single timed iteration.  The numbers are
+meaningless as measurements — the point is that every kernel still lowers and
+every figure's code path still runs, so lowering regressions fail in CI
+instead of surfacing in full benchmark runs.
+"""
 
 from __future__ import annotations
 
@@ -11,9 +19,25 @@ from repro.core import RelationalMemoryEngine, RelationalTable, benchmark_schema
 
 ROWS: list[tuple[str, float, str]] = []
 
+SMOKE = False
+SMOKE_ROW_CAP = 2_000
+
+
+def set_smoke(on: bool = True) -> None:
+    """Flip the module-wide smoke switch (tiny tables, single iterations)."""
+    global SMOKE
+    SMOKE = on
+
+
+def bench_rows(n: int, cap: int = SMOKE_ROW_CAP) -> int:
+    """The figure's row count, capped in smoke mode."""
+    return min(n, cap) if SMOKE else n
+
 
 def timeit(fn, iters: int = 5, warmup: int = 1) -> float:
     """Median wall time in microseconds (device-synchronized)."""
+    if SMOKE:
+        iters, warmup = 1, 1
     for _ in range(warmup):
         jax.block_until_ready(fn())
     times = []

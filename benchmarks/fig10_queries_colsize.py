@@ -4,7 +4,7 @@ varying column size at fixed 64B rows — RME fused kernels vs direct row-wise.
 
 from repro.core import operators as ops
 
-from .common import emit, fresh_engine, make_benchmark_table, timeit
+from .common import bench_rows, emit, fresh_engine, make_benchmark_table, timeit
 
 N_ROWS = 20_000
 
@@ -12,7 +12,8 @@ N_ROWS = 20_000
 def run() -> None:
     for col_bytes in (4, 8, 16):
         n_cols = 64 // col_bytes
-        t = make_benchmark_table(row_bytes=64, col_bytes=4, n_rows=N_ROWS)
+        t = make_benchmark_table(row_bytes=64, col_bytes=4,
+                                 n_rows=bench_rows(N_ROWS))
         eng = fresh_engine()
         cs = ops.make_colstore(t, list(t.schema.names))
 

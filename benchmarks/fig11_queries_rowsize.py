@@ -9,17 +9,18 @@ bytes ratio, which is the hardware-independent form of the result.
 from repro.core import TableGeometry, bytes_moved
 from repro.core import operators as ops
 
-from .common import emit, fresh_engine, make_benchmark_table, timeit
+from .common import bench_rows, emit, fresh_engine, make_benchmark_table, timeit
 
 N_ROWS = 20_000
 
 
 def run() -> None:
+    n_rows = bench_rows(N_ROWS)
     for row_bytes in (32, 64, 128, 256):
-        t = make_benchmark_table(row_bytes=row_bytes, col_bytes=4, n_rows=N_ROWS)
+        t = make_benchmark_table(row_bytes=row_bytes, col_bytes=4, n_rows=n_rows)
         eng = fresh_engine()
         cs = ops.make_colstore(t, list(t.schema.names))
-        geom = TableGeometry.from_schema(t.schema, ["A1", "A3"], N_ROWS)
+        geom = TableGeometry.from_schema(t.schema, ["A1", "A3"], n_rows)
         ratio = bytes_moved(geom)["row_wise"] / max(bytes_moved(geom)["rme"], 1)
 
         us = timeit(lambda: ops.q3_select_aggregate(eng, t, "A2", "A4", -800),

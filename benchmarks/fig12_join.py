@@ -9,20 +9,21 @@ import numpy as np
 from repro.core import RelationalTable, TableGeometry, benchmark_schema, bytes_moved
 from repro.core import operators as ops
 
-from .common import emit, fresh_engine, timeit
+from .common import bench_rows, emit, fresh_engine, timeit
 
 N_S, N_R = 20_000, 4_096
 
 
 def make_tables(row_bytes: int):
     rng = np.random.default_rng(0)
+    n_s, n_r = bench_rows(N_S), bench_rows(N_R, cap=512)
     schema = benchmark_schema(row_bytes, 4)
-    s_cols = {c.name: rng.integers(-1000, 1000, N_S).astype(np.int32)
+    s_cols = {c.name: rng.integers(-1000, 1000, n_s).astype(np.int32)
               for c in schema.columns}
-    s_cols["A2"] = rng.integers(0, 2 * N_R, N_S).astype(np.int32)  # ~50% match
-    r_cols = {c.name: rng.integers(-1000, 1000, N_R).astype(np.int32)
+    s_cols["A2"] = rng.integers(0, 2 * n_r, n_s).astype(np.int32)  # ~50% match
+    r_cols = {c.name: rng.integers(-1000, 1000, n_r).astype(np.int32)
               for c in schema.columns}
-    r_cols["A2"] = np.arange(N_R, dtype=np.int32)  # primary key
+    r_cols["A2"] = np.arange(n_r, dtype=np.int32)  # primary key
     return (RelationalTable.from_columns(schema, s_cols),
             RelationalTable.from_columns(schema, r_cols))
 
@@ -33,7 +34,7 @@ def run() -> None:
         eng = fresh_engine()
         scs = ops.make_colstore(s, ["A1", "A2"])
         rcs = ops.make_colstore(r, ["A2", "A3"])
-        g = TableGeometry.from_schema(s.schema, ["A1", "A2"], N_S)
+        g = TableGeometry.from_schema(s.schema, ["A1", "A2"], s.row_count)
         ratio = bytes_moved(g)["row_wise"] / max(bytes_moved(g)["rme"], 1)
         us = timeit(lambda: ops.q5_hash_join(eng, s, r).matched, iters=3)
         emit(f"fig12/r{row_bytes:03d}_rme", us, f"bytes_ratio={ratio:.1f}")

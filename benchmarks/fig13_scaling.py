@@ -9,12 +9,15 @@ here: the reorg cache holds none of these tables, every pass is cold).
 from repro.core import TableGeometry, bytes_moved
 from repro.core import operators as ops
 
+from . import common
 from .common import emit, fresh_engine, make_benchmark_table, timeit
 
 
 def run() -> None:
     cols = ("A1", "A5", "A9", "A13")
-    for mb in (4, 16, 64):
+    # smoke probes one small size; the real figure scales 4 MB -> 64 MB
+    sizes = (1,) if common.SMOKE else (4, 16, 64)
+    for mb in sizes:
         n_rows = mb * (1 << 20) // 64
         t = make_benchmark_table(n_rows=n_rows)
         eng = fresh_engine(cache_bytes=2 << 20)  # 2 MB SPM << table size

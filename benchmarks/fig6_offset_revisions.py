@@ -7,24 +7,23 @@ burst-length spikes only where the column straddles a bus line (our word-
 aligned adaptation: an 8-byte column at offset ≡ 12 mod 16).
 """
 
-import numpy as np
-
 import jax.numpy as jnp
 
 from repro.core import TableGeometry, bytes_moved
 from repro.kernels.ops import project_any
 
-from .common import emit, make_benchmark_table, timeit
+from .common import bench_rows, emit, make_benchmark_table, timeit
 
 N_ROWS = 20_000
 
 
 def run() -> None:
-    t = make_benchmark_table(n_rows=N_ROWS)
+    n_rows = bench_rows(N_ROWS)
+    t = make_benchmark_table(n_rows=n_rows)
     words = jnp.asarray(t.words()[:, : t.schema.row_words])
 
     # --- revision sweep (cold = projection kernel; hot = cached read + sum)
-    geom = TableGeometry.from_schema(t.schema, ["A1"], N_ROWS)
+    geom = TableGeometry.from_schema(t.schema, ["A1"], n_rows)
     for rev in ("bsl", "pck", "mlp", "xla"):
         us = timeit(lambda: jnp.sum(
             project_any(words, geom, revision=rev, block_rows=2048)
@@ -34,13 +33,13 @@ def run() -> None:
     emit("fig6/q0_hot", timeit(lambda: jnp.sum(packed)), "cached_view")
     full = words  # direct row-wise: ships every row word
     emit("fig6/q0_direct_row", timeit(lambda: jnp.sum(full[:, 0])),
-         f"row_bytes={N_ROWS * 64}")
+         f"row_bytes={n_rows * 64}")
 
     # --- offset sweep (8-byte column; spike expected at offset%16 == 12)
     base_beats = None
     for off_w in range(0, 14, 1):
         geom = TableGeometry(
-            row_bytes=64, row_count=N_ROWS, col_widths=(8,),
+            row_bytes=64, row_count=n_rows, col_widths=(8,),
             col_rel_offsets=(off_w * 4,),
         )
         us = timeit(lambda g=geom: jnp.sum(

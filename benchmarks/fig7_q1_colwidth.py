@@ -5,26 +5,23 @@ approaches/beats pure columnar as width grows.  We report wall time plus the
 exact bytes each path moves (the quantity the caches see).
 """
 
-import numpy as np
-
-import jax.numpy as jnp
-
 from repro.core import TableGeometry, bytes_moved
 from repro.core import operators as ops
 
-from .common import emit, fresh_engine, make_benchmark_table, timeit
+from .common import bench_rows, emit, fresh_engine, make_benchmark_table, timeit
 
 N_ROWS = 20_000
 
 
 def run() -> None:
+    n_rows = bench_rows(N_ROWS)
     for width in (4, 8, 12, 16):
         row_bytes = 16 * width
         t = make_benchmark_table(row_bytes=row_bytes, col_bytes=width,
-                                 n_rows=N_ROWS)
+                                 n_rows=n_rows)
         # three non-contiguous columns, mirroring offsets 0/24/48 of the paper
         cols = ("A1", "A7", "A13")
-        geom = TableGeometry.from_schema(t.schema, cols, N_ROWS)
+        geom = TableGeometry.from_schema(t.schema, cols, n_rows)
         eng = fresh_engine()
         cs = ops.make_colstore(t, cols)
         moved = bytes_moved(geom)

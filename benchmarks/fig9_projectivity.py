@@ -3,21 +3,21 @@ economics made concrete: row-wise cost is flat (always ships everything),
 columnar cost grows with tuple reconstruction, RME tracks the useful bytes.
 """
 
-import jax.numpy as jnp
 
 from repro.core import TableGeometry, bytes_moved
 from repro.core import operators as ops
 
-from .common import emit, fresh_engine, make_benchmark_table, timeit
+from .common import bench_rows, emit, fresh_engine, make_benchmark_table, timeit
 
 N_ROWS = 20_000
 
 
 def run() -> None:
-    t = make_benchmark_table(n_rows=N_ROWS)
+    n_rows = bench_rows(N_ROWS)
+    t = make_benchmark_table(n_rows=n_rows)
     for k in range(1, 12):
         cols = tuple(f"A{i + 1}" for i in range(k))
-        geom = TableGeometry.from_schema(t.schema, cols, N_ROWS)
+        geom = TableGeometry.from_schema(t.schema, cols, n_rows)
         eng = fresh_engine()
         cs = ops.make_colstore(t, cols)
         moved = bytes_moved(geom)

@@ -12,7 +12,7 @@ repeated fused aggregates.
 
 from repro.core import bytes_moved, merge_geometries
 
-from .common import emit, fresh_engine, make_benchmark_table, timeit
+from .common import bench_rows, emit, fresh_engine, make_benchmark_table, timeit
 
 N_ROWS = 20_000
 
@@ -32,7 +32,7 @@ def _row_store_bytes(stats) -> int:
 
 
 def run() -> None:
-    t = make_benchmark_table(n_rows=N_ROWS)
+    t = make_benchmark_table(n_rows=bench_rows(N_ROWS))
 
     # ---- byte accounting (one cold pass each way) -------------------------
     # per-view: independent materializations on the shipped engine — the

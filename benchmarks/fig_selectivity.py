@@ -7,21 +7,20 @@ receives per path — the compaction payoff the mask-based Q2 path cannot
 give.
 """
 
-import numpy as np
-
 import jax.numpy as jnp
 
 from repro.core import TableGeometry
 from repro.kernels.rme_select import densify, select_compact
 
-from .common import emit, make_benchmark_table, timeit
+from .common import bench_rows, emit, make_benchmark_table, timeit
 
 N_ROWS = 20_000
 
 
 def run() -> None:
-    t = make_benchmark_table(n_rows=N_ROWS, seed=3)
-    geom = TableGeometry.from_schema(t.schema, ["A1", "A9"], N_ROWS)
+    n_rows = bench_rows(N_ROWS)
+    t = make_benchmark_table(n_rows=n_rows, seed=3)
+    geom = TableGeometry.from_schema(t.schema, ["A1", "A9"], n_rows)
     words = jnp.asarray(t.words())
     out_bytes_row = geom.out_bytes_per_row
     for pct, k in ((90, -800), (50, 0), (10, 800), (1, 980)):  # A3 ∈ ±1000
@@ -33,7 +32,7 @@ def run() -> None:
             words, geom, pred_word=2, pred_op="gt", pred_k=k, block_rows=512
         )[1], iters=3)
         shipped = n_sel * out_bytes_row
-        masked = N_ROWS * out_bytes_row  # what the mask-based Q2 path ships
+        masked = n_rows * out_bytes_row  # what the mask-based Q2 path ships
         emit(
             f"fig_sel/sel{pct:02d}pct", us,
             f"rows={n_sel},compact_bytes={shipped},masked_bytes={masked},"

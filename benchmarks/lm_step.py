@@ -12,6 +12,7 @@ from repro.models import build_model
 from repro.train import AdamWConfig, make_train_step
 from repro.train.step import init_train_state
 
+from . import common
 from .common import emit, timeit
 
 B, S = 4, 128
@@ -19,7 +20,9 @@ B, S = 4, 128
 
 def run() -> None:
     rng = np.random.default_rng(0)
-    for arch in ARCH_NAMES:
+    # smoke probes a single architecture; the real bench sweeps all of them
+    archs = ARCH_NAMES[:1] if common.SMOKE else ARCH_NAMES
+    for arch in archs:
         cfg = get_smoke_config(arch)
         model = build_model(cfg)
         state = init_train_state(model, jax.random.PRNGKey(0))

@@ -2,10 +2,13 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (and a trailing summary), the
 format consumed by EXPERIMENTS.md.  ``python -m benchmarks.run [pattern]``
-runs the subset whose module name contains ``pattern``.
+runs the subset whose module name contains ``pattern``;
+``python -m benchmarks.run --smoke`` runs every figure at smoke scale (tiny
+tables, single iterations) — the CI job that catches kernel-lowering
+regressions without paying for real measurements.
 """
 
-import sys
+import argparse
 import time
 
 from . import (
@@ -16,12 +19,13 @@ from . import (
     fig11_queries_rowsize,
     fig12_join,
     fig13_scaling,
+    fig_concurrent_queries,
     fig_scan_sharing,
     fig_selectivity,
     table2_vmem_budget,
     lm_step,
 )
-from .common import flush_rows
+from .common import flush_rows, set_smoke
 
 MODULES = [
     fig6_offset_revisions,
@@ -31,6 +35,7 @@ MODULES = [
     fig11_queries_rowsize,
     fig12_join,
     fig13_scaling,
+    fig_concurrent_queries,
     fig_scan_sharing,
     fig_selectivity,
     table2_vmem_budget,
@@ -39,12 +44,19 @@ MODULES = [
 
 
 def main() -> None:
-    pattern = sys.argv[1] if len(sys.argv) > 1 else ""
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("pattern", nargs="?", default="",
+                    help="run only modules whose name contains this substring")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny row counts + single iterations (CI regression probe)")
+    args = ap.parse_args()
+    if args.smoke:
+        set_smoke(True)
     print("name,us_per_call,derived")
     t0 = time.time()
     total = 0
     for mod in MODULES:
-        if pattern and pattern not in mod.__name__:
+        if args.pattern and args.pattern not in mod.__name__:
             continue
         mod.run()
         total += len(flush_rows())

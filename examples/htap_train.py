@@ -15,7 +15,6 @@ import argparse
 import dataclasses
 import tempfile
 
-import numpy as np
 
 import jax
 import jax.numpy as jnp

@@ -52,7 +52,8 @@ def main() -> None:
 
     # 4. The whole benchmark: Q0-Q5, three interchangeable paths
     cs = ops.make_colstore(table, list(schema.names))
-    print(f"Q0 sum      : {ops.q0_sum(engine, table, 'A1'):.0f}")
+    print(f"Q0 sum      : {ops.q0_sum(engine, table, 'A1'):.0f} "
+          f"(col path agrees: {ops.q0_sum(engine, table, 'A1', path='col', colstore=cs):.0f})")
     print(f"Q1 project  : {ops.q1_project(engine, table, ('A1','A2')).shape}")
     vals, mask = ops.q2_select_project(engine, table, "A1", "A3", 100)
     print(f"Q2 select   : {int(mask.sum())} rows pass")

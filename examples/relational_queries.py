@@ -18,7 +18,6 @@ from repro.core import (
     RelationalMemoryEngine, RelationalTable, TableGeometry, benchmark_schema,
 )
 from repro.core import distributed as D
-from repro.core import operators as ops
 from repro.launch.mesh import make_mesh
 
 

@@ -8,7 +8,10 @@ Layers (bottom-up):
   engine      — the RME: epoch-validated reorg cache + device row store +
                 revision datapaths + scan-sharing batch materialization
   executor    — BatchExecutor: coalesce pending views, one shared scan/table
-  operators   — Q0-Q5 over interchangeable rme/row/col access paths
+  plan        — logical plan IR (Scan/Filter/Project/Aggregate/GroupBy/Join)
+  planner     — byte-cost path selection + compile_plan: plan -> PhysicalQuery
+  operators   — Q0-Q5 over interchangeable rme/row/col access paths (thin
+                plan constructors since the plan-IR refactor)
   distributed — shard_map row-bank parallel operators for the cluster meshes
   compression — dictionary + delta/FOR codecs (paper §4)
 """
@@ -22,6 +25,11 @@ from .descriptor import BUS_WIDTH, Descriptor, bytes_moved, descriptor_arrays, d
 from .ephemeral import EphemeralView
 from .engine import DeviceRowStore, EngineStats, RelationalMemoryEngine, ReorgCache
 from .executor import BatchExecutor, materialize_batch
+from .plan import (
+    Aggregate, Filter, GroupBy, Join, PlanBuilder, PlanError, PlanNode,
+    Project, Scan, decompose, plan,
+)
+from .planner import PhysicalQuery, compile_plan
 from . import compression, distributed, executor, operators, planner
 
 __all__ = [
@@ -32,5 +40,8 @@ __all__ = [
     "Descriptor", "descriptors", "descriptor_arrays", "fetch_model", "bytes_moved",
     "EphemeralView", "DeviceRowStore", "EngineStats", "RelationalMemoryEngine",
     "ReorgCache", "BatchExecutor", "materialize_batch",
+    "Aggregate", "Filter", "GroupBy", "Join", "PlanBuilder", "PlanError",
+    "PlanNode", "Project", "Scan", "decompose", "plan",
+    "PhysicalQuery", "compile_plan",
     "compression", "distributed", "executor", "operators", "planner",
 ]

@@ -14,7 +14,6 @@ lowers for the 1-device CPU test run, the 256-chip single-pod mesh, and the
 
 from __future__ import annotations
 
-import functools
 from typing import Sequence
 
 import jax

@@ -48,7 +48,6 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import ops as K
 from repro.kernels.rme_project import vmem_footprint_bytes
@@ -255,11 +254,26 @@ class RelationalMemoryEngine:
         return EphemeralView(self, table, tuple(columns), geom, snapshot_ts)
 
     def reset(self) -> None:
-        """The configuration port's software reset SW (Table 1)."""
+        """The configuration port's software reset SW (Table 1).
+
+        Clears every derived-data cache the reset must invalidate: the reorg
+        cache (epoch bump, O(1)) *and* the module-global q5 build-index cache
+        — that one is keyed by table version, not engine epoch, so without an
+        explicit clear its sorted indexes and ``JOIN_BUILD_STATS`` leak across
+        benchmark repetitions.  (The cache is process-global, like the paper's
+        single RME: resetting any engine resets it.)  The device row store is
+        *not* dropped — it mirrors the row store itself, not derived state.
+        """
         self.cache.reset()
+        from .planner import clear_join_build_cache  # deferred: planner imports us
+
+        clear_join_build_cache()
 
     # --------------------------------------------------------------- engine
-    def _key(self, table: RelationalTable, geom: TableGeometry) -> tuple:
+    def view_key(self, table: RelationalTable, geom: TableGeometry) -> tuple:
+        """The reorg-cache key for a view — the single definition every
+        consumer (materialization, planner costing, serving-layer hot/cold
+        classification) must agree on."""
         return (table.uid, geom.cache_key(), self.revision)
 
     def device_words(self, table: RelationalTable) -> jax.Array:
@@ -269,7 +283,7 @@ class RelationalMemoryEngine:
     def materialize(self, view: EphemeralView) -> jax.Array:
         """Assemble the packed column group for ``view`` (cold) or serve it hot."""
         table, geom = view.table, view.geometry
-        key = self._key(table, geom)
+        key = self.view_key(table, geom)
         hot = self.cache.get(key, table.version)
         if hot is not None:
             self.stats.hot_hits += 1
@@ -301,7 +315,7 @@ class RelationalMemoryEngine:
         pending: dict[int, list[tuple[int, EphemeralView, tuple]]] = {}
         tables: dict[int, RelationalTable] = {}
         for i, view in enumerate(views):
-            key = self._key(view.table, view.geometry)
+            key = self.view_key(view.table, view.geometry)
             hot = self.cache.get(key, view.table.version)
             if hot is not None:
                 self.stats.hot_hits += 1

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .schema import TableGeometry
-from .table import RelationalTable, TS_INF
+from .table import RelationalTable
 
 if TYPE_CHECKING:  # pragma: no cover
     from .engine import RelationalMemoryEngine

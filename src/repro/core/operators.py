@@ -1,6 +1,6 @@
 """Relational operators over the three access paths of the paper's §6.
 
-Every query from the Relational Memory Benchmark (Listing 5) is implemented
+Every query from the Relational Memory Benchmark (Listing 5) is expressed
 against three interchangeable data paths so the benchmarks can reproduce the
 paper's comparisons:
 
@@ -14,55 +14,35 @@ paper's comparisons:
 
 All paths produce identical results; tests assert cross-path equality and the
 benchmarks report time + exact bytes moved per path.
+
+Since the plan-IR refactor, ``q0``–``q5`` are *thin plan constructors*: each
+builds a logical plan (:mod:`repro.core.plan`) and hands it to
+:func:`repro.core.planner.compile_plan`, which routes it to the best physical
+path — fused offload kernels, shared-scan materialization, or host-side
+fallback.  The physical execution bodies (and the q5 sorted build-side index
+cache) live in :mod:`repro.core.planner`; the names re-exported below keep the
+established ``operators`` surface stable for tests and benchmarks.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import weakref
 from typing import Mapping
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from .engine import RelationalMemoryEngine
-from .schema import TableGeometry
+from .plan import plan
+from .planner import (  # noqa: F401  (re-exported operator surface)
+    _BUILD_INDEX_CACHE,
+    JOIN_BUILD_STATS,
+    JoinResult,
+    clear_join_build_cache,
+    compile_plan,
+)
 from .table import RelationalTable, columnar_copy
 
 PATHS = ("rme", "row", "col")
-
-
-def _decode_i32(x: jax.Array, dtype: str) -> jax.Array:
-    if dtype == "float32":
-        return jax.lax.bitcast_convert_type(x, jnp.float32)
-    return x
-
-
-def _col_from_rows(table: RelationalTable, name: str) -> jax.Array:
-    """Direct row-wise column read: ships every row word, slices one column."""
-    words = jnp.asarray(table.words())  # the whole row store moves
-    off = table.schema.word_offset(name)
-    col = table.schema.column(name)
-    return _decode_i32(words[:, off], col.dtype)
-
-
-def _col_any(
-    engine: RelationalMemoryEngine,
-    table: RelationalTable,
-    colstore: Mapping[str, np.ndarray] | None,
-    view,
-    name: str,
-    path: str,
-) -> jax.Array:
-    if path == "rme":
-        off, w = view.column_words(name)
-        return _decode_i32(view.packed()[:, off], table.schema.column(name).dtype)
-    if path == "row":
-        return _col_from_rows(table, name)
-    if path == "col":
-        return jnp.asarray(colstore[name])
-    raise ValueError(path)
 
 
 # ----------------------------------------------------------------- queries
@@ -74,12 +54,8 @@ def q0_sum(
     colstore: Mapping[str, np.ndarray] | None = None,
 ) -> float:
     """Q0: SELECT SUM(A1) FROM S."""
-    if path == "rme":
-        s, _ = engine.aggregate(table, col)
-        return s
-    if path == "row":
-        return float(jnp.sum(_col_from_rows(table, col).astype(jnp.float32)))
-    return float(jnp.sum(jnp.asarray(colstore[col]).astype(jnp.float32)))
+    q = plan(table).sum(col)
+    return compile_plan(engine, q, path=path, colstore=colstore).run()
 
 
 def q1_project(
@@ -95,25 +71,8 @@ def q1_project(
     re-interleaved into row order (the paper's increasing cost with
     projectivity); ``row`` ships full rows then slices.
     """
-    if path == "rme":
-        return engine.register(table, cols).packed()
-    if path == "row":
-        words = jnp.asarray(table.words())
-        parts = []
-        for name in sorted(cols, key=table.schema.byte_offset):
-            off = table.schema.word_offset(name)
-            parts.append(words[:, off : off + table.schema.column(name).words])
-        return jnp.concatenate(parts, axis=1)
-    # columnar: gather each column then reconstruct tuples (interleave)
-    parts = []
-    for name in sorted(cols, key=table.schema.byte_offset):
-        arr = np.asarray(colstore[name])
-        if arr.dtype.kind == "S":  # char columns travel as raw words
-            arr = np.ascontiguousarray(arr).view(np.uint8).reshape(
-                table.row_count, -1
-            ).view(np.int32)
-        parts.append(jnp.asarray(arr).reshape(table.row_count, -1).view(jnp.int32))
-    return jnp.concatenate(parts, axis=1)
+    q = plan(table).project(*cols)
+    return compile_plan(engine, q, path=path, colstore=colstore).run()
 
 
 def q2_select_project(
@@ -125,23 +84,16 @@ def q2_select_project(
     path: str = "rme",
     colstore: Mapping[str, np.ndarray] | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Q2: SELECT A1 FROM S WHERE A3 > k — returns (values, mask)."""
-    if path == "rme":
-        from repro.kernels.ops import filter_project
+    """Q2: SELECT A1 FROM S WHERE A3 > k — returns (values, mask).
 
-        geom = TableGeometry.from_schema(table.schema, [proj], table.row_count)
-        pw = table.schema.word_offset(pred)
-        packed, mask = filter_project(
-            engine.device_words(table), geom, pred_word=pw,
-            pred_dtype=table.schema.column(pred).dtype, pred_op="gt", pred_k=k,
-            block_rows=engine.block_rows, interpret=engine.interpret,
-        )
-        return packed[:, 0], mask
-    view = None
-    a = _col_any(engine, table, colstore, view, proj, path)
-    b = _col_any(engine, table, colstore, view, pred, path)
-    mask = b > k
-    return jnp.where(mask, a, 0), mask
+    ``values`` are raw packed words on every path (the fused kernel's output
+    contract — decode float32 columns with a bitcast, as ``EphemeralView
+    .column`` does); previously the row/col baselines decoded while the rme
+    kernel did not, so the paths disagreed for non-int32 columns.
+    """
+    q = plan(table).filter(pred, "gt", k).project(proj)
+    packed, mask = compile_plan(engine, q, path=path, colstore=colstore).run()
+    return packed[:, 0], mask
 
 
 def q3_select_aggregate(
@@ -154,13 +106,8 @@ def q3_select_aggregate(
     colstore: Mapping[str, np.ndarray] | None = None,
 ) -> float:
     """Q3: SELECT SUM(A2) FROM S WHERE A4 < k."""
-    if path == "rme":
-        s, _ = engine.aggregate(table, agg, pred, "lt", k)
-        return s
-    view = None
-    a = _col_any(engine, table, colstore, view, agg, path).astype(jnp.float32)
-    b = _col_any(engine, table, colstore, view, pred, path)
-    return float(jnp.sum(jnp.where(b < k, a, 0.0)))
+    q = plan(table).filter(pred, "lt", k).sum(agg)
+    return compile_plan(engine, q, path=path, colstore=colstore).run()
 
 
 def q4_groupby_avg(
@@ -175,121 +122,8 @@ def q4_groupby_avg(
     colstore: Mapping[str, np.ndarray] | None = None,
 ) -> jax.Array:
     """Q4: SELECT AVG(A1) FROM S WHERE A3 < k GROUP BY A2 (group domain mod G)."""
-    if path == "rme":
-        from repro.kernels.ops import groupby_sum
-
-        s = table.schema
-        sums, counts = groupby_sum(
-            engine.device_words(table), group_word=s.word_offset(group),
-            agg_word=s.word_offset(agg), num_groups=num_groups,
-            agg_dtype=s.column(agg).dtype, pred_word=s.word_offset(pred),
-            pred_dtype=s.column(pred).dtype, pred_op="lt", pred_k=k,
-            block_rows=engine.block_rows, interpret=engine.interpret,
-        )
-        return sums / jnp.maximum(counts, 1.0)
-    view = None
-    a = _col_any(engine, table, colstore, view, agg, path).astype(jnp.float32)
-    p = _col_any(engine, table, colstore, view, pred, path)
-    g = jnp.remainder(_col_any(engine, table, colstore, view, group, path), num_groups)
-    mask = p < k
-    vals = jnp.where(mask, a, 0.0)
-    cnt = mask.astype(jnp.float32)
-    sums = jax.ops.segment_sum(vals, g, num_segments=num_groups)
-    counts = jax.ops.segment_sum(cnt, g, num_segments=num_groups)
-    return sums / jnp.maximum(counts, 1.0)
-
-
-@dataclasses.dataclass
-class JoinResult:
-    """Static-shape join output: one slot per probe row + match validity."""
-
-    s_proj: jax.Array  # projected column from the probe side S
-    r_proj: jax.Array  # matched column from the build side R (0 where no match)
-    matched: jax.Array  # bool mask
-
-
-# Sorted build-side index cache for q5: argsort over the build table is the
-# join's dominant host-side cost, and the build side is usually the stable
-# dimension table — re-sorting it per probe throws that work away.  Keyed by
-# (table uid, version, key col, payload col, path) so any OLTP mutation of
-# the build side invalidates, exactly like the reorg cache (uid, not id():
-# the cache is module-global and must never alias a recycled address).  The
-# "col" path is never cached — its data comes from a caller-supplied colstore
-# the table's version says nothing about.  FIFO-bounded by bytes, and a dead
-# build table's entries are dropped by a weakref finalizer so the global
-# cache cannot pin device arrays of collected tables.
-_BUILD_INDEX_CACHE: dict[tuple, tuple[jax.Array, jax.Array]] = {}
-_BUILD_INDEX_CAPACITY = 64 << 20
-_build_index_bytes = 0  # incremental occupancy (kept exact by every mutation)
-_BUILD_INDEX_FINALIZED: set[int] = set()
-JOIN_BUILD_STATS = {"hits": 0, "misses": 0}
-
-
-def _entry_bytes(entry: tuple[jax.Array, jax.Array]) -> int:
-    return sum(a.size * a.dtype.itemsize for a in entry)
-
-
-def _pop_build_entry(k: tuple) -> None:
-    global _build_index_bytes
-    entry = _BUILD_INDEX_CACHE.pop(k, None)
-    if entry is not None:
-        _build_index_bytes -= _entry_bytes(entry)
-
-
-def clear_join_build_cache() -> None:
-    global _build_index_bytes
-    _BUILD_INDEX_CACHE.clear()
-    _build_index_bytes = 0
-    JOIN_BUILD_STATS["hits"] = 0
-    JOIN_BUILD_STATS["misses"] = 0
-
-
-def _drop_build_entries(uid: int, keep_version: int | None = None) -> None:
-    """Drop a table's cached indexes (all of them, or all but one version)."""
-    if keep_version is None:
-        _BUILD_INDEX_FINALIZED.discard(uid)
-    for k in [k for k in _BUILD_INDEX_CACHE
-              if k[0] == uid and k[1] != keep_version]:
-        _pop_build_entry(k)
-
-
-def _probe_build_index(
-    r_table: RelationalTable, key: str, r_proj: str, path: str
-) -> tuple[jax.Array, jax.Array] | None:
-    """Warm-path probe, called *before* the build side is materialized — a hit
-    must skip the build-side column reads entirely, not just the argsort."""
-    if path == "col":  # colstore contents are not keyed by the table version
-        return None
-    hit = _BUILD_INDEX_CACHE.get((r_table.uid, r_table.version, key, r_proj, path))
-    if hit is not None:
-        JOIN_BUILD_STATS["hits"] += 1
-    else:
-        JOIN_BUILD_STATS["misses"] += 1
-    return hit
-
-
-def _insert_build_index(
-    entry: tuple[jax.Array, jax.Array],
-    r_table: RelationalTable,
-    key: str,
-    r_proj: str,
-    path: str,
-) -> None:
-    global _build_index_bytes
-    if path == "col":
-        return
-    # versions are monotonic: this table's older entries can never hit again
-    _drop_build_entries(r_table.uid, keep_version=r_table.version)
-    nbytes = _entry_bytes(entry)
-    if nbytes > _BUILD_INDEX_CAPACITY:
-        return  # larger than the whole budget: never cached
-    while _build_index_bytes + nbytes > _BUILD_INDEX_CAPACITY and _BUILD_INDEX_CACHE:
-        _pop_build_entry(next(iter(_BUILD_INDEX_CACHE)))
-    _BUILD_INDEX_CACHE[(r_table.uid, r_table.version, key, r_proj, path)] = entry
-    _build_index_bytes += nbytes
-    if r_table.uid not in _BUILD_INDEX_FINALIZED:
-        weakref.finalize(r_table, _drop_build_entries, r_table.uid)
-        _BUILD_INDEX_FINALIZED.add(r_table.uid)
+    q = plan(table).filter(pred, "lt", k).groupby(group, agg, "avg", num_groups)
+    return compile_plan(engine, q, path=path, colstore=colstore).run()
 
 
 def q5_hash_join(
@@ -308,49 +142,13 @@ def q5_hash_join(
     RME's role (paper §6): project only {key, projected} from each side, so
     the join's data movement shrinks from full rows to two slim columns per
     table; the join itself stays on the CPU ("relying on traditional CPUs for
-    data processing once good locality has been achieved").  The build side is
-    assumed duplicate-free on the key (primary key), as in the paper's setup.
-    The implementation is a sort-probe equi-join (searchsorted): functionally
-    the single-pass hash table build + probe of the paper, but MXU/VPU-friendly
-    (no dynamic-size hash buckets) — a TPU adaptation noted in DESIGN.md.
+    data processing once good locality has been achieved").  Both sides go
+    through the batch path: one shared scan per table.
     """
-    # probe the sorted-index cache before touching the build side at all: a
-    # warm hit skips the build-side column reads, not just the argsort
-    cached = _probe_build_index(r_table, key, r_proj, path)
-    if path == "rme":
-        sv = engine.register(s_table, (s_proj, key))
-        if cached is None:
-            rv = engine.register(r_table, (key, r_proj))
-            # both sides go through the batch path: one shared scan per table
-            s_packed, r_packed = engine.materialize_many([sv, rv])
-            r_key = r_packed[:, rv.column_words(key)[0]]
-            r_val = r_packed[:, rv.column_words(r_proj)[0]]
-        else:
-            s_packed = sv.packed()
-        s_key = s_packed[:, sv.column_words(key)[0]]
-        s_val = s_packed[:, sv.column_words(s_proj)[0]]
-    else:
-        view = None
-        s_key = _col_any(engine, s_table, s_colstore, view, key, path)
-        s_val = _col_any(engine, s_table, s_colstore, view, s_proj, path)
-        if cached is None:
-            r_key = _col_any(engine, r_table, r_colstore, view, key, path)
-            r_val = _col_any(engine, r_table, r_colstore, view, r_proj, path)
-
-    if cached is not None:
-        rk_sorted, rv_sorted = cached
-    else:
-        order = jnp.argsort(r_key)
-        rk_sorted, rv_sorted = r_key[order], r_val[order]
-        _insert_build_index((rk_sorted, rv_sorted), r_table, key, r_proj, path)
-    pos = jnp.searchsorted(rk_sorted, s_key)
-    pos = jnp.clip(pos, 0, rk_sorted.shape[0] - 1)
-    matched = rk_sorted[pos] == s_key
-    return JoinResult(
-        s_proj=s_val,
-        r_proj=jnp.where(matched, rv_sorted[pos], 0),
-        matched=matched,
-    )
+    q = plan(s_table).join(r_table, key=key, left_proj=s_proj, right_proj=r_proj)
+    return compile_plan(
+        engine, q, path=path, colstore=s_colstore, right_colstore=r_colstore
+    ).run()
 
 
 def run_query(name: str, *args, **kwargs):

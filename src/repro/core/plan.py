@@ -1,0 +1,342 @@
+"""Logical query plans — the declarative layer the paper's §8 argues for.
+
+The closing argument of the paper is that native column access "can vastly
+simplify the software logic": once the RME serves any column group at row-store
+cost, the *software* no longer hand-routes each query — it states the query
+shape and lets a planner pick the datapath.  This module is that statement
+layer: a small immutable operator tree (Scan / Filter / Project / Aggregate /
+GroupBy / Join) plus a fluent :func:`plan` builder, deliberately scoped to the
+query shapes the engine can serve natively (the Relational Memory Benchmark,
+Listing 5 — Q0 through Q5).
+
+Nothing here executes.  :func:`repro.core.planner.compile_plan` lowers a tree
+to a :class:`~repro.core.planner.PhysicalQuery` routed through fused offload
+kernels, shared-scan materialization, or host-side fallback; the
+:class:`~repro.serve.query_server.QueryServer` admission-queues trees from many
+clients and coalesces their scans.  :func:`decompose` is the shared front end:
+it flattens a tree into the canonical ``QueryShape`` both consumers route on,
+rejecting shapes the physical layer cannot serve (:class:`PlanError`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from .table import RelationalTable
+
+AGG_OPS = ("sum", "count", "avg")
+GROUP_OPS = ("sum", "avg")
+PRED_OPS = ("gt", "lt")
+
+
+class PlanError(ValueError):
+    """A logical plan the physical layer cannot serve (shape, ops, columns)."""
+
+
+# ------------------------------------------------------------------ nodes
+@dataclasses.dataclass(frozen=True, eq=False)
+class PlanNode:
+    """Base of the logical operator tree. Immutable; identity comparison."""
+
+    def children(self) -> tuple["PlanNode", ...]:
+        return ()
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Scan(PlanNode):
+    """Leaf: the row store of one relation (always a row store, paper §4)."""
+
+    table: RelationalTable
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Filter(PlanNode):
+    """``WHERE col <op> k`` — one predicate, matching the fused kernels."""
+
+    child: PlanNode
+    col: str
+    op: str
+    k: int | float = 0
+
+    def __post_init__(self):
+        if self.op not in PRED_OPS:
+            raise PlanError(f"filter op {self.op!r}; want one of {PRED_OPS}")
+
+    def children(self) -> tuple[PlanNode, ...]:
+        return (self.child,)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Project(PlanNode):
+    """``SELECT col, ...`` — a column group (an ephemeral-view registration)."""
+
+    child: PlanNode
+    columns: tuple[str, ...]
+
+    def __post_init__(self):
+        if not self.columns:
+            raise PlanError("projection needs at least one column")
+        if len(set(self.columns)) != len(self.columns):
+            raise PlanError(f"duplicate columns in projection {self.columns}")
+
+    def children(self) -> tuple[PlanNode, ...]:
+        return (self.child,)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Aggregate(PlanNode):
+    """``SELECT <op>(col)`` — a scalar the engine can answer near-memory."""
+
+    child: PlanNode
+    col: str
+    op: str = "sum"
+
+    def __post_init__(self):
+        if self.op not in AGG_OPS:
+            raise PlanError(f"aggregate op {self.op!r}; want one of {AGG_OPS}")
+
+    def children(self) -> tuple[PlanNode, ...]:
+        return (self.child,)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class GroupBy(PlanNode):
+    """``SELECT <op>(agg) ... GROUP BY group`` over a static group domain."""
+
+    child: PlanNode
+    group: str
+    agg: str
+    op: str = "avg"
+    num_groups: int = 64
+
+    def __post_init__(self):
+        if self.op not in GROUP_OPS:
+            raise PlanError(f"group-by op {self.op!r}; want one of {GROUP_OPS}")
+        if self.num_groups <= 0:
+            raise PlanError("num_groups must be positive (static accumulators)")
+
+    def children(self) -> tuple[PlanNode, ...]:
+        return (self.child,)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Join(PlanNode):
+    """``SELECT L.left_proj, R.right_proj FROM L JOIN R ON L.key = R.key``.
+
+    The build side ``right`` is assumed duplicate-free on ``key`` (primary
+    key), as in the paper's setup; both sides must be plain scans — the RME's
+    role is slimming each side to {key, payload} before the CPU joins.
+    """
+
+    left: PlanNode
+    right: PlanNode
+    key: str
+    left_proj: str
+    right_proj: str
+
+    def children(self) -> tuple[PlanNode, ...]:
+        return (self.left, self.right)
+
+
+# ---------------------------------------------------------------- builder
+class PlanBuilder:
+    """Fluent plan construction: ``plan(t).filter("A3", "gt", 0).sum("A1")``.
+
+    Each method returns a new builder over an extended tree; ``build()``
+    returns the root node.  Builders are accepted anywhere a node is (the
+    compiler and server call ``build()`` themselves).
+    """
+
+    def __init__(self, node: PlanNode):
+        self.node = node
+
+    def build(self) -> PlanNode:
+        return self.node
+
+    def filter(self, col: str, op: str, k: int | float = 0) -> "PlanBuilder":
+        return PlanBuilder(Filter(self.node, col, op, k))
+
+    def project(self, *columns: str) -> "PlanBuilder":
+        return PlanBuilder(Project(self.node, tuple(columns)))
+
+    def aggregate(self, col: str, op: str = "sum") -> "PlanBuilder":
+        return PlanBuilder(Aggregate(self.node, col, op))
+
+    def sum(self, col: str) -> "PlanBuilder":
+        return self.aggregate(col, "sum")
+
+    def avg(self, col: str) -> "PlanBuilder":
+        return self.aggregate(col, "avg")
+
+    def count(self, col: str) -> "PlanBuilder":
+        return self.aggregate(col, "count")
+
+    def groupby(
+        self, group: str, agg: str, op: str = "avg", num_groups: int = 64
+    ) -> "PlanBuilder":
+        return PlanBuilder(GroupBy(self.node, group, agg, op, num_groups))
+
+    def join(
+        self,
+        right: "PlanBuilder | PlanNode | RelationalTable",
+        key: str,
+        left_proj: str,
+        right_proj: str,
+    ) -> "PlanBuilder":
+        if isinstance(right, RelationalTable):
+            right = Scan(right)
+        elif isinstance(right, PlanBuilder):
+            right = right.node
+        return PlanBuilder(Join(self.node, right, key, left_proj, right_proj))
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"PlanBuilder({describe(self.node)})"
+
+
+def plan(table: RelationalTable) -> PlanBuilder:
+    """Start a plan over ``table``'s row store."""
+    return PlanBuilder(Scan(table))
+
+
+# ----------------------------------------------------------- decomposition
+@dataclasses.dataclass(frozen=True)
+class Predicate:
+    """The single fused predicate the kernels evaluate in-scan."""
+
+    col: str
+    op: str
+    k: int | float
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinSpec:
+    right_table: RelationalTable
+    key: str
+    left_proj: str
+    right_proj: str
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class QueryShape:
+    """Canonical flattened query: what the physical layer routes on.
+
+    ``kind`` is one of ``"project"`` (with or without a fused predicate),
+    ``"aggregate"``, ``"groupby"``, ``"join"``.  ``columns`` is the column
+    group the rme datapath would enable for this query — the planner costs
+    and the server coalesces on exactly this set.
+    """
+
+    kind: str
+    table: RelationalTable
+    columns: tuple[str, ...]
+    pred: Predicate | None = None
+    agg: Aggregate | None = None
+    group: GroupBy | None = None
+    join: JoinSpec | None = None
+
+
+def _base_scan(node: PlanNode) -> Scan:
+    if not isinstance(node, Scan):
+        raise PlanError(f"expected a plain Scan, got {type(node).__name__}")
+    return node
+
+
+def _ordered(table: RelationalTable, columns) -> tuple[str, ...]:
+    """Physical (byte-offset) order — the packed layout the RME emits."""
+    for name in columns:
+        table.schema.column(name)  # raises KeyError for unknown columns
+    return tuple(sorted(set(columns), key=table.schema.byte_offset))
+
+
+def decompose(node: PlanNode | PlanBuilder) -> QueryShape:
+    """Flatten a plan tree into the canonical :class:`QueryShape`.
+
+    Accepted shapes (exactly the Relational Memory Benchmark queries):
+    ``[Aggregate|GroupBy]? <- Project? <- Filter? <- Scan`` with Project and
+    Filter commuting, or ``Join(Scan, Scan)``.  At most one Filter (the fused
+    kernels evaluate a single predicate) and at most one Project.
+    """
+    if isinstance(node, PlanBuilder):
+        node = node.node
+    if isinstance(node, Join):
+        left = _base_scan(node.left)
+        right = _base_scan(node.right)
+        cols = _ordered(left.table, (node.left_proj, node.key))
+        _ordered(right.table, (node.key, node.right_proj))  # validate names
+        return QueryShape(
+            kind="join",
+            table=left.table,
+            columns=cols,
+            join=JoinSpec(right.table, node.key, node.left_proj, node.right_proj),
+        )
+
+    agg: Aggregate | None = None
+    group: GroupBy | None = None
+    if isinstance(node, Aggregate):
+        agg, node = node, node.child
+    elif isinstance(node, GroupBy):
+        group, node = node, node.child
+
+    project: Project | None = None
+    pred: Predicate | None = None
+    while not isinstance(node, Scan):
+        if isinstance(node, Project):
+            if project is not None:
+                raise PlanError("at most one Project per plan")
+            project, node = node, node.child
+        elif isinstance(node, Filter):
+            if pred is not None:
+                raise PlanError("at most one Filter per plan (fused predicate)")
+            pred, node = Predicate(node.col, node.op, node.k), node.child
+        elif isinstance(node, (Aggregate, GroupBy, Join)):
+            raise PlanError(
+                f"{type(node).__name__} must be the plan root, not an input"
+            )
+        else:
+            raise PlanError(f"unsupported plan node {type(node).__name__}")
+    table = node.table
+
+    if agg is not None:
+        cols = _ordered(table, (agg.col,) + ((pred.col,) if pred else ()))
+        if project is not None:
+            raise PlanError("Project under Aggregate is redundant; drop it")
+        return QueryShape("aggregate", table, cols, pred=pred, agg=agg)
+    if group is not None:
+        if project is not None:
+            raise PlanError("Project under GroupBy is redundant; drop it")
+        cols = _ordered(
+            table,
+            (group.group, group.agg) + ((pred.col,) if pred else ()),
+        )
+        return QueryShape("groupby", table, cols, pred=pred, group=group)
+    out = project.columns if project is not None else table.schema.names
+    if pred is not None:
+        table.schema.column(pred.col)  # admission-time check, like _ordered
+    # the scan must also read the predicate column, but the *output* group is
+    # the projection — columns is what the fused filter kernel emits
+    return QueryShape("project", table, _ordered(table, out), pred=pred)
+
+
+def describe(node: PlanNode | PlanBuilder) -> str:
+    """One-line pretty form, root first: ``Sum(A1) <- Filter(A3 gt 0) <- Scan``."""
+    if isinstance(node, PlanBuilder):
+        node = node.node
+    if isinstance(node, Scan):
+        return f"Scan[{node.table.row_count}x{len(node.table.schema.columns)}]"
+    if isinstance(node, Filter):
+        return f"Filter({node.col} {node.op} {node.k}) <- {describe(node.child)}"
+    if isinstance(node, Project):
+        return f"Project({','.join(node.columns)}) <- {describe(node.child)}"
+    if isinstance(node, Aggregate):
+        return f"{node.op.title()}({node.col}) <- {describe(node.child)}"
+    if isinstance(node, GroupBy):
+        return (
+            f"GroupBy({node.group}, {node.op}({node.agg}), G={node.num_groups})"
+            f" <- {describe(node.child)}"
+        )
+    if isinstance(node, Join):
+        return (
+            f"Join(on {node.key}: {node.left_proj}, {node.right_proj})"
+            f" <- [{describe(node.left)} | {describe(node.right)}]"
+        )
+    return type(node).__name__

@@ -1,10 +1,11 @@
-"""Per-query execution-strategy selection (paper §4, "Indexes & Execution
-Strategies"): "the query optimizer can decide to execute one query with
-indexes and another query with columns, alternating between a row-at-a-time
-and column-at-a-time execution strategy depending on what is the best fit."
+"""Execution-strategy selection + the logical-plan compiler (paper §4, §8).
 
-The planner costs each access path in *bytes through the hierarchy* — the
-unit the whole system optimizes — and picks the cheapest:
+Per-query costing (paper §4, "Indexes & Execution Strategies"): "the query
+optimizer can decide to execute one query with indexes and another query with
+columns, alternating between a row-at-a-time and column-at-a-time execution
+strategy depending on what is the best fit."  The planner costs each access
+path in *bytes through the hierarchy* — the unit the whole system optimizes —
+and picks the cheapest:
 
   row   : N · R                      (full rows; free if the query touches
                                       ~all columns anyway)
@@ -16,18 +17,46 @@ unit the whole system optimizes — and picks the cheapest:
   fused : O(1)                       (aggregations the engine answers with a
                                       scalar — Q0/Q3-shaped queries)
 
-Selectivity-aware: a fused aggregate is preferred whenever legal; a hot view
-beats everything that must touch DRAM; RME vs row flips exactly at the
-projectivity crossover of the paper's Figure 1.
+On top of the cost model sits :func:`compile_plan`: it lowers a logical plan
+(:mod:`repro.core.plan`) to a :class:`PhysicalQuery` routed to the best
+physical path — fused offload kernels (``rme_aggregate`` / ``rme_filter`` /
+``ops.groupby_sum``), shared-scan materialization through the engine's
+``materialize_many``, or a host-side fallback when the geometry is
+inexpressible (beyond the configuration port's Q cap) or the caller asked for
+a baseline path (``"row"`` / ``"col"``).  A compiled query splits into
+*views to materialize* (batchable across queries — the
+:class:`~repro.serve.query_server.QueryServer` hands the views of a whole
+tick to one ``materialize_many`` call), a *launch* step that enqueues device
+work without host syncs, and a *finalize* step that is the only point allowed
+to block.
+
+The q5 sorted build-side index cache lives here too (it is physical-execution
+state, not operator-surface state): argsort over the build table is the
+join's dominant host-side cost, and the build side is usually the stable
+dimension table — re-sorting it per probe throws that work away.  Keyed by
+(table uid, version, key col, payload col, path) so any OLTP mutation of the
+build side invalidates, exactly like the reorg cache (uid, not id(): the
+cache is module-global and must never alias a recycled address).  The "col"
+path is never cached — its data comes from a caller-supplied colstore the
+table's version says nothing about.  FIFO-bounded by bytes, and a dead build
+table's entries are dropped by a weakref finalizer so the global cache cannot
+pin device arrays of collected tables.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+import weakref
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
 
 from .descriptor import bytes_moved
 from .engine import RelationalMemoryEngine
+from .ephemeral import EphemeralView
+from .plan import PlanBuilder, PlanNode, Predicate, QueryShape, decompose
 from .schema import MAX_ENABLED_COLUMNS, TableGeometry, merge_geometries
 from .table import RelationalTable
 
@@ -66,13 +95,16 @@ def plan_query(
     # hot is only available if the reorganization cache holds a live entry;
     # peek() probes without get()'s delete-on-stale side effect — planning a
     # query must not mutate cache state
-    key = (table.uid, geom.cache_key(), engine.revision)
-    hot_entry = engine.cache.peek(key, table.version)
+    hot_entry = engine.cache.peek(engine.view_key(table, geom), table.version)
     if hot_entry is None:
         costs.pop("hot")
     if aggregate_only and len(columns) <= 2:
         costs["fused"] = 8  # the engine returns [sum, count]
-    path = min(costs, key=costs.get)
+    # equal-cost ties resolve toward the engine: a fused scalar beats a hot
+    # read beats an rme scan beats full rows — at the same byte count the
+    # engine path additionally warms the reorg cache for future hits
+    pref = ("fused", "hot", "rme", "row")
+    path = min(costs, key=lambda p: (costs[p], pref.index(p)))
     return Plan(path=path, est_bytes=costs[path], alternatives=costs)
 
 
@@ -154,8 +186,6 @@ def execute_sum(
     pred_k=0,
 ) -> tuple[float, Plan]:
     """Plan + execute a Q0/Q3-shaped query through the chosen path."""
-    import jax.numpy as jnp
-
     cols = [agg_col] + ([pred_col] if pred_col else [])
     plan = plan_query(engine, table, cols, aggregate_only=True)
     if plan.path == "fused":
@@ -168,6 +198,543 @@ def execute_sum(
     if pred_col is not None and pred_op != "none":
         off_p, _ = view.column_words(pred_col)
         p = packed[:, off_p]
-        mask = p > pred_k if pred_op == "gt" else p < pred_k
+        mask = _pred_mask(p, pred_op, pred_k)
         vals = jnp.where(mask, vals, 0.0)
     return float(jnp.sum(vals)), plan
+
+
+# ------------------------------------------------- host-side access paths
+def _decode_i32(x: jax.Array, dtype: str) -> jax.Array:
+    if dtype == "float32":
+        return jax.lax.bitcast_convert_type(x, jnp.float32)
+    return x
+
+
+def _pred_mask(vals: jax.Array, op: str, k) -> jax.Array:
+    """The single fused predicate, evaluated host/device-side (gt/lt only —
+    the same ops the kernels implement)."""
+    return vals > k if op == "gt" else vals < k
+
+
+def _col_from_rows(table: RelationalTable, name: str) -> jax.Array:
+    """Direct row-wise column read: ships every row word, slices one column."""
+    words = jnp.asarray(table.words())  # the whole row store moves
+    off = table.schema.word_offset(name)
+    col = table.schema.column(name)
+    return _decode_i32(words[:, off], col.dtype)
+
+
+def _host_col(
+    table: RelationalTable,
+    colstore: Mapping[str, np.ndarray] | None,
+    name: str,
+    path: str,
+) -> jax.Array:
+    """One decoded column through a baseline path (``"row"`` or ``"col"``)."""
+    if path == "row":
+        return _col_from_rows(table, name)
+    if path == "col":
+        if colstore is None:
+            raise ValueError(f"path 'col' needs a colstore for {name!r}")
+        return jnp.asarray(colstore[name])
+    raise ValueError(path)
+
+
+def _host_words(
+    table: RelationalTable,
+    colstore: Mapping[str, np.ndarray] | None,
+    name: str,
+    path: str,
+) -> jax.Array:
+    """One column as raw (N, words) int32 — bit-exact with the packed layout."""
+    col = table.schema.column(name)
+    if path == "row":
+        words = jnp.asarray(table.words())
+        off = table.schema.word_offset(name)
+        return words[:, off : off + col.words]
+    arr = np.asarray(colstore[name])
+    if arr.dtype.kind == "S":  # char columns travel as raw words
+        arr = np.ascontiguousarray(arr).view(np.uint8).reshape(
+            table.row_count, -1
+        ).view(np.int32)
+    return jnp.asarray(arr).reshape(table.row_count, -1).view(jnp.int32)
+
+
+# ------------------------------------------------- q5 build-side index cache
+_BUILD_INDEX_CACHE: dict[tuple, tuple[jax.Array, jax.Array]] = {}
+_BUILD_INDEX_CAPACITY = 64 << 20
+_build_index_bytes = 0  # incremental occupancy (kept exact by every mutation)
+_BUILD_INDEX_FINALIZED: set[int] = set()
+JOIN_BUILD_STATS = {"hits": 0, "misses": 0}
+
+
+def _entry_bytes(entry: tuple[jax.Array, jax.Array]) -> int:
+    return sum(a.size * a.dtype.itemsize for a in entry)
+
+
+def _pop_build_entry(k: tuple) -> None:
+    global _build_index_bytes
+    entry = _BUILD_INDEX_CACHE.pop(k, None)
+    if entry is not None:
+        _build_index_bytes -= _entry_bytes(entry)
+
+
+def clear_join_build_cache() -> None:
+    global _build_index_bytes
+    _BUILD_INDEX_CACHE.clear()
+    _build_index_bytes = 0
+    JOIN_BUILD_STATS["hits"] = 0
+    JOIN_BUILD_STATS["misses"] = 0
+
+
+def _drop_build_entries(uid: int, keep_version: int | None = None) -> None:
+    """Drop a table's cached indexes (all of them, or all but one version)."""
+    if keep_version is None:
+        _BUILD_INDEX_FINALIZED.discard(uid)
+    for k in [k for k in _BUILD_INDEX_CACHE
+              if k[0] == uid and k[1] != keep_version]:
+        _pop_build_entry(k)
+
+
+def _probe_build_index(
+    r_table: RelationalTable, key: str, r_proj: str, path: str
+) -> tuple[jax.Array, jax.Array] | None:
+    """Warm-path probe, called *before* the build side is materialized — a hit
+    must skip the build-side column reads entirely, not just the argsort."""
+    if path == "col":  # colstore contents are not keyed by the table version
+        return None
+    hit = _BUILD_INDEX_CACHE.get((r_table.uid, r_table.version, key, r_proj, path))
+    if hit is not None:
+        JOIN_BUILD_STATS["hits"] += 1
+    else:
+        JOIN_BUILD_STATS["misses"] += 1
+    return hit
+
+
+def _insert_build_index(
+    entry: tuple[jax.Array, jax.Array],
+    r_table: RelationalTable,
+    key: str,
+    r_proj: str,
+    path: str,
+) -> None:
+    global _build_index_bytes
+    if path == "col":
+        return
+    # versions are monotonic: this table's older entries can never hit again
+    _drop_build_entries(r_table.uid, keep_version=r_table.version)
+    nbytes = _entry_bytes(entry)
+    if nbytes > _BUILD_INDEX_CAPACITY:
+        return  # larger than the whole budget: never cached
+    # same-key overwrite must release the old bytes first — two identical
+    # joins compiled in one serving tick both miss at compile time and both
+    # insert at launch, and occupancy must not drift upward
+    _pop_build_entry((r_table.uid, r_table.version, key, r_proj, path))
+    while _build_index_bytes + nbytes > _BUILD_INDEX_CAPACITY and _BUILD_INDEX_CACHE:
+        _pop_build_entry(next(iter(_BUILD_INDEX_CACHE)))
+    _BUILD_INDEX_CACHE[(r_table.uid, r_table.version, key, r_proj, path)] = entry
+    _build_index_bytes += nbytes
+    if r_table.uid not in _BUILD_INDEX_FINALIZED:
+        weakref.finalize(r_table, _drop_build_entries, r_table.uid)
+        _BUILD_INDEX_FINALIZED.add(r_table.uid)
+
+
+@dataclasses.dataclass
+class JoinResult:
+    """Static-shape join output: one slot per probe row + match validity."""
+
+    s_proj: jax.Array  # projected column from the probe side S
+    r_proj: jax.Array  # matched column from the build side R (0 where no match)
+    matched: jax.Array  # bool mask
+
+
+# ------------------------------------------------------------ plan compiler
+@dataclasses.dataclass
+class PhysicalQuery:
+    """A logical plan lowered to a physical route.
+
+    Execution splits into three steps so a serving tick can interleave many
+    queries without host syncs:
+
+    * ``views`` — ephemeral views the route needs materialized.  A batch
+      executor hands the views of *all* queries in a tick to one
+      ``materialize_many`` call (same-table views coalesce into one shared
+      scan); the packed results come back aligned with ``views``.
+    * ``launch(packed)`` — enqueue the remaining device work (fused kernels,
+      async aggregates, join probe math); returns an opaque token, never
+      blocks on the host.
+    * ``finalize(token)`` — produce the user-facing result; the only step
+      allowed to pull scalars to the host.
+
+    ``run()`` is the blocking one-shot spelling (what the q0–q5 operator
+    wrappers call).
+    """
+
+    engine: RelationalMemoryEngine
+    shape: QueryShape
+    path: str  # requested data path: "rme" | "row" | "col"
+    route: str  # chosen physical route, e.g. "fused-aggregate", "shared-scan"
+    cost: Plan | None
+    views: tuple[EphemeralView, ...]
+    _launch: Callable[[Sequence[jax.Array]], Any]
+    _finalize: Callable[[Any], Any]
+
+    def launch(self, packed: Sequence[jax.Array]) -> Any:
+        return self._launch(packed)
+
+    def finalize(self, token: Any) -> Any:
+        return self._finalize(token)
+
+    def run(self) -> Any:
+        packed = self.engine.materialize_many(list(self.views)) if self.views else []
+        return self._finalize(self._launch(packed))
+
+
+def _pred_args(pred: Predicate | None) -> tuple[str | None, str, Any]:
+    if pred is None:
+        return None, "none", 0
+    return pred.col, pred.op, pred.k
+
+
+def _compile_aggregate(
+    engine: RelationalMemoryEngine, shape: QueryShape, path: str, colstore
+) -> PhysicalQuery:
+    agg = shape.agg
+    pred_col, pred_op, pred_k = _pred_args(shape.pred)
+
+    def _combine(s: float, c: float):
+        if agg.op == "sum":
+            return s
+        if agg.op == "count":
+            return c
+        return s / max(c, 1.0)
+
+    if path != "rme":
+        def launch(_):
+            a = _host_col(shape.table, colstore, agg.col, path).astype(jnp.float32)
+            if pred_col is not None:
+                p = _host_col(shape.table, colstore, pred_col, path)
+                mask = _pred_mask(p, pred_op, pred_k)
+            else:
+                mask = jnp.ones(a.shape, dtype=bool)
+            return jnp.sum(jnp.where(mask, a, 0.0)), jnp.sum(mask)
+
+        return PhysicalQuery(
+            engine, shape, path, route=f"host-{path}", cost=None, views=(),
+            _launch=launch,
+            _finalize=lambda t: _combine(float(t[0]), float(t[1])),
+        )
+
+    cost = plan_query(engine, shape.table, list(shape.columns), aggregate_only=True)
+    if cost.path == "fused":
+        def launch(_):
+            return engine.aggregate_async(
+                shape.table, agg.col, pred_col, pred_op, pred_k
+            )
+
+        def finalize(out):
+            engine.stats.bytes_to_cpu += 8  # the scalar pair crosses on sync
+            return _combine(float(out[0]), float(out[1]))
+
+        return PhysicalQuery(
+            engine, shape, path, route="fused-aggregate", cost=cost, views=(),
+            _launch=launch, _finalize=finalize,
+        )
+
+    # hot / rme / row routes reduce a materialized (or sliced) column group
+    view = engine.register(shape.table, shape.columns)
+
+    def launch(packed):
+        arr = packed[0]
+        off_a, _ = view.column_words(agg.col)
+        vals = arr[:, off_a].astype(jnp.float32)
+        if pred_col is not None:
+            off_p, _ = view.column_words(pred_col)
+            p = arr[:, off_p]
+            mask = _pred_mask(p, pred_op, pred_k)
+        else:
+            mask = jnp.ones(vals.shape, dtype=bool)
+        return jnp.sum(jnp.where(mask, vals, 0.0)), jnp.sum(mask)
+
+    return PhysicalQuery(
+        engine, shape, path, route=cost.path, cost=cost, views=(view,),
+        _launch=launch,
+        _finalize=lambda t: _combine(float(t[0]), float(t[1])),
+    )
+
+
+def _compile_groupby(
+    engine: RelationalMemoryEngine, shape: QueryShape, path: str, colstore
+) -> PhysicalQuery:
+    g = shape.group
+    pred_col, pred_op, pred_k = _pred_args(shape.pred)
+
+    def _combine(sums: jax.Array, counts: jax.Array) -> jax.Array:
+        if g.op == "sum":
+            return sums
+        return sums / jnp.maximum(counts, 1.0)
+
+    if path != "rme":
+        def launch(_):
+            a = _host_col(shape.table, colstore, g.agg, path).astype(jnp.float32)
+            grp = jnp.remainder(
+                _host_col(shape.table, colstore, g.group, path), g.num_groups
+            )
+            if pred_col is not None:
+                p = _host_col(shape.table, colstore, pred_col, path)
+                mask = _pred_mask(p, pred_op, pred_k)
+            else:
+                mask = jnp.ones(a.shape, dtype=bool)
+            vals = jnp.where(mask, a, 0.0)
+            cnt = mask.astype(jnp.float32)
+            sums = jax.ops.segment_sum(vals, grp, num_segments=g.num_groups)
+            counts = jax.ops.segment_sum(cnt, grp, num_segments=g.num_groups)
+            return sums, counts
+
+        return PhysicalQuery(
+            engine, shape, path, route=f"host-{path}", cost=None, views=(),
+            _launch=launch, _finalize=lambda t: _combine(*t),
+        )
+
+    from repro.kernels.ops import groupby_sum
+
+    s = shape.table.schema
+
+    def launch(_):
+        kwargs = dict(
+            group_word=s.word_offset(g.group), agg_word=s.word_offset(g.agg),
+            num_groups=g.num_groups, agg_dtype=s.column(g.agg).dtype,
+            block_rows=engine.block_rows, interpret=engine.interpret,
+        )
+        if pred_col is not None:
+            kwargs.update(
+                pred_word=s.word_offset(pred_col),
+                pred_dtype=s.column(pred_col).dtype,
+                pred_op=pred_op, pred_k=pred_k,
+            )
+        return groupby_sum(engine.device_words(shape.table), **kwargs)
+
+    return PhysicalQuery(
+        engine, shape, path, route="fused-groupby", cost=None, views=(),
+        _launch=launch, _finalize=lambda t: _combine(*t),
+    )
+
+
+def _resident_full_rows(engine: RelationalMemoryEngine, table, cols) -> jax.Array:
+    """Column word-slices streamed from the device-resident row store, charged
+    to the PMU as one full-row pass — the beyond-Q-cap fallback datapath (no
+    per-call host re-upload; the DeviceRowStore keeps the buffer warm)."""
+    words = engine.device_words(table)
+    parts, out_bytes = [], 0
+    for n in cols:
+        off = table.schema.word_offset(n)
+        w = table.schema.column(n).words
+        parts.append(words[:, off : off + w])
+        out_bytes += table.schema.column(n).width
+    engine.stats.rows_projected += table.row_count
+    engine.stats.bytes_from_dram += table.row_count * table.schema.row_bytes
+    engine.stats.bytes_to_cpu += table.row_count * out_bytes
+    return jnp.concatenate(parts, axis=1)
+
+
+def _compile_project(
+    engine: RelationalMemoryEngine, shape: QueryShape, path: str, colstore
+) -> PhysicalQuery:
+    table, cols = shape.table, shape.columns
+    pred_col, pred_op, pred_k = _pred_args(shape.pred)
+
+    if shape.pred is not None:
+        # fused selection+projection: rows failing the predicate are zeroed
+        # in-scan, a validity bitmap travels alongside (rme_filter kernel)
+        if path == "rme":
+            if len(cols) > MAX_ENABLED_COLUMNS:
+                # the configuration port cannot express the output group:
+                # stream full rows from the resident store, predicate applied
+                # engine-side — same (packed, mask) contract as the kernel
+                def launch(_):
+                    words = engine.device_words(table)
+                    p = _decode_i32(
+                        words[:, table.schema.word_offset(pred_col)],
+                        table.schema.column(pred_col).dtype,
+                    )
+                    mask = _pred_mask(p, pred_op, pred_k)
+                    packed = _resident_full_rows(engine, table, cols)
+                    return jnp.where(mask[:, None], packed, 0), mask
+
+                return PhysicalQuery(
+                    engine, shape, path, route="row-fallback", cost=None,
+                    views=(), _launch=launch, _finalize=lambda t: t,
+                )
+
+            from repro.kernels.ops import filter_project
+
+            geom = TableGeometry.from_schema(table.schema, cols, table.row_count)
+            pw = table.schema.word_offset(pred_col)
+
+            def launch(_):
+                return filter_project(
+                    engine.device_words(table), geom, pred_word=pw,
+                    pred_dtype=table.schema.column(pred_col).dtype,
+                    pred_op=pred_op, pred_k=pred_k,
+                    block_rows=engine.block_rows, interpret=engine.interpret,
+                )
+
+            return PhysicalQuery(
+                engine, shape, path, route="fused-filter", cost=None, views=(),
+                _launch=launch, _finalize=lambda t: t,
+            )
+
+        def launch(_):
+            p = _host_col(table, colstore, pred_col, path)
+            mask = _pred_mask(p, pred_op, pred_k)
+            parts = [_host_words(table, colstore, n, path) for n in cols]
+            packed = jnp.concatenate(parts, axis=1)
+            return jnp.where(mask[:, None], packed, 0), mask
+
+        return PhysicalQuery(
+            engine, shape, path, route=f"host-{path}", cost=None, views=(),
+            _launch=launch, _finalize=lambda t: t,
+        )
+
+    if path == "rme":
+        cost = plan_query(engine, table, list(cols))
+        if cost.path in ("rme", "hot"):
+            view = engine.register(table, cols)
+            return PhysicalQuery(
+                engine, shape, path, route=cost.path, cost=cost, views=(view,),
+                _launch=lambda packed: packed[0], _finalize=lambda t: t,
+            )
+
+        # inexpressible (beyond the Q cap) or genuinely cheaper as full rows:
+        # the engine streams whole rows — from the *device-resident* store
+        # (no per-call host re-upload), charged to the PMU as a full-row pass
+        return PhysicalQuery(
+            engine, shape, path, route="row-fallback", cost=cost, views=(),
+            _launch=lambda _: _resident_full_rows(engine, table, cols),
+            _finalize=lambda t: t,
+        )
+
+    def launch(_):
+        parts = [_host_words(table, colstore, n, path) for n in cols]
+        return jnp.concatenate(parts, axis=1)
+
+    return PhysicalQuery(
+        engine, shape, path, route=f"host-{path}", cost=None, views=(),
+        _launch=launch, _finalize=lambda t: t,
+    )
+
+
+def _sort_probe(
+    s_key: jax.Array,
+    s_val: jax.Array,
+    cached: tuple[jax.Array, jax.Array] | None,
+    read_build: Callable[[], tuple[jax.Array, jax.Array]],
+    r_table: RelationalTable,
+    key: str,
+    r_proj: str,
+    path: str,
+) -> JoinResult:
+    """Probe-side join math shared by the rme and host routes: reuse the
+    cached sorted build index, or build + insert it from ``read_build()``
+    (only called on a miss — a warm hit must skip the build-side reads)."""
+    if cached is not None:
+        rk_sorted, rv_sorted = cached
+    else:
+        r_key, r_val = read_build()
+        order = jnp.argsort(r_key)
+        rk_sorted, rv_sorted = r_key[order], r_val[order]
+        _insert_build_index((rk_sorted, rv_sorted), r_table, key, r_proj, path)
+    pos = jnp.clip(jnp.searchsorted(rk_sorted, s_key), 0, rk_sorted.shape[0] - 1)
+    matched = rk_sorted[pos] == s_key
+    return JoinResult(
+        s_proj=s_val,
+        r_proj=jnp.where(matched, rv_sorted[pos], 0),
+        matched=matched,
+    )
+
+
+def _compile_join(
+    engine: RelationalMemoryEngine,
+    shape: QueryShape,
+    path: str,
+    colstore,
+    right_colstore,
+) -> PhysicalQuery:
+    """Sort-probe equi-join (paper §6): RME slims both sides to {key, payload},
+    the CPU joins "once good locality has been achieved".  Functionally the
+    single-pass hash build + probe of the paper, but MXU/VPU-friendly (no
+    dynamic-size hash buckets) — a TPU adaptation noted in DESIGN.md."""
+    j = shape.join
+    s_table, r_table = shape.table, j.right_table
+    # probe the sorted-index cache before touching the build side at all: a
+    # warm hit skips the build-side column reads, not just the argsort
+    cached = _probe_build_index(r_table, j.key, j.right_proj, path)
+
+    if path == "rme":
+        sv = engine.register(s_table, (j.left_proj, j.key))
+        rv = None if cached is not None else engine.register(
+            r_table, (j.key, j.right_proj)
+        )
+        views = (sv,) if rv is None else (sv, rv)
+
+        def launch(packed):
+            def read_build():
+                r_packed = packed[1]
+                return (r_packed[:, rv.column_words(j.key)[0]],
+                        r_packed[:, rv.column_words(j.right_proj)[0]])
+
+            s_packed = packed[0]
+            return _sort_probe(
+                s_packed[:, sv.column_words(j.key)[0]],
+                s_packed[:, sv.column_words(j.left_proj)[0]],
+                cached, read_build, r_table, j.key, j.right_proj, path,
+            )
+
+        return PhysicalQuery(
+            engine, shape, path, route="shared-scan-join", cost=None,
+            views=views, _launch=launch, _finalize=lambda t: t,
+        )
+
+    def launch(_):
+        def read_build():
+            return (_host_col(r_table, right_colstore, j.key, path),
+                    _host_col(r_table, right_colstore, j.right_proj, path))
+
+        return _sort_probe(
+            _host_col(s_table, colstore, j.key, path),
+            _host_col(s_table, colstore, j.left_proj, path),
+            cached, read_build, r_table, j.key, j.right_proj, path,
+        )
+
+    return PhysicalQuery(
+        engine, shape, path, route=f"host-{path}", cost=None, views=(),
+        _launch=launch, _finalize=lambda t: t,
+    )
+
+
+def compile_plan(
+    engine: RelationalMemoryEngine,
+    node: PlanNode | PlanBuilder,
+    path: str = "rme",
+    colstore: Mapping[str, np.ndarray] | None = None,
+    right_colstore: Mapping[str, np.ndarray] | None = None,
+) -> PhysicalQuery:
+    """Lower a logical plan to a :class:`PhysicalQuery` on ``path``.
+
+    ``path`` selects the data path of the paper's §6 comparison: ``"rme"``
+    (the engine: fused kernels, shared scans, reorg cache — the compiler picks
+    the best physical route within it), ``"row"`` (direct row-wise baseline),
+    or ``"col"`` (direct columnar baseline over a caller-supplied
+    ``colstore``).  Joins read the probe side from ``colstore`` and the build
+    side from ``right_colstore``.
+    """
+    if path not in ("rme", "row", "col"):
+        raise ValueError(f"unknown path {path!r}; want rme, row or col")
+    shape = decompose(node)
+    if shape.kind == "aggregate":
+        return _compile_aggregate(engine, shape, path, colstore)
+    if shape.kind == "groupby":
+        return _compile_groupby(engine, shape, path, colstore)
+    if shape.kind == "join":
+        return _compile_join(engine, shape, path, colstore, right_colstore)
+    return _compile_project(engine, shape, path, colstore)

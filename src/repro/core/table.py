@@ -19,7 +19,7 @@ from typing import Mapping, Sequence
 
 import numpy as np
 
-from .schema import WORD, Column, TableSchema
+from .schema import Column, TableSchema
 
 # process-unique table identities for engine-side caches: id() values are
 # recycled by the allocator, so a dead table's address can resurrect its

@@ -29,7 +29,6 @@ import traceback
 import jax
 import jax.numpy as jnp
 from repro.compat import set_mesh
-from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, ARCH_NAMES, cell_status, get_config
 from repro.distributed.partitioning import axis_rules, rules_for_mesh
@@ -94,7 +93,6 @@ def lower_cell(arch: str, shape: str, multi_pod: bool):
                     lambda: model.init_cache(sh.global_batch, sh.seq_len)
                 )
             )
-            logits_sh = S.replicated(mesh)
 
             def prefill(params, batch):
                 return model.prefill(params, batch, sh.seq_len)

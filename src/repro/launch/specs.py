@@ -13,12 +13,10 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import SHAPES, ArchConfig, ShapeSpec
 from repro.distributed.partitioning import logical_spec, params_partition_specs
-from repro.models import build_model
 from repro.train.optimizer import opt_state_specs
 
 SDS = jax.ShapeDtypeStruct

@@ -17,7 +17,6 @@ import argparse
 import jax
 import jax.numpy as jnp
 from repro.compat import set_mesh
-import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.data import RecordStore, TrainPipeline, synthetic_corpus

@@ -9,7 +9,6 @@ prefill and reused by every decode step.
 
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -145,7 +144,6 @@ class EncDecLM:
         return lsc(h, "batch", None, None)
 
     def loss(self, params: dict, batch: dict) -> tuple[jax.Array, dict]:
-        cfg = self.cfg
         enc_out = self.encode(params, batch["enc_embeds"])
         x = jnp.take(
             params["token_embedding"].astype(self.compute_dtype),

@@ -15,7 +15,6 @@ Interface (shared with the enc-dec family):
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -341,7 +341,6 @@ def _parse_module(hlo: str) -> tuple[dict[str, _Computation], str | None]:
                 if not trip and cond:
                     cur.calls.append((cond.group(1), "cond_of:" + body.group(1), 0))
             continue
-        is_fusion_line = bool(re.search(r"\bfusion\(", line))
         for name in re.findall(r"calls=%?([\w\.\-]+)", line):
             fusion_bodies.add(name)
             cur.calls.append((name, "fusion", 1))

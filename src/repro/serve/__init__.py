@@ -1,5 +1,13 @@
-"""Serving substrate: prefill/decode step factories + batched sessions."""
+"""Serving substrate: LM prefill/decode sessions + the relational QueryServer."""
 
 from .engine import ServeSession, make_decode_step, make_prefill
+from .query_server import QueryServer, QueryTicket, ServerStats
 
-__all__ = ["ServeSession", "make_decode_step", "make_prefill"]
+__all__ = [
+    "QueryServer",
+    "QueryTicket",
+    "ServeSession",
+    "ServerStats",
+    "make_decode_step",
+    "make_prefill",
+]

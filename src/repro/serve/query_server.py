@@ -1,0 +1,344 @@
+"""Concurrent query serving: many clients, one engine, shared scans per tick.
+
+The paper's closing argument (§8) is that native column access "can vastly
+simplify the software logic" of an analytics engine.  This module is the
+multi-tenant half of that story: a :class:`QueryServer` owns one
+:class:`~repro.core.engine.RelationalMemoryEngine` and admits *logical plans*
+(:mod:`repro.core.plan`) from any number of concurrent clients.  Requests are
+not executed as they arrive — they queue, and each serving **tick** drains a
+batch, compiles every plan (:func:`repro.core.planner.compile_plan`), and
+coalesces all of the batch's ephemeral views into **one**
+``materialize_many`` call: same-table work from different clients rides a
+single shared Fetch-Unit stream, exactly the scan-sharing substrate PR 1's
+``BatchExecutor`` built, now driven by cross-client traffic instead of one
+caller's loop.  Fused aggregates go through ``aggregate_async`` so a tick
+enqueues every query's device work before the first host sync.
+
+Threading model: ``submit`` is thread-safe and non-blocking (clients get a
+:class:`QueryTicket` and block on ``result()`` at their leisure); all engine
+work happens on whichever single thread calls ``run_tick`` — either the
+caller's (deterministic, what the tests drive) or the background serving
+thread started by ``start()``/the ``serving()`` context manager.  JAX traces
+and device buffers are therefore never touched from two threads at once.
+
+Accounting: the server reports engine-level :class:`~repro.core.engine.
+EngineStats` plus its own :class:`ServerStats` — queue depth, shared-scan
+ratio (cold table-groups served by a genuine multi-view scan), and
+``bytes_saved``: the row-store bytes a per-query cold execution of the same
+traffic would have moved minus what the shared scans actually moved
+(union-geometry pricing, the same Eq.(3) bus-beat model the planner costs
+with).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Any, Mapping
+
+import numpy as np
+
+from repro.core.descriptor import bytes_moved
+from repro.core.engine import RelationalMemoryEngine
+from repro.core.plan import PlanBuilder, PlanNode
+from repro.core.planner import PhysicalQuery, compile_plan
+from repro.core.schema import merge_geometries
+
+
+class QueryTicket:
+    """A client's handle on one admitted query; resolved at end of its tick."""
+
+    __slots__ = ("client", "submitted_at", "latency_s", "route",
+                 "_event", "_result", "_error")
+
+    def __init__(self, client: str):
+        self.client = client
+        self.submitted_at = time.perf_counter()
+        self.latency_s: float | None = None
+        self.route: str | None = None
+        self._event = threading.Event()
+        self._result: Any = None
+        self._error: BaseException | None = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: float | None = None) -> Any:
+        """Block until served; re-raises compile/execution errors."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"query for client {self.client!r} not served")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    def _resolve(self, result: Any = None, error: BaseException | None = None,
+                 route: str | None = None) -> None:
+        self.latency_s = time.perf_counter() - self.submitted_at
+        self.route = route
+        self._result, self._error = result, error
+        self._event.set()
+
+
+@dataclasses.dataclass
+class ServerStats:
+    """Serving-layer counters (the engine's own PMU counts the bytes)."""
+
+    submitted: int = 0
+    served: int = 0
+    failed: int = 0
+    ticks: int = 0
+    max_queue_depth: int = 0
+    table_groups: int = 0  # cold same-table view groups across all ticks
+    table_groups_shared: int = 0  # of those, served by a multi-view shared scan
+    bytes_saved: int = 0  # row-store bytes avoided vs per-query cold execution
+    latency_sum_s: float = 0.0
+    latency_max_s: float = 0.0
+
+    @property
+    def shared_scan_ratio(self) -> float:
+        """Fraction of cold table-groups that coalesced into a shared scan."""
+        return self.table_groups_shared / max(self.table_groups, 1)
+
+    @property
+    def mean_latency_s(self) -> float:
+        return self.latency_sum_s / max(self.served, 1)
+
+
+@dataclasses.dataclass
+class _Admitted:
+    ticket: QueryTicket
+    node: PlanNode
+    path: str
+    colstore: Mapping[str, np.ndarray] | None
+    right_colstore: Mapping[str, np.ndarray] | None
+
+
+class QueryServer:
+    """Admission queue + tick executor over one relational memory engine."""
+
+    def __init__(
+        self,
+        engine: RelationalMemoryEngine | None = None,
+        max_batch: int = 64,
+    ):
+        self.engine = engine if engine is not None else RelationalMemoryEngine()
+        self.max_batch = max_batch
+        self.stats = ServerStats()
+        self._lock = threading.Lock()
+        self._queue: deque[_Admitted] = deque()
+        # per-client running (count, sum_s, max_s) — scalars, not a sample
+        # list: a long-running server must not grow per served query
+        self._client_latency: dict[str, list[float]] = {}
+        self._thread: threading.Thread | None = None
+        self._stop = threading.Event()
+
+    # ------------------------------------------------------------ admission
+    def submit(
+        self,
+        query: PlanNode | PlanBuilder,
+        client: str = "anon",
+        path: str = "rme",
+        colstore: Mapping[str, np.ndarray] | None = None,
+        right_colstore: Mapping[str, np.ndarray] | None = None,
+    ) -> QueryTicket:
+        """Admit a logical plan; returns immediately with a ticket."""
+        node = query.build() if isinstance(query, PlanBuilder) else query
+        ticket = QueryTicket(client)
+        with self._lock:
+            self._queue.append(
+                _Admitted(ticket, node, path, colstore, right_colstore)
+            )
+            self.stats.submitted += 1
+            self.stats.max_queue_depth = max(
+                self.stats.max_queue_depth, len(self._queue)
+            )
+        return ticket
+
+    @property
+    def queue_depth(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+    # ------------------------------------------------------------ execution
+    def _account_cold_groups(self, views) -> None:
+        """Shared-scan ratio + bytes-saved credit for this tick's view batch.
+
+        Cold views (not served by the reorg cache) are grouped per table, the
+        way ``materialize_many`` will coalesce them; a group of ≥2 distinct
+        geometries becomes one shared scan whose cost is the union geometry,
+        while a per-query execution would have paid every view's own scan.
+        """
+        by_table: dict[int, dict[tuple, Any]] = {}
+        for v in views:
+            key = self.engine.view_key(v.table, v.geometry)
+            if self.engine.cache.peek(key, v.table.version) is not None:
+                continue  # hot: free either way
+            by_table.setdefault(v.table.uid, {})[key] = v.geometry
+        for geoms in by_table.values():
+            self.stats.table_groups += 1
+            if len(geoms) >= 2:
+                self.stats.table_groups_shared += 1
+                independent = sum(bytes_moved(g)["rme"] for g in geoms.values())
+                union = bytes_moved(merge_geometries(list(geoms.values())))["rme"]
+                self.stats.bytes_saved += independent - union
+
+    def run_tick(self) -> int:
+        """Serve one batch: drain ≤ ``max_batch`` requests, coalesce, execute.
+
+        Returns the number of requests processed (served + failed).  All
+        device work of the batch is enqueued before any query's finalize
+        blocks, so one tick costs at most one shared scan per distinct table
+        plus the queries' own fused kernels.
+        """
+        with self._lock:
+            n = min(self.max_batch, len(self._queue))
+            batch = [self._queue.popleft() for _ in range(n)]
+        if not batch:
+            return 0
+        self.stats.ticks += 1
+
+        compiled: list[PhysicalQuery | None] = []
+        for req in batch:
+            try:
+                compiled.append(compile_plan(
+                    self.engine, req.node, path=req.path,
+                    colstore=req.colstore, right_colstore=req.right_colstore,
+                ))
+            except Exception as e:  # compile errors belong to the client
+                compiled.append(None)
+                self.stats.failed += 1
+                req.ticket._resolve(error=e)
+
+        # one engine batch for every view in the tick: cross-client same-table
+        # work coalesces into one shared scan (the engine counts it)
+        views, spans = [], []
+        for pq in compiled:
+            if pq is None:
+                spans.append((0, 0))
+                continue
+            spans.append((len(views), len(pq.views)))
+            views.extend(pq.views)
+        self._account_cold_groups(views)
+        try:
+            packed = self.engine.materialize_many(views) if views else []
+        except Exception as e:
+            # the shared step failed (lowering error, OOM on the union
+            # geometry): every still-pending ticket of the batch must resolve,
+            # or its client blocks forever and a background loop dies silently
+            for req, pq in zip(batch, compiled):
+                if pq is not None:
+                    self.stats.failed += 1
+                    req.ticket._resolve(error=e)
+            return len(batch)
+
+        tokens: list[Any] = []
+        for i, (req, pq) in enumerate(zip(batch, compiled)):
+            if pq is None:
+                tokens.append(None)
+                continue
+            off, k = spans[i]
+            try:
+                tokens.append(pq.launch(packed[off : off + k]))
+            except Exception as e:
+                tokens.append(None)
+                compiled[i] = None
+                self.stats.failed += 1
+                req.ticket._resolve(error=e)
+
+        for req, pq, token in zip(batch, compiled, tokens):
+            if pq is None:
+                continue
+            try:
+                result = pq.finalize(token)
+            except Exception as e:
+                self.stats.failed += 1
+                req.ticket._resolve(error=e)
+                continue
+            req.ticket._resolve(result=result, route=pq.route)
+            self.stats.served += 1
+            lat = req.ticket.latency_s
+            self.stats.latency_sum_s += lat
+            self.stats.latency_max_s = max(self.stats.latency_max_s, lat)
+            with self._lock:  # client_latencies() iterates under the lock
+                ent = self._client_latency.setdefault(
+                    req.ticket.client, [0, 0.0, 0.0]
+                )
+                ent[0] += 1
+                ent[1] += lat
+                ent[2] = max(ent[2], lat)
+        return len(batch)
+
+    def drain(self) -> int:
+        """Run ticks until the admission queue is empty; returns total processed."""
+        total = 0
+        while True:
+            n = self.run_tick()
+            if n == 0:
+                return total
+            total += n
+
+    # ------------------------------------------------------ background loop
+    def start(self, idle_wait_s: float = 0.001) -> None:
+        """Serve ticks on a background thread until :meth:`stop`."""
+        if self._thread is not None:
+            raise RuntimeError("server already started")
+        self._stop.clear()
+
+        def loop() -> None:
+            while not self._stop.is_set():
+                if self.run_tick() == 0:
+                    self._stop.wait(idle_wait_s)
+
+        self._thread = threading.Thread(target=loop, name="query-server", daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join()
+        self._thread = None
+
+    def __enter__(self) -> "QueryServer":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ------------------------------------------------------------ reporting
+    def client_latencies(self) -> dict[str, dict[str, float]]:
+        """Per-client latency summary: count / mean / max seconds."""
+        with self._lock:
+            return {
+                client: {
+                    "count": count,
+                    "mean_s": total / count,
+                    "max_s": max_s,
+                }
+                for client, (count, total, max_s) in self._client_latency.items()
+            }
+
+    def snapshot(self) -> dict[str, Any]:
+        """One flat dict of serving + engine counters (for logs/benchmarks)."""
+        e = self.engine.stats
+        return {
+            "queue_depth": self.queue_depth,
+            "submitted": self.stats.submitted,
+            "served": self.stats.served,
+            "failed": self.stats.failed,
+            "ticks": self.stats.ticks,
+            "max_queue_depth": self.stats.max_queue_depth,
+            "shared_scan_ratio": self.stats.shared_scan_ratio,
+            "bytes_saved": self.stats.bytes_saved,
+            "mean_latency_s": self.stats.mean_latency_s,
+            "max_latency_s": self.stats.latency_max_s,
+            "engine_shared_scans": e.shared_scans,
+            "engine_hot_hits": e.hot_hits,
+            "engine_cold_misses": e.cold_misses,
+            "engine_bytes_from_dram": e.bytes_from_dram,
+            "engine_bytes_uploaded": e.bytes_uploaded,
+            "engine_uploads": e.uploads,
+        }

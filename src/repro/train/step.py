@@ -16,7 +16,6 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.distributed.partitioning import logical_spec, params_partition_specs
 

@@ -4,7 +4,6 @@ multi-device tests spawn subprocesses with their own flag."""
 import numpy as np
 import pytest
 
-import jax
 
 
 @pytest.fixture(scope="session")

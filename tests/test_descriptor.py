@@ -11,7 +11,7 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import TableGeometry, benchmark_schema, descriptors, fetch_model
+from repro.core import TableGeometry, descriptors, fetch_model
 from repro.core.descriptor import bytes_moved
 from repro.core.schema import WORD
 

@@ -1,11 +1,9 @@
 """Flash-attention kernel sweeps vs the pure-jnp oracle (interpret mode)."""
 
-import dataclasses
 
 import numpy as np
 import pytest
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention

@@ -8,7 +8,6 @@ for aggregation.
 import numpy as np
 import pytest
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import RelationalTable, TableGeometry, benchmark_schema

@@ -1,0 +1,272 @@
+"""Logical plan IR + plan compiler: shapes, routing, cross-path equality."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Aggregate,
+    Filter,
+    GroupBy,
+    Join,
+    PlanError,
+    Project,
+    RelationalMemoryEngine,
+    RelationalTable,
+    Scan,
+    benchmark_schema,
+    compile_plan,
+    decompose,
+    plan,
+)
+from repro.core import operators as ops
+from repro.core.plan import describe
+
+PATHS = ("rme", "row", "col")
+
+
+@pytest.fixture
+def table():
+    rng = np.random.default_rng(0)
+    schema = benchmark_schema(64, 4)
+    n = 600
+    return RelationalTable.from_columns(
+        schema,
+        {c.name: rng.integers(-100, 100, n).astype(np.int32)
+         for c in schema.columns},
+    )
+
+
+@pytest.fixture
+def build_table(table):
+    rng = np.random.default_rng(9)
+    n_r = 128
+    r_cols = {c.name: rng.integers(-50, 50, n_r).astype(np.int32)
+              for c in table.schema.columns}
+    r_cols["A2"] = np.arange(n_r, dtype=np.int32)  # primary key
+    return RelationalTable.from_columns(table.schema, r_cols)
+
+
+# ------------------------------------------------------------------- IR
+def test_builder_constructs_expected_trees(table):
+    node = plan(table).filter("A3", "gt", 5).project("A1", "A4").build()
+    assert isinstance(node, Project) and node.columns == ("A1", "A4")
+    assert isinstance(node.child, Filter) and node.child.op == "gt"
+    assert isinstance(node.child.child, Scan)
+    assert node.child.child.table is table
+
+    agg = plan(table).filter("A4", "lt", 0).sum("A2").build()
+    assert isinstance(agg, Aggregate) and agg.op == "sum"
+    gb = plan(table).groupby("A2", "A1", "avg", 32).build()
+    assert isinstance(gb, GroupBy) and gb.num_groups == 32
+    j = plan(table).join(table, key="A2", left_proj="A1", right_proj="A3").build()
+    assert isinstance(j, Join) and isinstance(j.right, Scan)
+    assert "Scan" in describe(node)
+
+
+def test_decompose_flattens_and_validates(table):
+    shape = decompose(plan(table).filter("A3", "lt", 7).sum("A1"))
+    assert shape.kind == "aggregate"
+    assert shape.pred.col == "A3" and shape.pred.k == 7
+    assert shape.columns == ("A1", "A3")  # physical order, dedup
+    # project/filter commute
+    s1 = decompose(plan(table).filter("A3", "gt", 0).project("A1"))
+    s2 = decompose(plan(table).project("A1").filter("A3", "gt", 0))
+    assert s1.kind == s2.kind == "project"
+    assert s1.pred == s2.pred and s1.columns == s2.columns
+    # bare scan projects every column
+    assert decompose(plan(table)).columns == table.schema.names
+
+
+def test_invalid_plans_raise(table):
+    with pytest.raises(PlanError):
+        plan(table).filter("A1", "eq", 0)  # unsupported predicate op
+    with pytest.raises(PlanError):
+        plan(table).aggregate("A1", "median")
+    with pytest.raises(PlanError):
+        decompose(plan(table).filter("A1", "gt", 0).filter("A2", "lt", 0)
+                  .project("A3"))  # two fused predicates
+    with pytest.raises(PlanError):
+        decompose(plan(table).project("A1").sum("A1"))  # redundant project
+    with pytest.raises(KeyError):
+        decompose(plan(table).project("nope"))
+    with pytest.raises(PlanError):
+        # join sides must be plain scans
+        decompose(Join(plan(table).project("A1").build(), Scan(table),
+                       "A2", "A1", "A3"))
+
+
+# ------------------------------------------------------- compiler routing
+def test_compiler_routes_by_shape(table):
+    eng = RelationalMemoryEngine()
+    assert compile_plan(eng, plan(table).sum("A1")).route == "fused-aggregate"
+    assert compile_plan(
+        eng, plan(table).filter("A3", "lt", 0).groupby("A2", "A1")
+    ).route == "fused-groupby"
+    assert compile_plan(
+        eng, plan(table).filter("A3", "gt", 0).project("A1")
+    ).route == "fused-filter"
+    assert compile_plan(eng, plan(table).project("A1", "A5")).route == "rme"
+    # beyond the configuration port's Q cap: host fallback over full rows
+    wide = compile_plan(eng, plan(table).project(*table.schema.names))
+    assert wide.route == "row-fallback" and wide.views == ()
+    # a warmed view is served from the reorganization cache
+    _ = eng.register(table, ("A1", "A5")).packed()
+    assert compile_plan(eng, plan(table).project("A1", "A5")).route == "hot"
+    # baseline paths compile to host routes
+    assert compile_plan(eng, plan(table).sum("A1"), path="row").route == "host-row"
+
+
+def test_compiled_query_run_matches_operator_surface(table):
+    eng = RelationalMemoryEngine()
+    got = compile_plan(eng, plan(table).filter("A4", "lt", 3).sum("A2")).run()
+    assert got == ops.q3_select_aggregate(eng, table, "A2", "A4", 3)
+    avg = compile_plan(eng, plan(table).avg("A1")).run()
+    s = table.read_column("A1").astype(np.float64).sum()
+    np.testing.assert_allclose(avg, s / table.row_count, rtol=1e-5)
+    cnt = compile_plan(eng, plan(table).filter("A3", "gt", 0).count("A3")).run()
+    assert cnt == float((table.read_column("A3") > 0).sum())
+
+
+# -------------------------------------------------- cross-path equality
+def test_q0_cross_path_via_plan(table):
+    eng = RelationalMemoryEngine()
+    cs = ops.make_colstore(table, list(table.schema.names))
+    q = plan(table).sum("A1")
+    got = {p: compile_plan(eng, q, path=p, colstore=cs).run() for p in PATHS}
+    assert len({round(v, 2) for v in got.values()}) == 1
+
+
+def test_q1_cross_path_via_plan(table):
+    eng = RelationalMemoryEngine()
+    cols = ("A1", "A3", "A7")
+    cs = ops.make_colstore(table, cols)
+    q = plan(table).project(*cols)
+    got = {p: np.asarray(compile_plan(eng, q, path=p, colstore=cs).run())
+           for p in PATHS}
+    np.testing.assert_array_equal(got["rme"], got["row"])
+    np.testing.assert_array_equal(got["rme"], got["col"])
+
+
+def test_q2_cross_path_via_plan(table):
+    eng = RelationalMemoryEngine()
+    cs = ops.make_colstore(table, list(table.schema.names))
+    q = plan(table).filter("A3", "gt", 10).project("A1")
+    for p in ("row", "col"):
+        packed, mask = compile_plan(eng, q, path=p, colstore=cs).run()
+        ref_packed, ref_mask = compile_plan(eng, q).run()
+        np.testing.assert_array_equal(np.asarray(packed), np.asarray(ref_packed))
+        np.testing.assert_array_equal(np.asarray(mask), np.asarray(ref_mask))
+
+
+def test_q3_cross_path_via_plan(table):
+    eng = RelationalMemoryEngine()
+    cs = ops.make_colstore(table, list(table.schema.names))
+    q = plan(table).filter("A4", "lt", 5).sum("A2")
+    got = {p: compile_plan(eng, q, path=p, colstore=cs).run() for p in PATHS}
+    assert len({round(v, 2) for v in got.values()}) == 1
+
+
+def test_q4_cross_path_via_plan(table):
+    eng = RelationalMemoryEngine()
+    cs = ops.make_colstore(table, list(table.schema.names))
+    q = plan(table).filter("A3", "lt", 5).groupby("A2", "A1", "avg", 16)
+    got = {p: np.asarray(compile_plan(eng, q, path=p, colstore=cs).run())
+           for p in PATHS}
+    np.testing.assert_allclose(got["rme"], got["row"], rtol=1e-5)
+    np.testing.assert_allclose(got["rme"], got["col"], rtol=1e-5)
+
+
+def test_q5_cross_path_via_plan(table, build_table):
+    eng = RelationalMemoryEngine()
+    scs = ops.make_colstore(table, ["A1", "A2"])
+    rcs = ops.make_colstore(build_table, ["A2", "A3"])
+    q = plan(table).join(build_table, key="A2", left_proj="A1", right_proj="A3")
+    got = {p: compile_plan(eng, q, path=p, colstore=scs,
+                           right_colstore=rcs).run() for p in PATHS}
+    for p in ("row", "col"):
+        np.testing.assert_array_equal(np.asarray(got["rme"].matched),
+                                      np.asarray(got[p].matched))
+        np.testing.assert_array_equal(np.asarray(got["rme"].r_proj),
+                                      np.asarray(got[p].r_proj))
+
+
+def test_groupby_without_filter_cross_path(table):
+    eng = RelationalMemoryEngine()
+    cs = ops.make_colstore(table, list(table.schema.names))
+    q = plan(table).groupby("A2", "A1", "sum", 8)
+    got = {p: np.asarray(compile_plan(eng, q, path=p, colstore=cs).run())
+           for p in PATHS}
+    np.testing.assert_allclose(got["rme"], got["row"], rtol=1e-5)
+    np.testing.assert_allclose(got["rme"], got["col"], rtol=1e-5)
+
+
+def test_row_fallback_uses_resident_store_and_charges_bytes(table):
+    """The beyond-Q-cap fallback must stream the device-resident row store
+    (no per-call host re-upload) and charge the PMU a full-row pass."""
+    eng = RelationalMemoryEngine()
+    q = plan(table).project(*table.schema.names)
+    first = np.asarray(compile_plan(eng, q).run())
+    assert eng.stats.uploads == 1
+    dram_after_first = eng.stats.bytes_from_dram
+    assert dram_after_first == table.row_count * table.schema.row_bytes
+    second = np.asarray(compile_plan(eng, q).run())
+    assert eng.stats.uploads == 1  # resident buffer reused, not re-shipped
+    assert eng.stats.bytes_from_dram == 2 * dram_after_first
+    np.testing.assert_array_equal(first, second)
+
+
+def test_filtered_wide_projection_falls_back_not_crashes(table):
+    """A filtered plan whose output group exceeds the Q cap (e.g. a bare
+    Filter over all 16 columns) must route to the full-row fallback with the
+    same (packed, mask) contract — not raise from TableGeometry."""
+    eng = RelationalMemoryEngine()
+    q = plan(table).filter("A3", "gt", 10)  # no Project: all 16 columns
+    pq = compile_plan(eng, q)
+    assert pq.route == "row-fallback"
+    packed, mask = pq.run()
+    a3 = table.read_column("A3")
+    np.testing.assert_array_equal(np.asarray(mask), a3 > 10)
+    np.testing.assert_array_equal(
+        np.asarray(packed)[:, 0], np.where(a3 > 10, table.read_column("A1"), 0)
+    )
+    # host baselines agree
+    cs = ops.make_colstore(table, list(table.schema.names))
+    for p in ("row", "col"):
+        hp, hm = compile_plan(eng, q, path=p, colstore=cs).run()
+        np.testing.assert_array_equal(np.asarray(hp), np.asarray(packed))
+        np.testing.assert_array_equal(np.asarray(hm), np.asarray(mask))
+
+
+def test_duplicate_build_index_insert_keeps_occupancy_exact(table, build_table):
+    """Two identical joins compiled in one tick both insert at launch; the
+    same-key overwrite must not double-count occupancy bytes."""
+    from repro.core import planner
+
+    eng = RelationalMemoryEngine()
+    ops.clear_join_build_cache()
+    q = plan(table).join(build_table, key="A2", left_proj="A1", right_proj="A3")
+    pq1 = compile_plan(eng, q)
+    pq2 = compile_plan(eng, q)  # both compiled before either launches: both miss
+    r1, r2 = pq1.run(), pq2.run()
+    np.testing.assert_array_equal(np.asarray(r1.matched), np.asarray(r2.matched))
+    entries = [v for k, v in planner._BUILD_INDEX_CACHE.items()
+               if k[0] == build_table.uid]
+    assert len(entries) == 1
+    expect = sum(a.size * a.dtype.itemsize for a in entries[0])
+    assert planner._build_index_bytes == expect  # no drift from the overwrite
+
+
+# ------------------------------------------------------- reset regression
+def test_engine_reset_clears_join_build_cache(table, build_table):
+    """reset() must clear the module-global q5 build-index cache — stale
+    JOIN_BUILD_STATS and sorted indexes used to leak across repetitions."""
+    eng = RelationalMemoryEngine()
+    ops.clear_join_build_cache()
+    _ = ops.q5_hash_join(eng, table, build_table)
+    assert ops.JOIN_BUILD_STATS == {"hits": 0, "misses": 1}
+    assert any(k[0] == build_table.uid for k in ops._BUILD_INDEX_CACHE)
+    eng.reset()
+    assert ops.JOIN_BUILD_STATS == {"hits": 0, "misses": 0}
+    assert not ops._BUILD_INDEX_CACHE  # no stale sorted indexes survive reset
+    _ = ops.q5_hash_join(eng, table, build_table)
+    assert ops.JOIN_BUILD_STATS == {"hits": 0, "misses": 1}  # cold again

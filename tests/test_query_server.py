@@ -1,0 +1,190 @@
+"""QueryServer: concurrent admission, per-tick shared scans, stats, errors."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import RelationalMemoryEngine, RelationalTable, benchmark_schema, plan
+from repro.serve import QueryServer
+
+GROUPS = (("A1",), ("A1", "A2", "A3", "A4"), ("A1", "A3"), ("A2", "A4"))
+
+
+@pytest.fixture
+def table():
+    rng = np.random.default_rng(0)
+    schema = benchmark_schema(64, 4)
+    n = 400
+    return RelationalTable.from_columns(
+        schema,
+        {c.name: rng.integers(-100, 100, n).astype(np.int32)
+         for c in schema.columns},
+    )
+
+
+def test_concurrent_same_table_queries_share_one_scan(table):
+    """N clients, same table, one tick: exactly one shared scan, one upload."""
+    eng = RelationalMemoryEngine()
+    server = QueryServer(eng)
+    tickets = {}
+    barrier = threading.Barrier(len(GROUPS))
+
+    def client(i, cols):
+        barrier.wait()  # all clients submit concurrently
+        tickets[i] = server.submit(plan(table).project(*cols), client=f"c{i}")
+
+    threads = [threading.Thread(target=client, args=(i, g))
+               for i, g in enumerate(GROUPS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert server.queue_depth == len(GROUPS)
+
+    served = server.run_tick()
+    assert served == len(GROUPS)
+    assert eng.stats.shared_scans == 1  # one pass served every client
+    assert eng.stats.uploads == 1  # the row store crossed host->device once
+    assert server.stats.shared_scan_ratio == 1.0
+    assert server.stats.bytes_saved > 0
+
+    solo = RelationalMemoryEngine()
+    for i, cols in enumerate(GROUPS):
+        expect = solo.register(table, cols).packed()
+        np.testing.assert_array_equal(
+            np.asarray(tickets[i].result(timeout=5)), np.asarray(expect)
+        )
+
+
+def test_mixed_kinds_one_tick(table):
+    """Aggregates, group-bys, and projections coexist in one coalesced tick."""
+    eng = RelationalMemoryEngine()
+    server = QueryServer(eng)
+    t_agg = server.submit(plan(table).filter("A4", "lt", 5).sum("A2"))
+    t_proj = server.submit(plan(table).project("A1", "A3"))
+    t_gb = server.submit(plan(table).groupby("A2", "A1", "avg", 16))
+    server.run_tick()
+    assert t_agg.route == "fused-aggregate"
+    assert t_proj.route == "rme"
+    assert t_gb.route == "fused-groupby"
+    s, _ = eng.aggregate(table, "A2", "A4", "lt", 5)
+    assert t_agg.result(timeout=5) == s
+    assert t_gb.result(timeout=5).shape == (16,)
+
+
+def test_two_tables_two_shared_scans(table):
+    rng = np.random.default_rng(1)
+    other = RelationalTable.from_columns(
+        table.schema,
+        {c.name: rng.integers(-5, 5, 64).astype(np.int32)
+         for c in table.schema.columns},
+    )
+    eng = RelationalMemoryEngine()
+    server = QueryServer(eng)
+    for tab in (table, other):
+        for cols in (("A1", "A2"), ("A2", "A5")):
+            server.submit(plan(tab).project(*cols))
+    server.run_tick()
+    assert eng.stats.shared_scans == 2  # one coalesced pass per table
+    assert eng.stats.uploads == 2
+    assert server.stats.table_groups == 2
+    assert server.stats.shared_scan_ratio == 1.0
+
+
+def test_second_tick_is_hot(table):
+    eng = RelationalMemoryEngine()
+    server = QueryServer(eng)
+    for cols in GROUPS:
+        server.submit(plan(table).project(*cols))
+    server.run_tick()
+    scans = eng.stats.shared_scans
+    for cols in GROUPS:
+        server.submit(plan(table).project(*cols))
+    server.run_tick()
+    assert eng.stats.shared_scans == scans  # reorg cache absorbed the repeat
+    assert eng.stats.hot_hits >= len(GROUPS)
+    assert server.stats.table_groups == 1  # the hot tick opened no cold group
+
+
+def test_max_batch_bounds_a_tick(table):
+    server = QueryServer(RelationalMemoryEngine(), max_batch=3)
+    tks = [server.submit(plan(table).project("A1")) for _ in range(7)]
+    assert server.run_tick() == 3
+    assert server.queue_depth == 4
+    assert server.drain() == 4
+    for tk in tks:
+        assert tk.done()
+
+
+def test_errors_resolve_their_ticket_only(table):
+    server = QueryServer(RelationalMemoryEngine())
+    bad = server.submit(plan(table).project("A1").filter("missing", "gt", 0))
+    good = server.submit(plan(table).sum("A1"))
+    server.run_tick()
+    with pytest.raises(KeyError):
+        bad.result(timeout=5)
+    assert isinstance(good.result(timeout=5), float)
+    assert server.stats.failed == 1 and server.stats.served == 1
+
+
+def test_shared_step_failure_resolves_every_ticket(table):
+    """If the coalesced materialize_many itself raises, every ticket in the
+    batch must resolve with the error — a hung result() (and a silently dead
+    background loop) is the failure mode being guarded."""
+    eng = RelationalMemoryEngine()
+    server = QueryServer(eng)
+
+    def boom(views):
+        raise RuntimeError("union geometry failed to lower")
+
+    eng.materialize_many = boom
+    tks = [server.submit(plan(table).project(*g)) for g in GROUPS]
+    assert server.run_tick() == len(GROUPS)
+    for tk in tks:
+        assert tk.done()
+        with pytest.raises(RuntimeError, match="union geometry"):
+            tk.result(timeout=1)
+    assert server.stats.failed == len(GROUPS) and server.stats.served == 0
+
+
+def test_background_serving_thread(table):
+    eng = RelationalMemoryEngine()
+    with QueryServer(eng) as server:
+        tickets = [
+            server.submit(plan(table).project(*GROUPS[i % len(GROUPS)]),
+                          client=f"c{i % 2}")
+            for i in range(8)
+        ]
+        results = [tk.result(timeout=30) for tk in tickets]
+    assert all(r is not None for r in results)
+    lat = server.client_latencies()
+    assert set(lat) == {"c0", "c1"}
+    assert all(v["count"] == 4 for v in lat.values())
+    snap = server.snapshot()
+    assert snap["served"] == 8 and snap["queue_depth"] == 0
+    assert snap["max_latency_s"] >= snap["mean_latency_s"] > 0
+
+
+def test_served_join_shares_scans(table):
+    rng = np.random.default_rng(9)
+    n_r = 64
+    r_cols = {c.name: rng.integers(-50, 50, n_r).astype(np.int32)
+              for c in table.schema.columns}
+    r_cols["A2"] = np.arange(n_r, dtype=np.int32)
+    rt = RelationalTable.from_columns(table.schema, r_cols)
+    eng = RelationalMemoryEngine()
+    server = QueryServer(eng)
+    from repro.core import operators as ops
+
+    ops.clear_join_build_cache()
+    tk = server.submit(
+        plan(table).join(rt, key="A2", left_proj="A1", right_proj="A3")
+    )
+    server.run_tick()
+    res = tk.result(timeout=5)
+    ref = ops.q5_hash_join(RelationalMemoryEngine(), table, rt)
+    np.testing.assert_array_equal(np.asarray(res.matched),
+                                  np.asarray(ref.matched))
+    np.testing.assert_array_equal(np.asarray(res.r_proj),
+                                  np.asarray(ref.r_proj))

@@ -4,8 +4,6 @@ The §Roofline numbers are only as good as this parser — verify it against
 compiled programs with known FLOP/collective structure.
 """
 
-import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,6 @@
 """Serving substrate: continuous-batching session over the smoke models."""
 
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp

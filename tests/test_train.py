@@ -1,7 +1,6 @@
 """Training substrate: optimizer, trainer fault tolerance, data pipeline."""
 
 import dataclasses
-import os
 import tempfile
 
 import numpy as np
@@ -82,7 +81,6 @@ def test_grad_accum_matches_full_batch():
 def test_record_store_projectivity_and_training():
     """The HTAP pipeline: row-major ingest, ephemeral projection, training."""
     cfg = get_smoke_config("qwen3-8b")
-    model = build_model(cfg)
     S = 64
     store = RecordStore(seq_len=S)
     tok, lab = synthetic_corpus(64, S, cfg.vocab, seed=1)
