@@ -1,0 +1,128 @@
+"""Mixed heterogeneous batches: one fused pass vs one pass per op kind.
+
+The previous serving figure (``fig_concurrent_queries``) coalesced same-table
+*projections* into one shared scan — but a realistic tick is mixed:
+projections, predicated filters, fused aggregates, and group-bys against the
+same relation.  Before the heterogeneous one-pass scan, each op kind launched
+its own full sweep of the row store (N kinds ⇒ N passes); now every kind of
+same-table work rides one ``rme_scan_multi`` pass.
+
+This figure sweeps 16/64 concurrent clients, each submitting ``ROUNDS``
+queries cycling through the four op kinds over Q0–Q5-shaped column groups,
+and reports per path:
+
+* ``qps``  — client queries completed per second of serving wall time
+* row-store bytes — ``bytes_from_dram + bytes_uploaded`` for one cold batch
+* ``one_pass_scans`` — engine shared scans recorded for a single mixed-kind
+  same-table tick (the "scan once, answer everything" check: exactly 1)
+* ``p50_ms`` / ``p95_ms`` — per-query serving latency percentiles
+
+``per_kind`` executes the identical compiled plans one at a time on the same
+engine — the pre-fusion dispatch model, where every aggregate/filter/group-by
+pays its own row-store pass; ``fused`` pushes them through the
+``QueryServer``, whose tick hands the whole batch to one ``execute_many``.
+Both sides run the paper's 2 MB reorganization SPM and charge bus-beat bytes
+with the same Eq. (3) union-geometry model, so the ratio is apples-to-apples.
+"""
+
+import numpy as np
+
+from repro.core import compile_plan, plan
+from repro.serve import QueryServer
+
+from .common import bench_rows, emit, fresh_engine, make_benchmark_table, timeit
+
+N_ROWS = 200_000
+ROUNDS = 3  # queries per client per measured batch
+CLIENT_COUNTS = (16, 64)
+NUM_GROUPS = 32
+
+
+def _client_plans(table, n_clients: int):
+    """The (client, round) grid cycles through mixed op kinds over the
+    Q0–Q5 column-group shapes — same-table, different operators."""
+    t = table
+    shapes = [
+        lambda: plan(t).project("A1", "A2", "A3", "A4"),          # Q1 scan
+        lambda: plan(t).filter("A3", "gt", 0).project("A1"),      # Q2 filter
+        lambda: plan(t).filter("A4", "lt", 10).sum("A2"),         # Q3 agg
+        lambda: plan(t).groupby("A2", "A1", "avg", NUM_GROUPS),   # Q4 gby
+        lambda: plan(t).project("A5", "A9"),
+        lambda: plan(t).filter("A7", "gt", -5).project("A2", "A6"),
+        lambda: plan(t).sum("A8"),
+        lambda: plan(t).groupby("A6", "A5", "sum", NUM_GROUPS),
+    ]
+    return [
+        shapes[(i + r) % len(shapes)]()
+        for r in range(ROUNDS)
+        for i in range(n_clients)
+    ]
+
+
+def _row_store_bytes(stats) -> int:
+    return stats.bytes_from_dram + stats.bytes_uploaded
+
+
+def _one_pass_probe(table) -> int:
+    """A single mixed-kind same-table tick on a fresh engine: how many scans?"""
+    eng = fresh_engine()
+    server = QueryServer(eng)
+    server.submit(plan(table).project("A1", "A2"))
+    server.submit(plan(table).filter("A3", "gt", 0).project("A1"))
+    server.submit(plan(table).filter("A4", "lt", 10).sum("A2"))
+    server.submit(plan(table).groupby("A2", "A1", "avg", NUM_GROUPS))
+    server.run_tick()
+    return eng.stats.shared_scans
+
+
+def run() -> None:
+    t = make_benchmark_table(n_rows=bench_rows(N_ROWS))
+    one_pass = _one_pass_probe(t)
+
+    for n_clients in CLIENT_COUNTS:
+        plans = _client_plans(t, n_clients)
+
+        # ---- byte accounting (one cold batch each way) --------------------
+        solo = fresh_engine()
+        for p in plans:
+            compile_plan(solo, p).run()
+        served_eng = fresh_engine()
+        server = QueryServer(served_eng, max_batch=len(plans))
+        tickets = [
+            server.submit(p, client=f"c{i % n_clients:02d}")
+            for i, p in enumerate(plans)
+        ]
+        server.drain()
+        for tk in tickets:
+            tk.result(timeout=120)
+        solo_bytes = _row_store_bytes(solo.stats)
+        served_bytes = _row_store_bytes(served_eng.stats)
+        lat_ms = np.asarray([tk.latency_s for tk in tickets]) * 1e3
+        p50, p95 = np.percentile(lat_ms, 50), np.percentile(lat_ms, 95)
+
+        # ---- throughput (cache cold per measured batch, row store resident)
+        def per_kind():
+            solo.cache.reset()
+            return [compile_plan(solo, p).run() for p in plans]
+
+        def fused():
+            served_eng.cache.reset()
+            tks = [server.submit(p) for p in plans]
+            server.drain()
+            return [tk.result(timeout=120) for tk in tks]
+
+        us_solo = timeit(per_kind, iters=5)
+        us_fused = timeit(fused, iters=5)
+        qps_solo = len(plans) / (us_solo / 1e6)
+        qps_fused = len(plans) / (us_fused / 1e6)
+        d = (f"clients={n_clients},queries={len(plans)},"
+             f"solo_bytes={solo_bytes},served_bytes={served_bytes},"
+             f"bytes_ratio={solo_bytes / max(served_bytes, 1):.1f},"
+             f"one_pass_scans={one_pass}")
+        emit(f"fig_mixed/c{n_clients:02d}_per_kind", us_solo,
+             d + f",qps={qps_solo:.0f}")
+        emit(f"fig_mixed/c{n_clients:02d}_fused", us_fused,
+             d + f",qps={qps_fused:.0f},"
+             f"speedup={us_solo / max(us_fused, 1e-9):.2f}x,"
+             f"p50_ms={p50:.2f},p95_ms={p95:.2f},"
+             f"tile={served_eng.stats.last_block_rows}")

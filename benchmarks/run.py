@@ -6,9 +6,15 @@ runs the subset whose module name contains ``pattern``;
 ``python -m benchmarks.run --smoke`` runs every figure at smoke scale (tiny
 tables, single iterations) — the CI job that catches kernel-lowering
 regressions without paying for real measurements.
+
+``--json PATH`` additionally writes the results machine-readably: every row's
+name, wall time, and parsed ``derived`` key=value fields (bytes moved,
+throughput, latency percentiles, ...), so perf can be diffed across PRs
+(``benchmarks/run.py --json BENCH_pr3.json`` then compare files).
 """
 
 import argparse
+import json
 import time
 
 from . import (
@@ -20,6 +26,7 @@ from . import (
     fig12_join,
     fig13_scaling,
     fig_concurrent_queries,
+    fig_mixed_batch,
     fig_scan_sharing,
     fig_selectivity,
     table2_vmem_budget,
@@ -36,11 +43,31 @@ MODULES = [
     fig12_join,
     fig13_scaling,
     fig_concurrent_queries,
+    fig_mixed_batch,
     fig_scan_sharing,
     fig_selectivity,
     table2_vmem_budget,
     lm_step,
 ]
+
+
+def _parse_derived(derived: str) -> dict:
+    """``k1=v1,k2=v2`` -> dict with numbers decoded (non-kv text kept raw)."""
+    out: dict = {}
+    for part in derived.split(","):
+        if "=" not in part:
+            if part:
+                out.setdefault("notes", []).append(part)
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = int(v)
+        except ValueError:
+            try:
+                out[k] = float(v.rstrip("x"))
+            except ValueError:
+                out[k] = v
+    return out
 
 
 def main() -> None:
@@ -49,18 +76,34 @@ def main() -> None:
                     help="run only modules whose name contains this substring")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny row counts + single iterations (CI regression probe)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write results as JSON for cross-PR perf diffing")
     args = ap.parse_args()
     if args.smoke:
         set_smoke(True)
     print("name,us_per_call,derived")
     t0 = time.time()
-    total = 0
+    rows = []
     for mod in MODULES:
         if args.pattern and args.pattern not in mod.__name__:
             continue
         mod.run()
-        total += len(flush_rows())
-    print(f"# {total} rows in {time.time() - t0:.1f}s")
+        rows.extend(flush_rows())
+    elapsed = time.time() - t0
+    print(f"# {len(rows)} rows in {elapsed:.1f}s")
+    if args.json:
+        report = {
+            "smoke": args.smoke,
+            "pattern": args.pattern,
+            "elapsed_s": round(elapsed, 3),
+            "rows": [
+                {"name": name, "us_per_call": us, "derived": _parse_derived(d)}
+                for name, us, d in rows
+            ],
+        }
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -18,13 +18,14 @@ Layers (bottom-up):
 
 from .schema import (
     WORD, Column, TableGeometry, TableSchema, benchmark_schema,
-    merge_geometries, paper_schema,
+    geometry_from_intervals, merge_geometries, paper_schema,
 )
 from .table import TS_INF, RelationalTable, columnar_copy
 from .descriptor import BUS_WIDTH, Descriptor, bytes_moved, descriptor_arrays, descriptors, fetch_model
 from .ephemeral import EphemeralView
+from .requests import AggregateOp, FilterOp, GroupByOp, ProjectOp, ScanOp
 from .engine import DeviceRowStore, EngineStats, RelationalMemoryEngine, ReorgCache
-from .executor import BatchExecutor, materialize_batch
+from .executor import BatchExecutor, execute_batch, materialize_batch
 from .plan import (
     Aggregate, Filter, GroupBy, Join, PlanBuilder, PlanError, PlanNode,
     Project, Scan, decompose, plan,
@@ -35,11 +36,12 @@ from . import compression, distributed, executor, operators, planner
 __all__ = [
     "BUS_WIDTH", "WORD", "TS_INF",
     "Column", "TableSchema", "TableGeometry", "benchmark_schema",
-    "merge_geometries", "paper_schema",
+    "geometry_from_intervals", "merge_geometries", "paper_schema",
     "RelationalTable", "columnar_copy",
     "Descriptor", "descriptors", "descriptor_arrays", "fetch_model", "bytes_moved",
     "EphemeralView", "DeviceRowStore", "EngineStats", "RelationalMemoryEngine",
-    "ReorgCache", "BatchExecutor", "materialize_batch",
+    "ReorgCache", "BatchExecutor", "execute_batch", "materialize_batch",
+    "AggregateOp", "FilterOp", "GroupByOp", "ProjectOp", "ScanOp",
     "Aggregate", "Filter", "GroupBy", "Join", "PlanBuilder", "PlanError",
     "PlanNode", "Project", "Scan", "decompose", "plan",
     "PhysicalQuery", "compile_plan",

@@ -27,17 +27,28 @@ buffer is uploaded host→device **once** and kept resident, keyed by
 stop re-shipping DRAM on every call (``EngineStats.bytes_uploaded`` /
 ``uploads`` count the transfers that do happen).
 
-On top of that sits :meth:`RelationalMemoryEngine.materialize_many` (driven by
-:class:`repro.core.executor.BatchExecutor`): pending ephemeral views are
-coalesced per table and served by the multi-output kernel in
-``repro.kernels.rme_project_multi`` — one Fetch-Unit stream per table per
-batch, every view's packed block emitted from that single pass.  Bus-beat
-bytes are attributed to the shared scan exactly once, via the *union* geometry
-(:func:`repro.core.schema.merge_geometries`), and every view lands in the
-:class:`ReorgCache` so subsequent accesses are hot.  ``aggregate_async`` is
-the non-blocking sibling of ``aggregate``: it returns the device-resident
-``[sum, count]`` scalar pair without forcing a host sync, so batched query
-loops no longer serialize on every aggregate.
+The heterogeneous one-pass scan
+-------------------------------
+On top of that sits :meth:`RelationalMemoryEngine.execute_many` (driven by
+:class:`repro.core.executor.BatchExecutor` and the serving layer): pending
+scan ops of **any** kind — projections, predicated filters, fused aggregates,
+group-by partials (:mod:`repro.core.requests`) — are coalesced per table,
+lowered to kernel scan requests (equal requests de-duplicate into one output
+slot), and served by the heterogeneous one-pass kernel in
+``repro.kernels.rme_scan_multi``: one Fetch-Unit stream per table per batch,
+every request's output emitted from that single pass.  This is the paper's §8
+extension argument made real for the whole query surface — selection,
+aggregation, and group-by offloads share the stream instead of each sweeping
+the row store on their own.  Bus-beat bytes are attributed to the shared scan
+exactly once via the *union* geometry over all requests' enabled words
+(:func:`repro.kernels.rme_scan_multi.union_geometry`), every projection lands
+in the :class:`ReorgCache` so subsequent accesses are hot, and a batch whose
+modeled VMEM working set exceeds the 2 MB SPM budget auto-halves its row-tile
+height before launching (``EngineStats.last_block_rows`` records the choice).
+A lone request keeps its single-op kernel — solo queries never pay the fused
+formulation.  :meth:`materialize_many` is the projection-only thin wrapper,
+and ``aggregate_async`` — the non-blocking sibling of ``aggregate`` — is a
+one-op batch through the same path.
 """
 
 from __future__ import annotations
@@ -50,12 +61,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as K
+from repro.kernels import rme_scan_multi as KR
 from repro.kernels.rme_project import vmem_footprint_bytes
 
 from .descriptor import bytes_moved
 from .ephemeral import EphemeralView
-from .schema import TableGeometry, merge_geometries
+from .requests import AggregateOp, ProjectOp, ScanOp
+from .schema import WORD, TableGeometry
 from .table import RelationalTable
+
+# the fused-pass tile guard never shrinks below this (grid overhead dominates)
+MIN_FUSED_BLOCK_ROWS = 32
 
 
 @dataclasses.dataclass
@@ -70,6 +86,7 @@ class EngineStats:
     bytes_to_cpu: int = 0  # packed bytes shipped up the hierarchy
     bytes_uploaded: int = 0  # host→device row-store transfer bytes
     uploads: int = 0  # host→device row-store transfer count
+    last_block_rows: int = 0  # row-tile height the fused-pass VMEM guard chose
 
     def reset(self) -> None:
         self.hot_hits = 0
@@ -80,6 +97,7 @@ class EngineStats:
         self.bytes_to_cpu = 0
         self.bytes_uploaded = 0
         self.uploads = 0
+        self.last_block_rows = 0
 
 
 class ReorgCache:
@@ -224,12 +242,14 @@ class RelationalMemoryEngine:
         block_rows: int = K.DEFAULT_BLOCK_ROWS,
         cache_bytes: int = 2 << 20,
         interpret: bool = True,
+        vmem_bytes: int = 2 << 20,  # paper: 2 MB data SPM
     ):
         if revision not in K.REVISIONS:
             raise ValueError(f"unknown revision {revision!r}; want one of {K.REVISIONS}")
         self.revision = revision
         self.block_rows = block_rows
         self.interpret = interpret
+        self.vmem_bytes = vmem_bytes
         self.cache = ReorgCache(cache_bytes)
         self.stats = EngineStats()
         self.rowstore = DeviceRowStore(self.stats)
@@ -301,62 +321,143 @@ class RelationalMemoryEngine:
         self.cache.put(key, table.version, packed)
         return packed
 
+    def execute_many(self, ops: Sequence[ScanOp]) -> list:
+        """Serve a heterogeneous op batch with one shared scan per table.
+
+        Any mix of :class:`~repro.core.requests.ProjectOp` /
+        ``FilterOp`` / ``AggregateOp`` / ``GroupByOp`` is coalesced per table:
+        each table's cold work is lowered to kernel scan requests
+        (de-duplicated — equal requests share one output slot) and served by a
+        **single** pass of the heterogeneous one-pass kernel
+        (``rme_scan_multi``), its bus-beat bytes charged once via the union
+        geometry over every request's enabled words.  A lone request keeps
+        today's single-op kernel (``project``/``filter_project``/
+        ``aggregate``/``groupby_sum`` — the bsl/pck revisions stay exercised
+        and nothing retraces).  Hot projections are served from the
+        reorganization cache, and every cold projection lands there, warming
+        the SPM for all batch members.  When the fused pass's modeled VMEM
+        working set exceeds the engine's SPM budget, the row-tile height is
+        halved (down to ``MIN_FUSED_BLOCK_ROWS``) before launching; the chosen
+        tile is exposed as ``EngineStats.last_block_rows``.  Results are
+        returned in input order, each matching its op's single-op contract.
+        """
+        results: list = [None] * len(ops)
+        pending: dict[int, list[tuple[int, KR.ScanRequest]]] = {}
+        tables: dict[int, RelationalTable] = {}
+        for i, op in enumerate(ops):
+            if isinstance(op, ProjectOp):
+                key = self.view_key(op.table, op.view.geometry)
+                hot = self.cache.get(key, op.table.version)
+                if hot is not None:
+                    self.stats.hot_hits += 1
+                    results[i] = hot
+                    continue
+            pending.setdefault(op.table.uid, []).append((i, op.lower()))
+            tables[op.table.uid] = op.table
+        for tid, entries in pending.items():
+            table = tables[tid]
+            uniq = dict.fromkeys(req for _, req in entries)
+            reqs = tuple(uniq)
+            words = self.device_words(table)
+            self.stats.cold_misses += len(entries)
+            if len(reqs) == 1:
+                # nothing to fuse: stay on the single-op datapath (keeps the
+                # bsl/pck revision kernels) and don't count a shared scan
+                outs = [self._execute_solo(words, table, reqs[0])]
+            else:
+                block_rows = self._fused_block_rows(reqs, words.shape[1])
+                outs = K.scan_multi(
+                    words, reqs, revision=self.revision,
+                    block_rows=block_rows, interpret=self.interpret,
+                )
+                self.stats.shared_scans += 1
+                self.stats.rows_projected += table.row_count
+                self.stats.bytes_from_dram += self.scan_bytes(table, reqs)
+            by_req = dict(zip(reqs, outs))
+            for req, out in by_req.items():
+                if isinstance(req, KR.ProjectRequest):
+                    geom = req.geom
+                    self.stats.bytes_to_cpu += geom.row_count * geom.out_bytes_per_row
+                    self.cache.put(self.view_key(table, geom), table.version, out)
+            for i, req in entries:
+                results[i] = by_req[req]
+        return results
+
     def materialize_many(self, views: Sequence[EphemeralView]) -> list[jax.Array]:
         """Materialize a batch of views with one shared scan per table.
 
-        Views are coalesced per table; each table's cold views are served by a
-        single pass of the multi-output kernel (``rme_project_multi``), its
-        bus-beat bytes charged **once** via the union geometry.  Hot views are
-        served from the reorganization cache exactly as in :meth:`materialize`,
-        and every cold result is cached so the batch warms the SPM for all of
-        its members.  Results are returned in input order.
+        Thin wrapper over :meth:`execute_many`: each view becomes a
+        :class:`~repro.core.requests.ProjectOp`, so a multi-view batch rides
+        the heterogeneous one-pass scan (bus-beat bytes charged once via the
+        union geometry) and every result lands in the reorganization cache.
+        Results are returned in input order.
         """
-        results: list[jax.Array | None] = [None] * len(views)
-        pending: dict[int, list[tuple[int, EphemeralView, tuple]]] = {}
-        tables: dict[int, RelationalTable] = {}
-        for i, view in enumerate(views):
-            key = self.view_key(view.table, view.geometry)
-            hot = self.cache.get(key, view.table.version)
-            if hot is not None:
-                self.stats.hot_hits += 1
-                results[i] = hot
-                continue
-            pending.setdefault(view.table.uid, []).append((i, view, key))
-            tables[view.table.uid] = view.table
-        for tid, entries in pending.items():
-            table = tables[tid]
-            uniq: dict[tuple, TableGeometry] = {}
-            for _, view, key in entries:
-                uniq.setdefault(key, view.geometry)
-            keys = tuple(uniq)
-            geoms = tuple(uniq.values())
-            words = self.device_words(table)
-            if len(geoms) == 1:
-                # nothing to share: stay on the per-view datapath (keeps the
-                # bsl/pck revision kernels) and don't count a shared scan
-                packed = (K.project_any(
-                    words, geoms[0], revision=self.revision,
-                    block_rows=self.block_rows, interpret=self.interpret,
-                ),)
-                self.stats.rows_projected += geoms[0].row_count
-                self.stats.bytes_from_dram += bytes_moved(geoms[0])["rme"]
-            else:
-                packed = K.project_multi(
-                    words, geoms, revision=self.revision,
-                    block_rows=self.block_rows, interpret=self.interpret,
-                )
-                union = merge_geometries(geoms)
-                self.stats.shared_scans += 1
-                self.stats.rows_projected += union.row_count
-                self.stats.bytes_from_dram += bytes_moved(union)["rme"]
-            self.stats.cold_misses += len(entries)
-            by_key = dict(zip(keys, packed))
-            for key, geom in zip(keys, geoms):
-                self.stats.bytes_to_cpu += geom.row_count * geom.out_bytes_per_row
-                self.cache.put(key, table.version, by_key[key])
-            for i, _, key in entries:
-                results[i] = by_key[key]
-        return results  # type: ignore[return-value]
+        return self.execute_many([ProjectOp(v) for v in views])
+
+    # -------------------------------------------- fused one-pass internals
+    def _execute_solo(self, words: jax.Array, table: RelationalTable,
+                      req: "KR.ScanRequest"):
+        """One request, today's single-op kernel, engine-side accounting."""
+        if isinstance(req, KR.ProjectRequest):
+            out = K.project_any(
+                words, req.geom, revision=self.revision,
+                block_rows=self.block_rows, interpret=self.interpret,
+            )
+            self.stats.rows_projected += req.geom.row_count
+            self.stats.bytes_from_dram += bytes_moved(req.geom)["rme"]
+            return out
+        self.stats.rows_projected += table.row_count
+        self.stats.bytes_from_dram += self.scan_bytes(table, (req,))
+        if isinstance(req, KR.FilterRequest):
+            return K.filter_project(
+                words, req.geom, pred_word=req.pred_word,
+                pred_dtype=req.pred_dtype, pred_op=req.pred_op,
+                pred_k=req.pred_k, ts=req.ts, ts_word=req.ts_word,
+                block_rows=self.block_rows, interpret=self.interpret,
+            )
+        if isinstance(req, KR.AggregateRequest):
+            return K.aggregate(
+                words, agg_word=req.agg_word, agg_dtype=req.agg_dtype,
+                pred_word=req.pred_word, pred_dtype=req.pred_dtype,
+                pred_op=req.pred_op, pred_k=req.pred_k, ts=req.ts,
+                ts_word=req.ts_word, block_rows=self.block_rows,
+                interpret=self.interpret,
+            )
+        return K.groupby_sum(
+            words, group_word=req.group_word, agg_word=req.agg_word,
+            num_groups=req.num_groups, agg_dtype=req.agg_dtype,
+            pred_word=req.pred_word, pred_dtype=req.pred_dtype,
+            pred_op=req.pred_op, pred_k=req.pred_k, ts=req.ts,
+            ts_word=req.ts_word, block_rows=self.block_rows,
+            interpret=self.interpret,
+        )
+
+    def scan_bytes(self, table: RelationalTable,
+                   reqs: Sequence["KR.ScanRequest"]) -> int:
+        """Bus-beat bytes of one pass serving ``reqs``: Eq. (3) bursts over
+        the union of every request's enabled words.  The row stride is the
+        schema's — unless a fused MVCC snapshot enables the hidden timestamp
+        words, in which case the storage stride (what the stream walks) is
+        the honest model."""
+        max_end = max(o + w for r in reqs for o, w in K.request_intervals(r))
+        row_bytes = table.schema.row_bytes
+        if max_end > row_bytes:
+            row_bytes = table.row_words * WORD
+        union = K.union_geometry(reqs, row_bytes=row_bytes,
+                                 row_count=table.row_count)
+        return bytes_moved(union)["rme"]
+
+    def _fused_block_rows(self, reqs: Sequence["KR.ScanRequest"],
+                          row_words: int) -> int:
+        """SPM budget guard: halve the row tile until the fused pass's modeled
+        VMEM working set fits ``vmem_bytes`` (never below the floor)."""
+        block_rows = self.block_rows
+        while (block_rows // 2 >= MIN_FUSED_BLOCK_ROWS
+               and K.scan_vmem_footprint_bytes(reqs, row_words, block_rows)
+               > self.vmem_bytes):
+            block_rows //= 2
+        self.stats.last_block_rows = block_rows
+        return block_rows
 
     def aggregate_async(
         self,
@@ -376,26 +477,13 @@ class RelationalMemoryEngine:
         perform zero host→device transfers after the first call.  No
         ``bytes_to_cpu`` are charged here — nothing crosses to the host until
         a caller syncs (the blocking :meth:`aggregate` charges its 8 bytes).
+        This is sugar for a one-op :meth:`execute_many` batch, so it shares
+        the same accounting (including the bus-beat charge for the enabled
+        aggregate/predicate words).
         """
-        schema = table.schema
-        agg_word = schema.word_offset(agg_col)
-        agg_dtype = schema.column(agg_col).dtype
-        if pred_col is None:
-            pred_word, pred_dtype = agg_word, agg_dtype
-        else:
-            pred_word = schema.word_offset(pred_col)
-            pred_dtype = schema.column(pred_col).dtype
-        ts_word = schema.row_words if snapshot_ts is not None else -1
-        ts = table.now() if snapshot_ts is None else snapshot_ts
-        out = K.aggregate(
-            self.device_words(table), agg_word=agg_word, agg_dtype=agg_dtype,
-            pred_word=pred_word, pred_dtype=pred_dtype, pred_op=pred_op,
-            pred_k=pred_k, ts=ts, ts_word=ts_word,
-            block_rows=self.block_rows, interpret=self.interpret,
-        )
-        self.stats.cold_misses += 1
-        self.stats.rows_projected += table.row_count
-        return out
+        op = AggregateOp(table, agg_col, pred_col=pred_col, pred_op=pred_op,
+                         pred_k=pred_k, snapshot_ts=snapshot_ts)
+        return self.execute_many([op])[0]
 
     def aggregate(
         self,

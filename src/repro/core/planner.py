@@ -19,16 +19,16 @@ and picks the cheapest:
 
 On top of the cost model sits :func:`compile_plan`: it lowers a logical plan
 (:mod:`repro.core.plan`) to a :class:`PhysicalQuery` routed to the best
-physical path — fused offload kernels (``rme_aggregate`` / ``rme_filter`` /
-``ops.groupby_sum``), shared-scan materialization through the engine's
-``materialize_many``, or a host-side fallback when the geometry is
+physical path — engine scan ops (projections, fused filters, fused
+aggregates, group-by partials), or a host-side fallback when the geometry is
 inexpressible (beyond the configuration port's Q cap) or the caller asked for
-a baseline path (``"row"`` / ``"col"``).  A compiled query splits into
-*views to materialize* (batchable across queries — the
-:class:`~repro.serve.query_server.QueryServer` hands the views of a whole
-tick to one ``materialize_many`` call), a *launch* step that enqueues device
-work without host syncs, and a *finalize* step that is the only point allowed
-to block.
+a baseline path (``"row"`` / ``"col"``).  A compiled query splits into *scan
+ops* (batchable across queries — the
+:class:`~repro.serve.query_server.QueryServer` hands the ops of a whole tick
+to one ``execute_many`` call, where same-table work of **any** kind fuses
+into one heterogeneous one-pass scan; a solo query's lone op keeps today's
+single-op kernels), a *launch* step that enqueues device work without host
+syncs, and a *finalize* step that is the only point allowed to block.
 
 The q5 sorted build-side index cache lives here too (it is physical-execution
 state, not operator-surface state): argsort over the build table is the
@@ -57,6 +57,7 @@ from .descriptor import bytes_moved
 from .engine import RelationalMemoryEngine
 from .ephemeral import EphemeralView
 from .plan import PlanBuilder, PlanNode, Predicate, QueryShape, decompose
+from .requests import AggregateOp, FilterOp, GroupByOp, ProjectOp, ScanOp
 from .schema import MAX_ENABLED_COLUMNS, TableGeometry, merge_geometries
 from .table import RelationalTable
 
@@ -356,12 +357,15 @@ class PhysicalQuery:
     Execution splits into three steps so a serving tick can interleave many
     queries without host syncs:
 
-    * ``views`` — ephemeral views the route needs materialized.  A batch
-      executor hands the views of *all* queries in a tick to one
-      ``materialize_many`` call (same-table views coalesce into one shared
-      scan); the packed results come back aligned with ``views``.
-    * ``launch(packed)`` — enqueue the remaining device work (fused kernels,
-      async aggregates, join probe math); returns an opaque token, never
+    * ``ops`` — engine-level scan ops the route needs served (projection
+      views, fused filters, fused aggregates, group-by partials).  A batch
+      executor hands the ops of *all* queries in a tick to one
+      ``execute_many`` call — same-table work of **any** kind coalesces into
+      one heterogeneous one-pass scan; the results come back aligned with
+      ``ops``.  A query compiled alone keeps today's single-op kernels
+      (``execute_many`` routes a lone request to them).
+    * ``launch(results)`` — enqueue the remaining device work (join probe
+      math, reductions over packed views); returns an opaque token, never
       blocks on the host.
     * ``finalize(token)`` — produce the user-facing result; the only step
       allowed to pull scalars to the host.
@@ -375,25 +379,45 @@ class PhysicalQuery:
     path: str  # requested data path: "rme" | "row" | "col"
     route: str  # chosen physical route, e.g. "fused-aggregate", "shared-scan"
     cost: Plan | None
-    views: tuple[EphemeralView, ...]
-    _launch: Callable[[Sequence[jax.Array]], Any]
+    ops: tuple[ScanOp, ...]
+    _launch: Callable[[Sequence[Any]], Any]
     _finalize: Callable[[Any], Any]
 
-    def launch(self, packed: Sequence[jax.Array]) -> Any:
-        return self._launch(packed)
+    @property
+    def views(self) -> tuple[EphemeralView, ...]:
+        """The projection views among ``ops`` (kept for introspection)."""
+        return tuple(op.view for op in self.ops if isinstance(op, ProjectOp))
+
+    def launch(self, results: Sequence[Any]) -> Any:
+        return self._launch(results)
 
     def finalize(self, token: Any) -> Any:
         return self._finalize(token)
 
     def run(self) -> Any:
-        packed = self.engine.materialize_many(list(self.views)) if self.views else []
-        return self._finalize(self._launch(packed))
+        results = self.engine.execute_many(list(self.ops)) if self.ops else []
+        return self._finalize(self._launch(results))
 
 
 def _pred_args(pred: Predicate | None) -> tuple[str | None, str, Any]:
     if pred is None:
         return None, "none", 0
     return pred.col, pred.op, pred.k
+
+
+def _check_fused_dtypes(table: RelationalTable, *cols: str | None) -> None:
+    """Fused kernels decode 4-byte numeric words; reject anything else at
+    compile time, so a bad query fails its own ticket instead of poisoning
+    the tick's shared pass."""
+    for name in cols:
+        if name is None:
+            continue
+        dtype = table.schema.column(name).dtype
+        if dtype not in ("int32", "float32"):
+            raise ValueError(
+                f"column {name!r}: fused kernels need a 4-byte numeric "
+                f"column, got {dtype}"
+            )
 
 
 def _compile_aggregate(
@@ -420,25 +444,27 @@ def _compile_aggregate(
             return jnp.sum(jnp.where(mask, a, 0.0)), jnp.sum(mask)
 
         return PhysicalQuery(
-            engine, shape, path, route=f"host-{path}", cost=None, views=(),
+            engine, shape, path, route=f"host-{path}", cost=None, ops=(),
             _launch=launch,
             _finalize=lambda t: _combine(float(t[0]), float(t[1])),
         )
 
     cost = plan_query(engine, shape.table, list(shape.columns), aggregate_only=True)
     if cost.path == "fused":
-        def launch(_):
-            return engine.aggregate_async(
-                shape.table, agg.col, pred_col, pred_op, pred_k
-            )
+        # the aggregate is a scan op: compiled into a tick's batch it rides
+        # the shared heterogeneous pass; compiled alone, execute_many routes
+        # it to the single-op rme_aggregate kernel
+        _check_fused_dtypes(shape.table, agg.col, pred_col)
+        op = AggregateOp(shape.table, agg.col, pred_col=pred_col,
+                         pred_op=pred_op, pred_k=pred_k)
 
         def finalize(out):
             engine.stats.bytes_to_cpu += 8  # the scalar pair crosses on sync
             return _combine(float(out[0]), float(out[1]))
 
         return PhysicalQuery(
-            engine, shape, path, route="fused-aggregate", cost=cost, views=(),
-            _launch=launch, _finalize=finalize,
+            engine, shape, path, route="fused-aggregate", cost=cost, ops=(op,),
+            _launch=lambda results: results[0], _finalize=finalize,
         )
 
     # hot / rme / row routes reduce a materialized (or sliced) column group
@@ -457,7 +483,7 @@ def _compile_aggregate(
         return jnp.sum(jnp.where(mask, vals, 0.0)), jnp.sum(mask)
 
     return PhysicalQuery(
-        engine, shape, path, route=cost.path, cost=cost, views=(view,),
+        engine, shape, path, route=cost.path, cost=cost, ops=(ProjectOp(view),),
         _launch=launch,
         _finalize=lambda t: _combine(float(t[0]), float(t[1])),
     )
@@ -492,31 +518,21 @@ def _compile_groupby(
             return sums, counts
 
         return PhysicalQuery(
-            engine, shape, path, route=f"host-{path}", cost=None, views=(),
+            engine, shape, path, route=f"host-{path}", cost=None, ops=(),
             _launch=launch, _finalize=lambda t: _combine(*t),
         )
 
-    from repro.kernels.ops import groupby_sum
-
-    s = shape.table.schema
-
-    def launch(_):
-        kwargs = dict(
-            group_word=s.word_offset(g.group), agg_word=s.word_offset(g.agg),
-            num_groups=g.num_groups, agg_dtype=s.column(g.agg).dtype,
-            block_rows=engine.block_rows, interpret=engine.interpret,
-        )
-        if pred_col is not None:
-            kwargs.update(
-                pred_word=s.word_offset(pred_col),
-                pred_dtype=s.column(pred_col).dtype,
-                pred_op=pred_op, pred_k=pred_k,
-            )
-        return groupby_sum(engine.device_words(shape.table), **kwargs)
+    # a scan op like the aggregate: joins an open same-table batch's shared
+    # pass, or runs on the single-op groupby_sum kernel when compiled alone
+    _check_fused_dtypes(shape.table, g.group, g.agg, pred_col)
+    op = GroupByOp(
+        shape.table, g.group, g.agg, g.num_groups,
+        pred_col=pred_col, pred_op=pred_op, pred_k=pred_k,
+    )
 
     return PhysicalQuery(
-        engine, shape, path, route="fused-groupby", cost=None, views=(),
-        _launch=launch, _finalize=lambda t: _combine(*t),
+        engine, shape, path, route="fused-groupby", cost=None, ops=(op,),
+        _launch=lambda results: results[0], _finalize=lambda t: _combine(*t),
     )
 
 
@@ -563,25 +579,20 @@ def _compile_project(
 
                 return PhysicalQuery(
                     engine, shape, path, route="row-fallback", cost=None,
-                    views=(), _launch=launch, _finalize=lambda t: t,
+                    ops=(), _launch=launch, _finalize=lambda t: t,
                 )
 
-            from repro.kernels.ops import filter_project
-
-            geom = TableGeometry.from_schema(table.schema, cols, table.row_count)
-            pw = table.schema.word_offset(pred_col)
-
-            def launch(_):
-                return filter_project(
-                    engine.device_words(table), geom, pred_word=pw,
-                    pred_dtype=table.schema.column(pred_col).dtype,
-                    pred_op=pred_op, pred_k=pred_k,
-                    block_rows=engine.block_rows, interpret=engine.interpret,
-                )
+            # a scan op with the rme_filter contract: (packed, mask) — joins
+            # an open same-table batch's shared pass, or runs on the
+            # single-op filter_project kernel when compiled alone (the
+            # projected group may be any dtype; only the predicate decodes)
+            _check_fused_dtypes(table, pred_col)
+            view = engine.register(table, cols)
+            op = FilterOp(view, pred_col, pred_op, pred_k)
 
             return PhysicalQuery(
-                engine, shape, path, route="fused-filter", cost=None, views=(),
-                _launch=launch, _finalize=lambda t: t,
+                engine, shape, path, route="fused-filter", cost=None, ops=(op,),
+                _launch=lambda results: results[0], _finalize=lambda t: t,
             )
 
         def launch(_):
@@ -592,7 +603,7 @@ def _compile_project(
             return jnp.where(mask[:, None], packed, 0), mask
 
         return PhysicalQuery(
-            engine, shape, path, route=f"host-{path}", cost=None, views=(),
+            engine, shape, path, route=f"host-{path}", cost=None, ops=(),
             _launch=launch, _finalize=lambda t: t,
         )
 
@@ -601,7 +612,8 @@ def _compile_project(
         if cost.path in ("rme", "hot"):
             view = engine.register(table, cols)
             return PhysicalQuery(
-                engine, shape, path, route=cost.path, cost=cost, views=(view,),
+                engine, shape, path, route=cost.path, cost=cost,
+                ops=(ProjectOp(view),),
                 _launch=lambda packed: packed[0], _finalize=lambda t: t,
             )
 
@@ -609,7 +621,7 @@ def _compile_project(
         # the engine streams whole rows — from the *device-resident* store
         # (no per-call host re-upload), charged to the PMU as a full-row pass
         return PhysicalQuery(
-            engine, shape, path, route="row-fallback", cost=cost, views=(),
+            engine, shape, path, route="row-fallback", cost=cost, ops=(),
             _launch=lambda _: _resident_full_rows(engine, table, cols),
             _finalize=lambda t: t,
         )
@@ -619,7 +631,7 @@ def _compile_project(
         return jnp.concatenate(parts, axis=1)
 
     return PhysicalQuery(
-        engine, shape, path, route=f"host-{path}", cost=None, views=(),
+        engine, shape, path, route=f"host-{path}", cost=None, ops=(),
         _launch=launch, _finalize=lambda t: t,
     )
 
@@ -675,7 +687,7 @@ def _compile_join(
         rv = None if cached is not None else engine.register(
             r_table, (j.key, j.right_proj)
         )
-        views = (sv,) if rv is None else (sv, rv)
+        ops = (ProjectOp(sv),) if rv is None else (ProjectOp(sv), ProjectOp(rv))
 
         def launch(packed):
             def read_build():
@@ -692,7 +704,7 @@ def _compile_join(
 
         return PhysicalQuery(
             engine, shape, path, route="shared-scan-join", cost=None,
-            views=views, _launch=launch, _finalize=lambda t: t,
+            ops=ops, _launch=launch, _finalize=lambda t: t,
         )
 
     def launch(_):
@@ -707,7 +719,7 @@ def _compile_join(
         )
 
     return PhysicalQuery(
-        engine, shape, path, route=f"host-{path}", cost=None, views=(),
+        engine, shape, path, route=f"host-{path}", cost=None, ops=(),
         _launch=launch, _finalize=lambda t: t,
     )
 

@@ -1,0 +1,139 @@
+"""Engine-level scan ops — what one consumer wants from a table's scan.
+
+The kernel layer (:mod:`repro.kernels.rme_scan_multi`) speaks word offsets
+and static specs; callers speak tables, ephemeral views, and column names.
+A *scan op* is the engine-level spelling: it names the table (and, for
+packed outputs, the registered :class:`~repro.core.ephemeral.EphemeralView`)
+plus the operator parameters, and :meth:`lower` translates it to the kernel
+request via the table's schema.  :meth:`RelationalMemoryEngine.execute_many`
+coalesces any mix of these per table into one heterogeneous one-pass scan
+(or routes a lone op to its single-op kernel).
+
+Ops use identity equality (two clients asking the same aggregate are two
+ops); de-duplication happens at the kernel-request level, where equal lowered
+requests — same enabled words, same predicate, same snapshot — share one
+output slot in the fused pass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.kernels import rme_scan_multi as KR
+
+from .ephemeral import EphemeralView
+from .table import RelationalTable
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ProjectOp:
+    """Materialize a registered view's packed column group."""
+
+    view: EphemeralView
+
+    @property
+    def table(self) -> RelationalTable:
+        return self.view.table
+
+    def lower(self) -> KR.ProjectRequest:
+        return KR.ProjectRequest(self.view.geometry)
+
+
+def _pred_fields(table: RelationalTable, pred_col: str | None, pred_op: str,
+                 pred_k, snapshot_ts: int | None, default_word: int,
+                 default_dtype: str) -> dict:
+    schema = table.schema
+    if pred_col is None:
+        pred_word, pred_dtype = default_word, default_dtype
+    else:
+        pred_word = schema.word_offset(pred_col)
+        pred_dtype = schema.column(pred_col).dtype
+    return dict(
+        pred_word=pred_word,
+        pred_dtype=pred_dtype,
+        pred_op=pred_op,
+        pred_k=pred_k,
+        ts_word=schema.row_words if snapshot_ts is not None else -1,
+        ts=0 if snapshot_ts is None else snapshot_ts,
+    )
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class FilterOp:
+    """Fused selection + projection: packed block with failing rows zeroed
+    plus a validity bitmap (the ``rme_filter`` contract)."""
+
+    view: EphemeralView
+    pred_col: str
+    pred_op: str = "gt"
+    pred_k: int | float = 0
+    snapshot_ts: int | None = None
+
+    @property
+    def table(self) -> RelationalTable:
+        return self.view.table
+
+    def lower(self) -> KR.FilterRequest:
+        schema = self.table.schema
+        return KR.FilterRequest(
+            self.view.geometry,
+            **_pred_fields(
+                self.table, self.pred_col, self.pred_op, self.pred_k,
+                self.snapshot_ts, schema.word_offset(self.pred_col),
+                schema.column(self.pred_col).dtype,
+            ),
+        )
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class AggregateOp:
+    """Fused ``SELECT SUM(agg), COUNT(*) WHERE pred``: a ``[sum, count]``
+    scalar pair, nothing else leaves the engine."""
+
+    table: RelationalTable
+    agg_col: str
+    pred_col: str | None = None
+    pred_op: str = "none"
+    pred_k: int | float = 0
+    snapshot_ts: int | None = None
+
+    def lower(self) -> KR.AggregateRequest:
+        schema = self.table.schema
+        agg_word = schema.word_offset(self.agg_col)
+        agg_dtype = schema.column(self.agg_col).dtype
+        return KR.AggregateRequest(
+            agg_word=agg_word,
+            agg_dtype=agg_dtype,
+            **_pred_fields(self.table, self.pred_col, self.pred_op,
+                           self.pred_k, self.snapshot_ts, agg_word, agg_dtype),
+        )
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class GroupByOp:
+    """Fused ``SELECT SUM(agg), COUNT(*) ... GROUP BY group`` partials."""
+
+    table: RelationalTable
+    group_col: str
+    agg_col: str
+    num_groups: int
+    pred_col: str | None = None
+    pred_op: str = "none"
+    pred_k: int | float = 0
+    snapshot_ts: int | None = None
+
+    def lower(self) -> KR.GroupByRequest:
+        schema = self.table.schema
+        agg_word = schema.word_offset(self.agg_col)
+        agg_dtype = schema.column(self.agg_col).dtype
+        return KR.GroupByRequest(
+            group_word=schema.word_offset(self.group_col),
+            agg_word=agg_word,
+            num_groups=self.num_groups,
+            agg_dtype=agg_dtype,
+            **_pred_fields(self.table, self.pred_col, self.pred_op,
+                           self.pred_k, self.snapshot_ts, agg_word, agg_dtype),
+        )
+
+
+ScanOp = ProjectOp | FilterOp | AggregateOp | GroupByOp

@@ -247,29 +247,23 @@ class TableGeometry:
         )
 
 
-def merge_geometries(geoms: Sequence[TableGeometry]) -> TableGeometry:
-    """Union geometry of several views over one row layout (the shared scan).
+def geometry_from_intervals(
+    intervals: Sequence[tuple[int, int]], row_bytes: int, row_count: int
+) -> TableGeometry:
+    """The union accounting geometry over ``(byte_offset, byte_width)`` spans.
 
-    When the engine serves a batch of ephemeral views from a single Fetch-Unit
-    stream, the bytes it pulls from the row store are governed by the *union*
-    of the enabled-column byte intervals: overlapping and adjacent intervals
-    collapse into one burst chain, so co-planned views are charged for the
-    shared scan exactly once.  ``max_columns`` is lifted to whatever the merge
-    produces — the union is an accounting geometry, not a configuration-port
-    write, so the paper's Q cap does not apply.
+    Overlapping and *adjacent* intervals collapse into one burst chain — the
+    single definition of the shared-scan charging rule, used by both
+    :func:`merge_geometries` (multi-view batches) and the heterogeneous
+    one-pass scan's ``union_geometry`` (mixed op batches).  ``max_columns``
+    is lifted to whatever the merge produces: this is an accounting geometry,
+    not a configuration-port write, so the paper's Q cap does not apply.
     """
-    if not geoms:
-        raise ValueError("merge_geometries needs at least one geometry")
-    row_bytes = geoms[0].row_bytes
-    if any(g.row_bytes != row_bytes for g in geoms):
-        raise ValueError("cannot merge geometries over different row layouts")
-    intervals = sorted(
-        (o, o + w)
-        for g in geoms
-        for o, w in zip(g.abs_offsets, g.col_widths)
-    )
+    if not intervals:
+        raise ValueError("geometry_from_intervals needs at least one interval")
+    spans = sorted((o, o + w) for o, w in intervals)
     merged: list[list[int]] = []
-    for s, e in intervals:
+    for s, e in spans:
         if merged and s <= merged[-1][1]:
             merged[-1][1] = max(merged[-1][1], e)
         else:
@@ -280,10 +274,30 @@ def merge_geometries(geoms: Sequence[TableGeometry]) -> TableGeometry:
         rel.append(merged[j][0] - merged[j - 1][0])
     return TableGeometry(
         row_bytes=row_bytes,
-        row_count=max(g.row_count for g in geoms),
+        row_count=row_count,
         col_widths=widths,
         col_rel_offsets=tuple(rel),
         max_columns=max(len(merged), MAX_ENABLED_COLUMNS),
+    )
+
+
+def merge_geometries(geoms: Sequence[TableGeometry]) -> TableGeometry:
+    """Union geometry of several views over one row layout (the shared scan).
+
+    When the engine serves a batch of ephemeral views from a single Fetch-Unit
+    stream, the bytes it pulls from the row store are governed by the *union*
+    of the enabled-column byte intervals (see :func:`geometry_from_intervals`),
+    so co-planned views are charged for the shared scan exactly once.
+    """
+    if not geoms:
+        raise ValueError("merge_geometries needs at least one geometry")
+    row_bytes = geoms[0].row_bytes
+    if any(g.row_bytes != row_bytes for g in geoms):
+        raise ValueError("cannot merge geometries over different row layouts")
+    return geometry_from_intervals(
+        [(o, w) for g in geoms for o, w in zip(g.abs_offsets, g.col_widths)],
+        row_bytes=row_bytes,
+        row_count=max(g.row_count for g in geoms),
     )
 
 

@@ -1,0 +1,65 @@
+"""Shared kernel utilities — one definition for the whole RME kernel suite.
+
+Every fused kernel walks the same row-store representation (int32 word
+buffers, ``(N, row_words)``) with the same conventions: a default row-tile
+height, zero-padding to a whole number of tiles, word-granule column slices
+derived from a :class:`~repro.core.schema.TableGeometry`, 4-byte column
+decoding (int32 passthrough / float32 bitcast), and the single fused
+predicate (``gt`` / ``lt`` / ``none``).  These used to be copied per kernel
+module (``rme_project`` / ``rme_filter`` / ``rme_aggregate``); they live here
+once, and the heterogeneous one-pass kernel (``rme_scan_multi``) composes
+them the same way the single-op kernels do.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schema import TableGeometry
+
+DEFAULT_BLOCK_ROWS = 256
+
+
+def decode(x: jax.Array, dtype: str) -> jax.Array:
+    """Reinterpret raw int32 storage words as the column's 4-byte dtype."""
+    if dtype == "float32":
+        return jax.lax.bitcast_convert_type(x, jnp.float32)
+    if dtype == "int32":
+        return x
+    raise ValueError(f"4-byte numeric column required, got {dtype}")
+
+
+def pred_mask(vals: jax.Array, op: str, k: jax.Array) -> jax.Array:
+    """The fused predicate every offload kernel evaluates in-scan."""
+    if op == "gt":
+        return vals > k
+    if op == "lt":
+        return vals < k
+    if op == "none":
+        return jnp.ones(vals.shape, dtype=bool)
+    raise ValueError(op)
+
+
+def pad_rows(words: jax.Array, block_rows: int) -> jax.Array:
+    """Zero-pad the row dimension to a whole number of row tiles."""
+    n = words.shape[0]
+    pad = (-n) % block_rows
+    if pad:
+        words = jnp.pad(words, ((0, pad), (0, 0)))
+    return words
+
+
+def column_slices(geom: TableGeometry):
+    """(src_word_offset, dst_word_offset, word_width) per enabled column."""
+    return tuple(
+        zip(geom.col_word_offsets, geom.out_word_offsets, geom.col_word_widths)
+    )
+
+
+def pred_k_bits(pred_k, pred_dtype: str) -> jax.Array:
+    """The predicate constant as int32 bits (how kernels take it as operand)."""
+    k_arr = jnp.asarray(
+        pred_k, dtype=jnp.float32 if pred_dtype == "float32" else jnp.int32
+    )
+    return jax.lax.bitcast_convert_type(k_arr, jnp.int32)

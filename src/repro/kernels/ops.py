@@ -22,6 +22,17 @@ from .rme_project import (
     vmem_footprint_bytes,
 )
 from .rme_project_multi import project_multi, project_multi_xla
+from .rme_scan_multi import (
+    AggregateRequest,
+    FilterRequest,
+    GroupByRequest,
+    ProjectRequest,
+    request_intervals,
+    scan_multi,
+    scan_multi_xla,
+    scan_vmem_footprint_bytes,
+    union_geometry,
+)
 
 REVISIONS = ("bsl", "pck", "mlp", "xla")
 
@@ -43,6 +54,10 @@ def project_any(
 __all__ = [
     "REVISIONS",
     "DEFAULT_BLOCK_ROWS",
+    "AggregateRequest",
+    "FilterRequest",
+    "GroupByRequest",
+    "ProjectRequest",
     "aggregate",
     "filter_project",
     "groupby_sum",
@@ -51,5 +66,10 @@ __all__ = [
     "project_multi",
     "project_multi_xla",
     "project_xla",
+    "request_intervals",
+    "scan_multi",
+    "scan_multi_xla",
+    "scan_vmem_footprint_bytes",
+    "union_geometry",
     "vmem_footprint_bytes",
 ]

@@ -22,25 +22,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-DEFAULT_BLOCK_ROWS = 256
-
-
-def _decode(x: jax.Array, dtype: str) -> jax.Array:
-    if dtype == "float32":
-        return jax.lax.bitcast_convert_type(x, jnp.float32)
-    if dtype == "int32":
-        return x
-    raise ValueError(f"4-byte numeric column required, got {dtype}")
-
-
-def _pred(vals: jax.Array, op: str, k: jax.Array) -> jax.Array:
-    if op == "gt":
-        return vals > k
-    if op == "lt":
-        return vals < k
-    if op == "none":
-        return jnp.ones(vals.shape, dtype=bool)
-    raise ValueError(op)
+from .common import DEFAULT_BLOCK_ROWS
+from .common import decode as _decode
+from .common import pred_mask as _pred
 
 
 def _agg_kernel(

@@ -17,9 +17,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.schema import TableGeometry
-from .rme_aggregate import _decode, _pred
 
-DEFAULT_BLOCK_ROWS = 256
+from .common import DEFAULT_BLOCK_ROWS
+from .common import decode as _decode
+from .common import pred_mask as _pred
 
 
 def _filter_kernel(spec, x_ref, k_ref, ts_ref, o_ref, m_ref):

@@ -35,14 +35,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.schema import TableGeometry
 
-DEFAULT_BLOCK_ROWS = 256
+from .common import DEFAULT_BLOCK_ROWS, column_slices as _column_slices
+from .common import pad_rows as _pad_rows
 
-
-def _column_slices(geom: TableGeometry):
-    """(src_word_offset, dst_word_offset, word_width) per enabled column."""
-    return tuple(
-        zip(geom.col_word_offsets, geom.out_word_offsets, geom.col_word_widths)
-    )
+__all__ = [
+    "DEFAULT_BLOCK_ROWS", "project", "project_xla", "vmem_footprint_bytes",
+]
 
 
 # --------------------------------------------------------------------- MLP
@@ -74,14 +72,6 @@ def _bsl_kernel(slices, x_ref, o_ref):
         def _copy(src=src, dst=dst, w=w):
             # no packer: every extracted chunk is its own buffer write
             o_ref[:, dst : dst + w] = x_ref[:, src : src + w]
-
-
-def _pad_rows(words: jax.Array, block_rows: int) -> jax.Array:
-    n = words.shape[0]
-    pad = (-n) % block_rows
-    if pad:
-        words = jnp.pad(words, ((0, pad), (0, 0)))
-    return words
 
 
 @functools.partial(

@@ -28,7 +28,9 @@ from jax.experimental import pallas as pl
 
 from repro.core.schema import TableGeometry
 
-from .rme_project import DEFAULT_BLOCK_ROWS, _column_slices, _pad_rows
+from .common import DEFAULT_BLOCK_ROWS
+from .common import column_slices as _column_slices
+from .common import pad_rows as _pad_rows
 
 
 def _mlp_multi_kernel(view_slices, x_ref, *o_refs):

@@ -7,12 +7,12 @@ multi-tenant half of that story: a :class:`QueryServer` owns one
 (:mod:`repro.core.plan`) from any number of concurrent clients.  Requests are
 not executed as they arrive — they queue, and each serving **tick** drains a
 batch, compiles every plan (:func:`repro.core.planner.compile_plan`), and
-coalesces all of the batch's ephemeral views into **one**
-``materialize_many`` call: same-table work from different clients rides a
-single shared Fetch-Unit stream, exactly the scan-sharing substrate PR 1's
-``BatchExecutor`` built, now driven by cross-client traffic instead of one
-caller's loop.  Fused aggregates go through ``aggregate_async`` so a tick
-enqueues every query's device work before the first host sync.
+coalesces all of the batch's scan ops into **one** ``execute_many`` call:
+same-table work from different clients — projections, fused filters, fused
+aggregates, and group-bys alike — rides a single shared Fetch-Unit stream
+(the heterogeneous one-pass kernel ``rme_scan_multi``), so a mixed-kind
+same-table tick performs exactly one row-store pass instead of one per op
+kind.  Nothing in the tick syncs with the host until finalize.
 
 Threading model: ``submit`` is thread-safe and non-blocking (clients get a
 :class:`QueryTicket` and block on ``result()`` at their leisure); all engine
@@ -40,11 +40,10 @@ from typing import Any, Mapping
 
 import numpy as np
 
-from repro.core.descriptor import bytes_moved
 from repro.core.engine import RelationalMemoryEngine
 from repro.core.plan import PlanBuilder, PlanNode
 from repro.core.planner import PhysicalQuery, compile_plan
-from repro.core.schema import merge_geometries
+from repro.core.requests import ProjectOp
 
 
 class QueryTicket:
@@ -162,26 +161,32 @@ class QueryServer:
             return len(self._queue)
 
     # ------------------------------------------------------------ execution
-    def _account_cold_groups(self, views) -> None:
-        """Shared-scan ratio + bytes-saved credit for this tick's view batch.
+    def _account_cold_groups(self, ops) -> None:
+        """Shared-scan ratio + bytes-saved credit for this tick's op batch.
 
-        Cold views (not served by the reorg cache) are grouped per table, the
-        way ``materialize_many`` will coalesce them; a group of ≥2 distinct
-        geometries becomes one shared scan whose cost is the union geometry,
-        while a per-query execution would have paid every view's own scan.
+        Cold ops (projections not served by the reorg cache, plus every
+        filter/aggregate/group-by) are grouped per table, the way
+        ``execute_many`` will coalesce them; a group of ≥2 distinct lowered
+        requests becomes one shared scan whose cost is the union geometry
+        over all enabled words, while a per-query execution would have paid
+        every request's own pass.
         """
-        by_table: dict[int, dict[tuple, Any]] = {}
-        for v in views:
-            key = self.engine.view_key(v.table, v.geometry)
-            if self.engine.cache.peek(key, v.table.version) is not None:
-                continue  # hot: free either way
-            by_table.setdefault(v.table.uid, {})[key] = v.geometry
-        for geoms in by_table.values():
+        by_table: dict[int, tuple[Any, dict]] = {}
+        for op in ops:
+            if isinstance(op, ProjectOp):
+                key = self.engine.view_key(op.table, op.view.geometry)
+                if self.engine.cache.peek(key, op.table.version) is not None:
+                    continue  # hot: free either way
+            entry = by_table.setdefault(op.table.uid, (op.table, {}))
+            entry[1].setdefault(op.lower())
+        for table, reqs in by_table.values():
             self.stats.table_groups += 1
-            if len(geoms) >= 2:
+            if len(reqs) >= 2:
                 self.stats.table_groups_shared += 1
-                independent = sum(bytes_moved(g)["rme"] for g in geoms.values())
-                union = bytes_moved(merge_geometries(list(geoms.values())))["rme"]
+                independent = sum(
+                    self.engine.scan_bytes(table, (r,)) for r in reqs
+                )
+                union = self.engine.scan_bytes(table, tuple(reqs))
                 self.stats.bytes_saved += independent - union
 
     def run_tick(self) -> int:
@@ -189,8 +194,8 @@ class QueryServer:
 
         Returns the number of requests processed (served + failed).  All
         device work of the batch is enqueued before any query's finalize
-        blocks, so one tick costs at most one shared scan per distinct table
-        plus the queries' own fused kernels.
+        blocks, and every kind of same-table op fuses into the shared pass,
+        so one tick costs at most one scan per distinct table.
         """
         with self._lock:
             n = min(self.max_batch, len(self._queue))
@@ -211,26 +216,38 @@ class QueryServer:
                 self.stats.failed += 1
                 req.ticket._resolve(error=e)
 
-        # one engine batch for every view in the tick: cross-client same-table
-        # work coalesces into one shared scan (the engine counts it)
-        views, spans = [], []
+        # one engine batch for every scan op in the tick: cross-client
+        # same-table work — projections, filters, aggregates, group-bys —
+        # coalesces into one heterogeneous shared scan (the engine counts it)
+        ops, spans = [], []
         for pq in compiled:
             if pq is None:
                 spans.append((0, 0))
                 continue
-            spans.append((len(views), len(pq.views)))
-            views.extend(pq.views)
-        self._account_cold_groups(views)
+            spans.append((len(ops), len(pq.ops)))
+            ops.extend(pq.ops)
+        self._account_cold_groups(ops)
         try:
-            packed = self.engine.materialize_many(views) if views else []
-        except Exception as e:
-            # the shared step failed (lowering error, OOM on the union
-            # geometry): every still-pending ticket of the batch must resolve,
-            # or its client blocks forever and a background loop dies silently
+            packed = self.engine.execute_many(ops) if ops else []
+        except Exception:
+            # the shared step failed (one op's lowering error, OOM on the
+            # union geometry, ...).  One bad client must not poison the
+            # tick: fall back to executing each query individually, so every
+            # healthy ticket still resolves with its result and only the
+            # offender carries the error.  (PMU counters may over-charge the
+            # aborted shared attempt — accounting noise, not a result bug.)
             for req, pq in zip(batch, compiled):
-                if pq is not None:
+                if pq is None:
+                    continue
+                try:
+                    result = pq.run()
+                except Exception as e:
                     self.stats.failed += 1
                     req.ticket._resolve(error=e)
+                    continue
+                req.ticket._resolve(result=result, route=pq.route)
+                self.stats.served += 1
+                self._record_latency(req.ticket)
             return len(batch)
 
         tokens: list[Any] = []
@@ -258,17 +275,18 @@ class QueryServer:
                 continue
             req.ticket._resolve(result=result, route=pq.route)
             self.stats.served += 1
-            lat = req.ticket.latency_s
-            self.stats.latency_sum_s += lat
-            self.stats.latency_max_s = max(self.stats.latency_max_s, lat)
-            with self._lock:  # client_latencies() iterates under the lock
-                ent = self._client_latency.setdefault(
-                    req.ticket.client, [0, 0.0, 0.0]
-                )
-                ent[0] += 1
-                ent[1] += lat
-                ent[2] = max(ent[2], lat)
+            self._record_latency(req.ticket)
         return len(batch)
+
+    def _record_latency(self, ticket: QueryTicket) -> None:
+        lat = ticket.latency_s
+        self.stats.latency_sum_s += lat
+        self.stats.latency_max_s = max(self.stats.latency_max_s, lat)
+        with self._lock:  # client_latencies() iterates under the lock
+            ent = self._client_latency.setdefault(ticket.client, [0, 0.0, 0.0])
+            ent[0] += 1
+            ent[1] += lat
+            ent[2] = max(ent[2], lat)
 
     def drain(self) -> int:
         """Run ticks until the admission queue is empty; returns total processed."""

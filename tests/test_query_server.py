@@ -135,10 +135,10 @@ def test_shared_step_failure_resolves_every_ticket(table):
     eng = RelationalMemoryEngine()
     server = QueryServer(eng)
 
-    def boom(views):
+    def boom(ops):
         raise RuntimeError("union geometry failed to lower")
 
-    eng.materialize_many = boom
+    eng.execute_many = boom
     tks = [server.submit(plan(table).project(*g)) for g in GROUPS]
     assert server.run_tick() == len(GROUPS)
     for tk in tks:

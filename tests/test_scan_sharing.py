@@ -35,6 +35,29 @@ def table():
     )
 
 
+# ------------------------------------------------- project_multi (kernel)
+@pytest.mark.parametrize("revision", REVISIONS)
+def test_project_multi_kernel_matches_oracle(table, revision):
+    """Direct kernel-level check: the engine now routes batches through the
+    heterogeneous scan (rme_scan_multi), so the multi-view projection kernel
+    needs its own equality sweep to stay honest."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ref as R
+    from repro.kernels.ops import project_multi
+
+    words = jnp.asarray(table.words())
+    geoms = tuple(
+        TableGeometry.from_schema(table.schema, list(g), table.row_count)
+        for g in GROUPS
+    )
+    outs = project_multi(words, geoms, revision=revision, block_rows=128)
+    for geom, got in zip(geoms, outs):
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(R.project_ref(words, geom))
+        )
+
+
 # ------------------------------------------------------- materialize_many
 @pytest.mark.parametrize("revision", REVISIONS)
 def test_materialize_many_matches_per_view(table, revision):
