@@ -26,6 +26,7 @@ from . import (
     fig12_join,
     fig13_scaling,
     fig_concurrent_queries,
+    fig_htap_ingest,
     fig_mixed_batch,
     fig_scan_sharing,
     fig_selectivity,
@@ -43,6 +44,7 @@ MODULES = [
     fig12_join,
     fig13_scaling,
     fig_concurrent_queries,
+    fig_htap_ingest,
     fig_mixed_batch,
     fig_scan_sharing,
     fig_selectivity,

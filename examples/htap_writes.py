@@ -1,0 +1,87 @@
+"""Live writes through the QueryServer — the HTAP write path in one sitting.
+
+One relation takes inserts, updates, and deletes *while* analytical clients
+query it: write tickets and read plans share the admission queue, each tick
+applies its writes first and serves every read from that post-write snapshot,
+and the engine ships only the write delta host→device (tail-chunk uploads for
+appends, patched timestamp words for deletes/updates) while hot views survive
+appends via incremental tail scans.  A reader pinned to an old snapshot gets
+byte-identical results throughout (MVCC, paper §4).
+
+Run:  PYTHONPATH=src python examples/htap_writes.py
+      (REPRO_SMOKE=1 shrinks the table for the CI docs-and-examples leg)
+"""
+
+import os
+
+import numpy as np
+
+from repro.core import RelationalMemoryEngine, RelationalTable, benchmark_schema, plan
+from repro.serve import QueryServer
+
+SMOKE = bool(os.environ.get("REPRO_SMOKE"))
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    schema = benchmark_schema(64, 4)  # 16 × int32 columns
+    n = 2_000 if SMOKE else 20_000
+    table = RelationalTable.from_columns(
+        schema,
+        {c.name: rng.integers(-1000, 1000, n).astype(np.int32)
+         for c in schema.columns},
+    )
+    engine = RelationalMemoryEngine()
+    server = QueryServer(engine, snapshot_reads=True)
+
+    # make the table device-resident and one dashboard view hot
+    _ = engine.aggregate(table, "A1")
+    dashboard = engine.register(table, ("A1", "A2"))
+    _ = dashboard.packed()
+    engine.stats.reset()
+
+    # a long-running reader pins the pre-write snapshot
+    pinned_ts = table.now()
+    pinned_before = engine.aggregate(table, "A1", snapshot_ts=pinned_ts)
+
+    # one serving tick: three writes interleaved with three reads
+    fresh = {c.name: rng.integers(-1000, 1000, 64).astype(np.int32)
+             for c in schema.columns}
+    ins = server.submit_insert(table, fresh, client="ingest")
+    upd = server.submit_update(table, np.arange(8),
+                               {"A2": np.full(8, 10_000, np.int32)},
+                               client="ingest")
+    dele = server.submit_delete(table, np.arange(100, 104), client="ingest")
+    total = server.submit(plan(table).sum("A1"), client="analyst")
+    hot = server.submit(plan(table).filter("A2", "gt", 5_000).count("A2"),
+                        client="analyst")
+    means = server.submit(plan(table).groupby("A4", "A1", "avg", 16),
+                          client="analyst")
+    server.run_tick()
+
+    print(f"writes: inserted {len(ins.result())} rows, "
+          f"updated {len(upd.result())}, deleted 4 (ticket: {dele.result()})")
+    print(f"reads (post-write snapshot): sum={total.result():.0f}, "
+          f"rows with A2>5000: {hot.result():.0f}, "
+          f"group means shape {np.asarray(means.result()).shape}")
+
+    # the pinned reader is byte-stable across all of it
+    assert engine.aggregate(table, "A1", snapshot_ts=pinned_ts) == pinned_before
+    print(f"pinned reader @ts={pinned_ts}: unchanged "
+          f"(sum={pinned_before[0]:.0f}, count={pinned_before[1]:.0f})")
+
+    # the hot view survived the append: tail delta scan, not a rebuild
+    _ = engine.register(table, ("A1", "A2")).packed()
+    s = engine.stats
+    print(f"engine PMU: uploads={s.uploads} (delta={s.delta_uploads}), "
+          f"bytes_uploaded={s.bytes_uploaded} "
+          f"(delta={s.bytes_uploaded_delta} — vs {table.nbytes()} resident), "
+          f"delta_hits={s.delta_hits}")
+    assert s.bytes_uploaded == s.bytes_uploaded_delta  # O(delta), never O(T)
+    assert s.delta_hits >= 1
+    print("HTAP write path complete: O(delta) uploads, surviving hot views, "
+          "snapshot-isolated readers.")
+
+
+if __name__ == "__main__":
+    main()

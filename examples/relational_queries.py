@@ -8,7 +8,10 @@ isolated from concurrent transactional updates.
 
 Run:  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python examples/relational_queries.py
+      (REPRO_SMOKE=1 shrinks the relations so CI can run it in seconds)
 """
+
+import os
 
 import numpy as np
 
@@ -21,12 +24,15 @@ from repro.core import distributed as D
 from repro.launch.mesh import make_mesh
 
 
+SMOKE = bool(os.environ.get("REPRO_SMOKE"))
+
+
 def main() -> None:
     n_dev = len(jax.devices())
     print(f"devices: {n_dev}")
     rng = np.random.default_rng(0)
     schema = benchmark_schema(64, 4)
-    n = 100_000
+    n = 4_000 if SMOKE else 100_000
     table = RelationalTable.from_columns(
         schema,
         {c.name: rng.integers(-100, 100, n).astype(np.int32)
@@ -51,7 +57,7 @@ def main() -> None:
     print(f"dist Q4: {int((np.asarray(c) > 0).sum())} non-empty groups of 32")
 
     # distributed Q5: broadcast build side, probe locally
-    n_r = 1 << 12
+    n_r = 1 << 9 if SMOKE else 1 << 12
     r_cols = {cc.name: rng.integers(-100, 100, n_r).astype(np.int32)
               for cc in schema.columns}
     r_cols["A2"] = np.arange(n_r, dtype=np.int32)

@@ -5,9 +5,11 @@ and refills slots with one jitted decode step — the serve-side shape the
 decode_32k / long_500k dry-run cells lower at production scale.
 
 Run:  PYTHONPATH=src python examples/serving.py [--arch qwen3-8b]
+      (REPRO_SMOKE=1 shrinks requests/decode length to CI scale)
 """
 
 import argparse
+import os
 import time
 
 import numpy as np
@@ -24,9 +26,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-8b",
                     choices=[a for a in ARCH_NAMES])
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--max-new", type=int, default=12)
+    smoke = bool(os.environ.get("REPRO_SMOKE"))
+    ap.add_argument("--slots", type=int, default=2 if smoke else 4)
+    ap.add_argument("--requests", type=int, default=3 if smoke else 8)
+    ap.add_argument("--max-new", type=int, default=4 if smoke else 12)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)

@@ -18,37 +18,54 @@ The engine's compute path is revision-selectable (``bsl``/``pck``/``mlp``
 Pallas kernels, or the ``xla`` fused-gather path used when lowering for
 non-TPU targets), mirroring the paper's §5.2 hardware revisions.
 
+The write path: delta-chunked residency
+---------------------------------------
+In the paper, the row store lives next to the RME — it is never copied to get
+scanned, and OLTP writes land in it directly.  The software analogue is
+:class:`DeviceRowStore`, and since our 'DRAM' is host numpy, writes create a
+host/device synchronization problem the store solves at **delta**
+granularity:
+
+* A table's device copy is a **base chunk plus appended tail chunks**
+  (consecutive row ranges whose concatenation is the row store).  The first
+  access uploads everything once; after that, an *append* of N rows ships
+  exactly those N rows' words as a new tail chunk, and a *delete*/*update*
+  ships exactly the patched hidden ``__ts_end`` words (replayed from the
+  table's patch log) — never the whole table.  ``EngineStats`` splits the
+  accounting: ``bytes_uploaded``/``uploads`` count every host→device
+  transfer, ``bytes_uploaded_delta``/``delta_uploads`` the delta subset, so
+  benchmarks can prove O(delta) transfer under sustained writes.
+* The :class:`ReorgCache` is **delta-aware** for projections: a packed
+  column group never contains the hidden timestamp words, so a cached view
+  stays byte-valid for the physical rows it covers no matter how many
+  deletes/updates patch timestamps.  A hot view whose table only grew is
+  served by projecting just the appended tail and concatenating with the
+  cached block (incremental view maintenance, counted in
+  ``EngineStats.delta_hits``) instead of being invalidated.
+
 Scan-sharing batch execution
 ----------------------------
-In the paper, the row store lives next to the RME — it is never copied to get
-scanned.  The software analogue is :class:`DeviceRowStore`: each table's word
-buffer is uploaded host→device **once** and kept resident, keyed by
-``(table.uid, table.version)``, so cold materializations and fused aggregates
-stop re-shipping DRAM on every call (``EngineStats.bytes_uploaded`` /
-``uploads`` count the transfers that do happen).
-
-The heterogeneous one-pass scan
--------------------------------
-On top of that sits :meth:`RelationalMemoryEngine.execute_many` (driven by
-:class:`repro.core.executor.BatchExecutor` and the serving layer): pending
+Cold materializations and fused aggregates read the device-resident chunks —
+repeated analytics over an unchanged table perform zero host→device
+transfers.  On top sits :meth:`RelationalMemoryEngine.execute_many` (driven
+by :class:`repro.core.executor.BatchExecutor` and the serving layer): pending
 scan ops of **any** kind — projections, predicated filters, fused aggregates,
 group-by partials (:mod:`repro.core.requests`) — are coalesced per table,
 lowered to kernel scan requests (equal requests de-duplicate into one output
 slot), and served by the heterogeneous one-pass kernel in
-``repro.kernels.rme_scan_multi``: one Fetch-Unit stream per table per batch,
-every request's output emitted from that single pass.  This is the paper's §8
-extension argument made real for the whole query surface — selection,
-aggregation, and group-by offloads share the stream instead of each sweeping
-the row store on their own.  Bus-beat bytes are attributed to the shared scan
-exactly once via the *union* geometry over all requests' enabled words
-(:func:`repro.kernels.rme_scan_multi.union_geometry`), every projection lands
-in the :class:`ReorgCache` so subsequent accesses are hot, and a batch whose
-modeled VMEM working set exceeds the 2 MB SPM budget auto-halves its row-tile
-height before launching (``EngineStats.last_block_rows`` records the choice).
-A lone request keeps its single-op kernel — solo queries never pay the fused
-formulation.  :meth:`materialize_many` is the projection-only thin wrapper,
-and ``aggregate_async`` — the non-blocking sibling of ``aggregate`` — is a
-one-op batch through the same path.
+``repro.kernels.rme_scan_multi``: one Fetch-Unit stream **per chunk** per
+table per batch, every request's output emitted from those passes and
+combined across chunks (blocked outputs concatenate, aggregate/group-by
+partials add — see ``scan_multi_chunked``).  Bus-beat bytes are attributed
+exactly once per chunk via the *union* geometry over all requests' enabled
+words (:func:`repro.kernels.rme_scan_multi.union_geometry`), every projection
+lands in the :class:`ReorgCache` so subsequent accesses are hot, and a batch
+whose modeled VMEM working set exceeds the 2 MB SPM budget auto-halves its
+row-tile height before launching (``EngineStats.last_block_rows`` records the
+choice).  A lone request keeps its single-op kernel — solo queries never pay
+the fused formulation.  :meth:`materialize_many` is the projection-only thin
+wrapper, and ``aggregate_async`` — the non-blocking sibling of ``aggregate``
+— is a one-op batch through the same path.
 """
 
 from __future__ import annotations
@@ -59,6 +76,7 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops as K
 from repro.kernels import rme_scan_multi as KR
@@ -73,10 +91,31 @@ from .table import RelationalTable
 # the fused-pass tile guard never shrinks below this (grid overhead dominates)
 MIN_FUSED_BLOCK_ROWS = 32
 
+# tail chunks are coalesced (device-side, no host transfer) beyond this count
+# so per-chunk pass overhead stays bounded under sustained appends
+MAX_TAIL_CHUNKS = 8
+
 
 @dataclasses.dataclass
 class EngineStats:
-    """Counters surfaced to the benchmarks (the 'PMU' of the software RME)."""
+    """Counters surfaced to the benchmarks (the 'PMU' of the software RME).
+
+    Charging rules (the single source of truth the benchmarks rely on):
+
+    * ``bytes_from_dram`` — bus-beat-exact Eq.(3) bytes a scan pulled from
+      the row store (union geometry for shared passes, charged once per
+      chunk per pass).
+    * ``bytes_to_cpu`` — packed bytes shipped up the hierarchy (per view;
+      scalar syncs charge their 8 bytes at the blocking call).
+    * ``bytes_uploaded`` / ``uploads`` — every host→device row-store
+      transfer (full uploads *and* deltas; one event per sync).
+    * ``bytes_uploaded_delta`` / ``delta_uploads`` — the delta subset:
+      appended tail rows and patched ``__ts_end`` words only.  An append of
+      N rows to a resident T-row table charges O(N) here, never O(T).
+    * ``delta_hits`` — reorg-cache entries served by an incremental
+      tail-chunk projection (also counted in ``cold_misses``: a scan, albeit
+      a small one, did run).
+    """
 
     hot_hits: int = 0
     cold_misses: int = 0
@@ -84,8 +123,11 @@ class EngineStats:
     rows_projected: int = 0
     bytes_from_dram: int = 0  # bus-beat-accurate bytes the engine pulled
     bytes_to_cpu: int = 0  # packed bytes shipped up the hierarchy
-    bytes_uploaded: int = 0  # host→device row-store transfer bytes
-    uploads: int = 0  # host→device row-store transfer count
+    bytes_uploaded: int = 0  # host→device row-store transfer bytes (all)
+    uploads: int = 0  # host→device row-store transfer count (all)
+    bytes_uploaded_delta: int = 0  # of bytes_uploaded: delta-only transfers
+    delta_uploads: int = 0  # of uploads: delta-only transfer events
+    delta_hits: int = 0  # cache entries served by tail-chunk delta scans
     last_block_rows: int = 0  # row-tile height the fused-pass VMEM guard chose
 
     def reset(self) -> None:
@@ -97,6 +139,9 @@ class EngineStats:
         self.bytes_to_cpu = 0
         self.bytes_uploaded = 0
         self.uploads = 0
+        self.bytes_uploaded_delta = 0
+        self.delta_uploads = 0
+        self.delta_hits = 0
         self.last_block_rows = 0
 
 
@@ -104,38 +149,35 @@ class ReorgCache:
     """Epoch-validated cache of reorganized views (the two SPMs of Fig. 5).
 
     An entry is valid iff its stored epoch equals the cache's current epoch —
-    the paper's single-cycle invalidation. Entries also carry the source table
-    version, so any OLTP mutation (append/update/delete) invalidates affected
-    views without touching unrelated tables.
+    the paper's single-cycle invalidation.  Entries also carry a caller-chosen
+    version token; the engine stores each packed projection under the **row
+    coverage** it was built from (``table.row_count`` at build time).  Packed
+    projections never include the hidden MVCC timestamp words, so an entry
+    stays byte-valid for the rows it covers across any number of
+    deletes/updates — only appends extend a table past an entry's coverage,
+    and then the engine *delta-serves* it (tail projection + concatenate, see
+    :meth:`RelationalMemoryEngine.materialize`) instead of discarding it.
     """
 
     def __init__(self, capacity_bytes: int = 2 << 20):  # paper: 2 MB data SPM
         self.capacity_bytes = capacity_bytes
         self.epoch = 0
-        self._entries: dict[tuple, tuple[int, int, jax.Array]] = {}
+        self._entries: dict[tuple, tuple[int, object, jax.Array]] = {}
         self._bytes = 0
 
     def reset(self) -> None:
         """Single-cycle SPM invalidation: bump the epoch; entries expire lazily."""
         self.epoch += 1
 
-    def get(self, key: tuple, version: int) -> jax.Array | None:
-        hit = self._entries.get(key)
-        if hit is None:
-            return None
-        epoch, ver, arr = hit
-        if epoch != self.epoch or ver != version:
-            del self._entries[key]
-            self._bytes -= arr.size * arr.dtype.itemsize
-            return None
-        return arr
+    def peek(self, key: tuple, version) -> jax.Array | None:
+        """Exact-version probe without side effects.
 
-    def peek(self, key: tuple, version: int) -> jax.Array | None:
-        """Hotness probe without side effects: stale entries are left in place.
-
-        The planner uses this — costing a query must not mutate cache state
-        (``get`` deletes stale entries as it misses, which made planning a
-        write operation).
+        The planner costs queries with this; there is deliberately no
+        delete-on-mismatch accessor — under coverage tokens a version
+        mismatch usually means *delta-servable*, not garbage, so destroying
+        mismatched entries would silently turn incremental tail serves back
+        into full cold scans.  Entries are reclaimed by ``put`` (overwrite /
+        stale-epoch sweep / FIFO eviction) instead.
         """
         hit = self._entries.get(key)
         if hit is None:
@@ -145,7 +187,23 @@ class ReorgCache:
             return None
         return arr
 
-    def put(self, key: tuple, version: int, arr: jax.Array) -> None:
+    def lookup(self, key: tuple) -> tuple[object, jax.Array] | None:
+        """Epoch-valid entry *regardless of version*: ``(version, arr)``.
+
+        This is the delta-serving probe: the engine compares the stored row
+        coverage against the table's current watermark to decide between a
+        full hot hit, an incremental tail serve, or a cold rebuild.  Like
+        ``peek``, it never mutates cache state.
+        """
+        hit = self._entries.get(key)
+        if hit is None:
+            return None
+        epoch, ver, arr = hit
+        if epoch != self.epoch:
+            return None
+        return ver, arr
+
+    def put(self, key: tuple, version, arr: jax.Array) -> None:
         nbytes = arr.size * arr.dtype.itemsize
         if nbytes > self.capacity_bytes:
             return  # larger than the SPM: streamed, never cached (paper §6 scaling)
@@ -168,22 +226,47 @@ class ReorgCache:
         return self._bytes
 
 
+@dataclasses.dataclass
+class _StoreEntry:
+    """One table's device residency: base + tail chunks and sync positions."""
+
+    chunks: list[jax.Array]  # consecutive row ranges; concat == rows [0, rows)
+    rows: int  # append watermark this copy has synced to
+    patch_seq: int  # table.mutation_version this copy has replayed to
+
+
 class DeviceRowStore:
-    """Device-resident row-store buffers, keyed by ``(table.uid, version)``.
+    """Delta-chunked device-resident row-store buffers, keyed by ``table.uid``.
 
     The paper's row store sits beside the RME in DRAM; nothing ever copies it
     to scan it.  Our 'DRAM' is host numpy, so the first access to a table must
-    ship its word buffer to the device — but only the first: the buffer stays
-    resident until the table mutates (version bump), at which point the next
-    access uploads the new version and drops the old one.  One buffer is kept
-    per table identity (``uid``, never recycled — unlike ``id()``), a weakref
-    finalizer drops the buffer when its table is garbage collected, and every
-    upload is charged to the engine's PMU (``bytes_uploaded`` / ``uploads``).
+    ship its word buffer to the device — but only the first.  After that the
+    copy is kept in sync *incrementally*:
+
+    * appended rows upload as a new **tail chunk** (O(new rows) bytes),
+    * deleted/updated rows replay the table's patch log, rewriting only the
+      hidden ``__ts_end`` word of each touched row inside the resident
+      chunks (O(touched rows) words),
+    * nothing else ever re-crosses the host→device boundary.
+
+    ``get`` coalesces the chunk list into one array (a device-side concat —
+    no host transfer, so it charges nothing) for single-buffer consumers;
+    ``chunks`` hands the list to the chunk-iterating fused scan.  With
+    ``delta=False`` the store reverts to whole-table re-upload on any change
+    — the pre-delta behavior, kept as the measurable baseline for
+    ``benchmarks/fig_htap_ingest.py``.
+
+    One buffer set is kept per table identity (``uid``, never recycled —
+    unlike ``id()``), a weakref finalizer drops it when its table is garbage
+    collected, and every transfer is charged to the engine's PMU
+    (``bytes_uploaded``/``uploads`` always; ``bytes_uploaded_delta``/
+    ``delta_uploads`` additionally for delta syncs).
     """
 
-    def __init__(self, stats: EngineStats | None = None):
+    def __init__(self, stats: EngineStats | None = None, delta: bool = True):
         self.stats = stats
-        self._buffers: dict[int, tuple[int, jax.Array]] = {}
+        self.delta = delta
+        self._buffers: dict[int, _StoreEntry] = {}
         self._finalized: set[int] = set()  # uids with a registered finalizer
 
     @staticmethod
@@ -193,12 +276,20 @@ class DeviceRowStore:
             store._buffers.pop(uid, None)
             store._finalized.discard(uid)
 
-    def get(self, table: RelationalTable) -> jax.Array:
-        ent = self._buffers.get(table.uid)
-        if ent is not None and ent[0] == table.version:
-            return ent[1]
+    # ----------------------------------------------------------------- sync
+    def _charge(self, nbytes: int, is_delta: bool) -> None:
+        if self.stats is None or nbytes == 0:
+            return
+        self.stats.uploads += 1
+        self.stats.bytes_uploaded += nbytes
+        if is_delta:
+            self.stats.delta_uploads += 1
+            self.stats.bytes_uploaded_delta += nbytes
+
+    def _full_upload(self, table: RelationalTable) -> _StoreEntry:
         host = table.words()
-        arr = jnp.asarray(host)
+        ent = _StoreEntry([jnp.asarray(host)], table.row_count,
+                          table.mutation_version)
         if table.uid not in self._finalized:
             # dead tables must not pin device memory: evict with their owner.
             # The finalizer must hold the store weakly — a strong reference
@@ -207,15 +298,97 @@ class DeviceRowStore:
             # uid: clear()/drop() + re-upload must not accumulate more.
             weakref.finalize(table, self._finalize_entry, weakref.ref(self), table.uid)
             self._finalized.add(table.uid)
-        self._buffers[table.uid] = (table.version, arr)
-        if self.stats is not None:
-            self.stats.uploads += 1
-            self.stats.bytes_uploaded += host.size * host.itemsize
-        return arr
+        self._buffers[table.uid] = ent
+        self._charge(host.size * host.itemsize, is_delta=False)
+        return ent
+
+    def _apply_patches(self, ent: _StoreEntry, table: RelationalTable,
+                       patches: list[np.ndarray]) -> int:
+        """Rewrite patched ``__ts_end`` words inside the resident chunks.
+
+        Only rows below the entry's pre-sync watermark need patching — rows
+        at or above it arrive in the freshly uploaded tail chunk with their
+        current timestamps already in place.  Returns the bytes shipped.
+        """
+        idx = np.concatenate([p[p < ent.rows] for p in patches]) if patches else \
+            np.empty(0, dtype=np.int64)
+        if idx.size == 0:
+            return 0
+        vals = np.asarray(table.ts_end_at(idx))
+        ts_word = table.ts_end_word
+        start = 0
+        for c, chunk in enumerate(ent.chunks):
+            end = start + chunk.shape[0]
+            sel = (idx >= start) & (idx < end)
+            if sel.any():
+                ent.chunks[c] = chunk.at[
+                    jnp.asarray(idx[sel] - start), ts_word
+                ].set(jnp.asarray(vals[sel]))
+            start = end
+        return idx.size * WORD  # one rewritten timestamp word per row
+
+    def _sync(self, table: RelationalTable) -> _StoreEntry:
+        """Bring the table's device copy current, shipping only the delta."""
+        ent = self._buffers.get(table.uid)
+        if ent is not None and not self.delta and (
+            ent.rows != table.row_count
+            or ent.patch_seq != table.mutation_version
+        ):
+            ent = None  # baseline mode: any change → whole-table re-upload
+        if ent is None:
+            return self._full_upload(table)
+        patches = (table.patches_since(ent.patch_seq)
+                   if ent.patch_seq != table.mutation_version else [])
+        if patches is None:  # lagged past the trimmed patch log: full re-sync
+            return self._full_upload(table)
+        moved = self._apply_patches(ent, table, patches)
+        ent.patch_seq = table.mutation_version
+        if table.row_count > ent.rows:
+            tail = table.tail_words(ent.rows)
+            ent.chunks.append(jnp.asarray(tail))
+            ent.rows = table.row_count
+            moved += tail.size * tail.itemsize
+        self._charge(moved, is_delta=True)
+        if len(ent.chunks) > MAX_TAIL_CHUNKS:
+            # device-side compaction: no host transfer, nothing charged
+            ent.chunks = [jnp.concatenate(ent.chunks, axis=0)]
+        return ent
+
+    # ------------------------------------------------------------ accessors
+    def get(self, table: RelationalTable) -> jax.Array:
+        """The table's row store as **one** device array (synced first).
+
+        Multi-chunk entries are coalesced device-side and kept coalesced —
+        single-buffer consumers (solo kernels, host fallbacks, validity
+        masks) see exactly the pre-chunking contract.
+        """
+        ent = self._sync(table)
+        if len(ent.chunks) > 1:
+            ent.chunks = [jnp.concatenate(ent.chunks, axis=0)]
+        return ent.chunks[0]
+
+    def chunks(self, table: RelationalTable) -> tuple[jax.Array, ...]:
+        """The table's resident chunk list (synced first), for per-chunk scans."""
+        return tuple(self._sync(table).chunks)
+
+    def tail(self, table: RelationalTable, start_row: int) -> jax.Array:
+        """Device rows ``[start_row, row_count)`` — the delta-scan operand for
+        incrementally maintained views.  Assembled by slicing the resident
+        chunks (device-side; the sync itself shipped only the delta)."""
+        ent = self._sync(table)
+        parts, start = [], 0
+        for chunk in ent.chunks:
+            end = start + chunk.shape[0]
+            if end > start_row:
+                parts.append(chunk[max(start_row - start, 0) :])
+            start = end
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
 
     def contains(self, table: RelationalTable) -> bool:
+        """True iff the resident copy is fully current (no pending delta)."""
         ent = self._buffers.get(table.uid)
-        return ent is not None and ent[0] == table.version
+        return (ent is not None and ent.rows == table.row_count
+                and ent.patch_seq == table.mutation_version)
 
     def drop(self, table: RelationalTable) -> None:
         self._buffers.pop(table.uid, None)
@@ -225,7 +398,10 @@ class DeviceRowStore:
 
     @property
     def occupancy_bytes(self) -> int:
-        return sum(a.size * a.dtype.itemsize for _, a in self._buffers.values())
+        return sum(
+            c.size * c.dtype.itemsize
+            for ent in self._buffers.values() for c in ent.chunks
+        )
 
 
 class RelationalMemoryEngine:
@@ -234,6 +410,10 @@ class RelationalMemoryEngine:
     ``revision`` selects the datapath (paper §5.2): ``"bsl"``, ``"pck"``,
     ``"mlp"`` (Pallas kernels, validated in interpret mode on CPU), or
     ``"xla"`` (fused gather — the path that lowers for CPU/dry-run targets).
+    ``delta_uploads=False`` disables the whole write-path delta machinery:
+    any table change re-ships the full device buffer on next access, and a
+    grown table turns cached views cold instead of delta-serving them — the
+    measurable pre-delta baseline the HTAP ingest benchmark compares against.
     """
 
     def __init__(
@@ -243,6 +423,7 @@ class RelationalMemoryEngine:
         cache_bytes: int = 2 << 20,
         interpret: bool = True,
         vmem_bytes: int = 2 << 20,  # paper: 2 MB data SPM
+        delta_uploads: bool = True,
     ):
         if revision not in K.REVISIONS:
             raise ValueError(f"unknown revision {revision!r}; want one of {K.REVISIONS}")
@@ -250,9 +431,10 @@ class RelationalMemoryEngine:
         self.block_rows = block_rows
         self.interpret = interpret
         self.vmem_bytes = vmem_bytes
+        self.delta = delta_uploads
         self.cache = ReorgCache(cache_bytes)
         self.stats = EngineStats()
-        self.rowstore = DeviceRowStore(self.stats)
+        self.rowstore = DeviceRowStore(self.stats, delta=delta_uploads)
 
     # ---------------------------------------------------------------- config
     def register(
@@ -266,7 +448,11 @@ class RelationalMemoryEngine:
 
         Nothing is materialized here (ephemeral variables "are never
         instantiated in the main memory"); the returned view triggers the
-        engine on first access.
+        engine on first access.  ``snapshot_ts`` pins the view's MVCC
+        visibility: decoded accesses (``view.column``) and fused ops built
+        from the view see exactly the rows live at that time, no matter what
+        writes land afterwards — the packed block itself always covers every
+        physical row (visibility is a mask, not a rewrite).
         """
         geom = TableGeometry.from_schema(
             table.schema, columns, row_count=table.row_count, frame=frame
@@ -293,21 +479,112 @@ class RelationalMemoryEngine:
     def view_key(self, table: RelationalTable, geom: TableGeometry) -> tuple:
         """The reorg-cache key for a view — the single definition every
         consumer (materialization, planner costing, serving-layer hot/cold
-        classification) must agree on."""
-        return (table.uid, geom.cache_key(), self.revision)
+        classification) must agree on.  Keyed by the column *layout* only
+        (row count excluded): a view over a grown table shares its slot with
+        the pre-growth entry, which is what makes delta serving possible —
+        the entry's stored version records the rows it covers."""
+        return (table.uid, geom.layout_key(), self.revision)
+
+    def peek_project(self, table: RelationalTable,
+                     geom: TableGeometry) -> jax.Array | None:
+        """Side-effect-free full-hot probe for planner/server costing: the
+        cached packed block iff it covers every current row."""
+        return self.cache.peek(self.view_key(table, geom), table.row_count)
+
+    def projection_is_cached(self, table: RelationalTable,
+                             geom: TableGeometry) -> bool:
+        """Side-effect-free: will :meth:`_project_from_cache` serve this view
+        without a full scan — either a full hot hit or (in delta mode) a
+        tail-only delta serve?  The serving layer uses this to keep its
+        shared-scan/bytes-saved accounting aligned with what ``execute_many``
+        will actually do."""
+        ent = self.cache.lookup(self.view_key(table, geom))
+        if ent is None:
+            return False
+        rows_cached = ent[0]
+        if rows_cached == table.row_count:
+            return True
+        return (self.delta and isinstance(rows_cached, int)
+                and 0 < rows_cached < table.row_count)
 
     def device_words(self, table: RelationalTable) -> jax.Array:
-        """The table's device-resident word buffer (uploaded at most once per version)."""
+        """The table's device-resident word buffer as one array.
+
+        The underlying sync ships only the write delta (appended rows,
+        patched timestamp words) since the last access; multi-chunk entries
+        are coalesced device-side.
+        """
         return self.rowstore.get(table)
 
-    def materialize(self, view: EphemeralView) -> jax.Array:
-        """Assemble the packed column group for ``view`` (cold) or serve it hot."""
-        table, geom = view.table, view.geometry
-        key = self.view_key(table, geom)
-        hot = self.cache.get(key, table.version)
-        if hot is not None:
+    def device_chunks(self, table: RelationalTable) -> tuple[jax.Array, ...]:
+        """The table's resident base+tail chunk list (synced, O(delta))."""
+        return self.rowstore.chunks(table)
+
+    def valid_mask(self, table: RelationalTable, ts: int) -> jax.Array:
+        """MVCC row visibility at snapshot ``ts``, from the device-resident
+        hidden timestamp words: ``ts_begin <= ts < ts_end``.  The single
+        host-side spelling of the visibility rule — ephemeral views and the
+        planner's fallback routes both use it; the fused kernels evaluate
+        the same test in-scan.  The underlying sync ships only the write
+        delta, so this is O(patched rows) fresh after any number of writes.
+        """
+        words = self.device_words(table)
+        begin = words[:, table.ts_begin_word]
+        end = words[:, table.ts_end_word]
+        return (begin <= ts) & (ts < end)
+
+    def _project_from_cache(
+        self, table: RelationalTable, geom: TableGeometry
+    ) -> jax.Array | None:
+        """Serve a projection from the reorg cache: full hot hit, or an
+        incremental tail scan over the appended rows merged with the cached
+        block (delta serve).  Returns ``None`` when a cold rebuild is needed.
+
+        Correctness note: packed projections contain only user-column words,
+        so deletes/updates (which rewrite hidden ``__ts_end`` words) never
+        stale an entry — visibility is applied downstream by whoever masks
+        (``EphemeralView.column``, fused snapshot tests).  Coverage is the
+        only axis: an entry built at watermark ``w`` is byte-exact for rows
+        ``[0, w)`` forever.
+        """
+        ent = self.cache.lookup(self.view_key(table, geom))
+        if ent is None:
+            return None
+        rows_cached, cached = ent
+        if rows_cached == table.row_count:
             self.stats.hot_hits += 1
-            return hot
+            return cached
+        if not self.delta:  # pre-delta compatibility mode: growth = cold
+            return None
+        if not isinstance(rows_cached, int) or not 0 < rows_cached < table.row_count:
+            return None
+        # incremental view maintenance: project only the appended tail
+        n_tail = table.row_count - rows_cached
+        tail = self.rowstore.tail(table, rows_cached)
+        tail_geom = dataclasses.replace(geom, row_count=n_tail)
+        packed_tail = K.project_any(
+            tail, tail_geom, revision=self.revision,
+            block_rows=self.block_rows, interpret=self.interpret,
+        )
+        packed = jnp.concatenate([cached, packed_tail], axis=0)
+        self.stats.delta_hits += 1
+        self.stats.cold_misses += 1  # a (tail-sized) scan did run
+        moved = bytes_moved(tail_geom)
+        self.stats.rows_projected += n_tail
+        self.stats.bytes_from_dram += moved["rme"]
+        self.stats.bytes_to_cpu += moved["columnar"]
+        self.cache.put(self.view_key(table, geom), table.row_count, packed)
+        return packed
+
+    def materialize(self, view: EphemeralView) -> jax.Array:
+        """Assemble the packed column group for ``view``: hot out of the
+        reorganization cache, incrementally from a cached block plus a
+        tail-chunk delta scan when the table only grew, or cold through the
+        projection kernel."""
+        table, geom = view.table, view.geometry
+        served = self._project_from_cache(table, geom)
+        if served is not None:
+            return served
         self.stats.cold_misses += 1
         words = self.device_words(table)
         packed = K.project_any(
@@ -318,7 +595,7 @@ class RelationalMemoryEngine:
         self.stats.rows_projected += geom.row_count
         self.stats.bytes_from_dram += moved["rme"]
         self.stats.bytes_to_cpu += moved["columnar"]
-        self.cache.put(key, table.version, packed)
+        self.cache.put(self.view_key(table, geom), table.row_count, packed)
         return packed
 
     def execute_many(self, ops: Sequence[ScanOp]) -> list:
@@ -327,30 +604,31 @@ class RelationalMemoryEngine:
         Any mix of :class:`~repro.core.requests.ProjectOp` /
         ``FilterOp`` / ``AggregateOp`` / ``GroupByOp`` is coalesced per table:
         each table's cold work is lowered to kernel scan requests
-        (de-duplicated — equal requests share one output slot) and served by a
-        **single** pass of the heterogeneous one-pass kernel
-        (``rme_scan_multi``), its bus-beat bytes charged once via the union
-        geometry over every request's enabled words.  A lone request keeps
-        today's single-op kernel (``project``/``filter_project``/
-        ``aggregate``/``groupby_sum`` — the bsl/pck revisions stay exercised
-        and nothing retraces).  Hot projections are served from the
-        reorganization cache, and every cold projection lands there, warming
-        the SPM for all batch members.  When the fused pass's modeled VMEM
-        working set exceeds the engine's SPM budget, the row-tile height is
-        halved (down to ``MIN_FUSED_BLOCK_ROWS``) before launching; the chosen
-        tile is exposed as ``EngineStats.last_block_rows``.  Results are
-        returned in input order, each matching its op's single-op contract.
+        (de-duplicated — equal requests share one output slot) and served by
+        the heterogeneous one-pass kernel (``rme_scan_multi``) streamed over
+        the table's **resident chunk list** — blocked outputs concatenate
+        across chunks, aggregate/group-by partials add — with bus-beat bytes
+        charged once per chunk via the union geometry over every request's
+        enabled words.  A lone request keeps today's single-op kernel
+        (``project``/``filter_project``/``aggregate``/``groupby_sum`` — the
+        bsl/pck revisions stay exercised and nothing retraces).  Hot
+        projections are served from the reorganization cache (including
+        delta serves over appended tails), and every cold projection lands
+        there, warming the SPM for all batch members.  When the fused pass's
+        modeled VMEM working set exceeds the engine's SPM budget, the
+        row-tile height is halved (down to ``MIN_FUSED_BLOCK_ROWS``) before
+        launching; the chosen tile is exposed as
+        ``EngineStats.last_block_rows``.  Results are returned in input
+        order, each matching its op's single-op contract.
         """
         results: list = [None] * len(ops)
         pending: dict[int, list[tuple[int, KR.ScanRequest]]] = {}
         tables: dict[int, RelationalTable] = {}
         for i, op in enumerate(ops):
             if isinstance(op, ProjectOp):
-                key = self.view_key(op.table, op.view.geometry)
-                hot = self.cache.get(key, op.table.version)
-                if hot is not None:
-                    self.stats.hot_hits += 1
-                    results[i] = hot
+                served = self._project_from_cache(op.table, op.view.geometry)
+                if served is not None:
+                    results[i] = served
                     continue
             pending.setdefault(op.table.uid, []).append((i, op.lower()))
             tables[op.table.uid] = op.table
@@ -358,27 +636,33 @@ class RelationalMemoryEngine:
             table = tables[tid]
             uniq = dict.fromkeys(req for _, req in entries)
             reqs = tuple(uniq)
-            words = self.device_words(table)
             self.stats.cold_misses += len(entries)
             if len(reqs) == 1:
                 # nothing to fuse: stay on the single-op datapath (keeps the
                 # bsl/pck revision kernels) and don't count a shared scan
+                words = self.device_words(table)
                 outs = [self._execute_solo(words, table, reqs[0])]
             else:
-                block_rows = self._fused_block_rows(reqs, words.shape[1])
-                outs = K.scan_multi(
-                    words, reqs, revision=self.revision,
+                chunks = self.device_chunks(table)
+                block_rows = self._fused_block_rows(reqs, table.row_words)
+                outs = K.scan_multi_chunked(
+                    chunks, reqs, revision=self.revision,
                     block_rows=block_rows, interpret=self.interpret,
                 )
                 self.stats.shared_scans += 1
                 self.stats.rows_projected += table.row_count
-                self.stats.bytes_from_dram += self.scan_bytes(table, reqs)
+                for chunk in chunks:
+                    self.stats.bytes_from_dram += self.scan_bytes(
+                        table, reqs, row_count=chunk.shape[0]
+                    )
             by_req = dict(zip(reqs, outs))
             for req, out in by_req.items():
                 if isinstance(req, KR.ProjectRequest):
                     geom = req.geom
                     self.stats.bytes_to_cpu += geom.row_count * geom.out_bytes_per_row
-                    self.cache.put(self.view_key(table, geom), table.version, out)
+                    self.cache.put(
+                        self.view_key(table, geom), table.row_count, out
+                    )
             for i, req in entries:
                 results[i] = by_req[req]
         return results
@@ -433,18 +717,22 @@ class RelationalMemoryEngine:
         )
 
     def scan_bytes(self, table: RelationalTable,
-                   reqs: Sequence["KR.ScanRequest"]) -> int:
+                   reqs: Sequence["KR.ScanRequest"],
+                   row_count: int | None = None) -> int:
         """Bus-beat bytes of one pass serving ``reqs``: Eq. (3) bursts over
-        the union of every request's enabled words.  The row stride is the
-        schema's — unless a fused MVCC snapshot enables the hidden timestamp
-        words, in which case the storage stride (what the stream walks) is
-        the honest model."""
+        the union of every request's enabled words.  ``row_count`` prices a
+        pass over one chunk (default: the whole table).  The row stride is
+        the schema's — unless a fused MVCC snapshot enables the hidden
+        timestamp words, in which case the storage stride (what the stream
+        walks) is the honest model."""
         max_end = max(o + w for r in reqs for o, w in K.request_intervals(r))
         row_bytes = table.schema.row_bytes
         if max_end > row_bytes:
             row_bytes = table.row_words * WORD
-        union = K.union_geometry(reqs, row_bytes=row_bytes,
-                                 row_count=table.row_count)
+        union = K.union_geometry(
+            reqs, row_bytes=row_bytes,
+            row_count=table.row_count if row_count is None else row_count,
+        )
         return bytes_moved(union)["rme"]
 
     def _fused_block_rows(self, reqs: Sequence["KR.ScanRequest"],
@@ -474,7 +762,10 @@ class RelationalMemoryEngine:
         to pull the scalars down, so batched query loops can enqueue many
         aggregates before blocking once.  The row store is read from the
         device-resident buffer: repeated aggregates over an unchanged table
-        perform zero host→device transfers after the first call.  No
+        perform zero host→device transfers after the first call, and a
+        mutated table ships only its write delta.  ``snapshot_ts`` fuses the
+        MVCC visibility test in-scan: rows outside the snapshot contribute
+        nothing, so concurrent writers never perturb a pinned reader.  No
         ``bytes_to_cpu`` are charged here — nothing crosses to the host until
         a caller syncs (the blocking :meth:`aggregate` charges its 8 bytes).
         This is sugar for a one-op :meth:`execute_many` batch, so it shares

@@ -5,9 +5,13 @@ accessing it sets the RME in motion.  In JAX the natural translation is a
 *lazy view object*: registration captures the geometry (the configuration-port
 write), and the first data access materializes the packed column group through
 the engine — hot out of the reorganization cache, cold through the projection
-kernel.  The view is never a copy the user must invalidate: any OLTP mutation
-of the base table bumps ``table.version`` and silently turns future accesses
-cold, exactly like the paper's epoch-invalidated SPM.
+kernel.  The view is never a copy the user must invalidate: OLTP mutations of
+the base table are tracked at delta granularity (``table.append_watermark`` /
+``table.mutation_version``), so an append silently turns the next access into
+an incremental tail scan merged with the cached block, and deletes/updates —
+which only rewrite hidden timestamp words the packed block never contains —
+don't perturb it at all; visibility is applied by ``valid_mask``/``column``
+against the (delta-synced) device timestamps.
 """
 
 from __future__ import annotations
@@ -65,10 +69,7 @@ class EphemeralView:
     def valid_mask(self) -> jax.Array:
         """MVCC validity of each physical row at the view's snapshot time."""
         ts = self.table.now() if self.snapshot_ts is None else self.snapshot_ts
-        words = self.engine.device_words(self.table)
-        begin = words[:, self.table.schema.row_words]
-        end = words[:, self.table.schema.row_words + 1]
-        return (begin <= ts) & (ts < end)
+        return self.engine.valid_mask(self.table, ts)
 
     def column(self, name: str) -> jax.Array:
         """One projected column, decoded to its schema dtype (live rows only)."""

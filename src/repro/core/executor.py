@@ -19,6 +19,16 @@ contract (packed blocks, ``(packed, mask)`` pairs, ``[sum, count]`` pairs,
 ``(sums, counts)`` vectors), and every projection lands in the reorganization
 cache, so post-batch accesses through the normal ``view.packed()`` path are
 hot.
+
+Write-path semantics: a batch always observes the table state at
+``submit()`` time — the engine syncs each table's device copy first,
+shipping only the write delta (appended rows as tail chunks, patched
+timestamp words from the patch log), and a multi-chunk table is streamed one
+fused pass per chunk with partials combined.  Ops that carry a
+``snapshot_ts`` (filters, aggregates, group-bys) evaluate the MVCC
+visibility test in-scan, so a pinned snapshot returns byte-identical results
+no matter how many writes landed since; ops without one see every physical
+row (all versions) — pass a snapshot when the table takes updates/deletes.
 """
 
 from __future__ import annotations

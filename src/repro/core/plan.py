@@ -194,7 +194,18 @@ class PlanBuilder:
 
 
 def plan(table: RelationalTable) -> PlanBuilder:
-    """Start a plan over ``table``'s row store."""
+    """Start a plan over ``table``'s row store.
+
+    Plans are pure descriptions — nothing reads the table until
+    :func:`repro.core.planner.compile_plan` lowers the tree and the resulting
+    :class:`~repro.core.planner.PhysicalQuery` runs.  Execution therefore
+    observes the table state (and, on the rme path, the optional
+    ``snapshot_ts`` passed to ``compile_plan``) at *run* time: through the
+    :class:`~repro.serve.query_server.QueryServer` that means the post-write
+    snapshot of the tick that serves the plan, while writes that land after
+    the tick cost the engine only their delta (tail-chunk uploads, timestamp
+    patches) — never a re-materialization of the plan's inputs.
+    """
     return PlanBuilder(Scan(table))
 
 

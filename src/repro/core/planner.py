@@ -56,7 +56,7 @@ import numpy as np
 from .descriptor import bytes_moved
 from .engine import RelationalMemoryEngine
 from .ephemeral import EphemeralView
-from .plan import PlanBuilder, PlanNode, Predicate, QueryShape, decompose
+from .plan import PlanBuilder, PlanError, PlanNode, Predicate, QueryShape, decompose
 from .requests import AggregateOp, FilterOp, GroupByOp, ProjectOp, ScanOp
 from .schema import MAX_ENABLED_COLUMNS, TableGeometry, merge_geometries
 from .table import RelationalTable
@@ -93,10 +93,12 @@ def plan_query(
         "rme": moved["rme"],
         "hot": moved["columnar"],
     }
-    # hot is only available if the reorganization cache holds a live entry;
-    # peek() probes without get()'s delete-on-stale side effect — planning a
-    # query must not mutate cache state
-    hot_entry = engine.cache.peek(engine.view_key(table, geom), table.version)
+    # hot is only available if the reorganization cache holds an entry that
+    # fully covers the table's current rows; peek_project probes without
+    # get()'s delete-on-stale side effect — planning a query must not mutate
+    # cache state.  (A partially-covering entry will still be delta-served
+    # at execution; costing it as a full rme scan is a conservative bound.)
+    hot_entry = engine.peek_project(table, geom)
     if hot_entry is None:
         costs.pop("hot")
     if aggregate_only and len(columns) <= 2:
@@ -420,8 +422,22 @@ def _check_fused_dtypes(table: RelationalTable, *cols: str | None) -> None:
             )
 
 
+def _check_snapshot_path(path: str, snapshot_ts: int | None) -> None:
+    """Snapshot-pinned reads are an rme-path capability: the fused kernels
+    evaluate the MVCC visibility test in-scan from the hidden timestamp
+    words.  The host baselines have no timestamp channel (a colstore says
+    nothing about row versions), so asking for one is a plan error, not a
+    silent wrong answer."""
+    if snapshot_ts is not None and path != "rme":
+        raise PlanError(
+            f"snapshot_ts requires the rme path, not {path!r} "
+            "(host baselines carry no MVCC timestamps)"
+        )
+
+
 def _compile_aggregate(
-    engine: RelationalMemoryEngine, shape: QueryShape, path: str, colstore
+    engine: RelationalMemoryEngine, shape: QueryShape, path: str, colstore,
+    snapshot_ts: int | None = None,
 ) -> PhysicalQuery:
     agg = shape.agg
     pred_col, pred_op, pred_k = _pred_args(shape.pred)
@@ -450,13 +466,17 @@ def _compile_aggregate(
         )
 
     cost = plan_query(engine, shape.table, list(shape.columns), aggregate_only=True)
-    if cost.path == "fused":
+    if cost.path == "fused" or snapshot_ts is not None:
         # the aggregate is a scan op: compiled into a tick's batch it rides
         # the shared heterogeneous pass; compiled alone, execute_many routes
-        # it to the single-op rme_aggregate kernel
+        # it to the single-op rme_aggregate kernel.  A snapshot-pinned
+        # aggregate *must* take this route — only the fused kernel evaluates
+        # the MVCC visibility test, which the materialized-reduction routes
+        # (their packed views carry no timestamp words) cannot.
         _check_fused_dtypes(shape.table, agg.col, pred_col)
         op = AggregateOp(shape.table, agg.col, pred_col=pred_col,
-                         pred_op=pred_op, pred_k=pred_k)
+                         pred_op=pred_op, pred_k=pred_k,
+                         snapshot_ts=snapshot_ts)
 
         def finalize(out):
             engine.stats.bytes_to_cpu += 8  # the scalar pair crosses on sync
@@ -490,7 +510,8 @@ def _compile_aggregate(
 
 
 def _compile_groupby(
-    engine: RelationalMemoryEngine, shape: QueryShape, path: str, colstore
+    engine: RelationalMemoryEngine, shape: QueryShape, path: str, colstore,
+    snapshot_ts: int | None = None,
 ) -> PhysicalQuery:
     g = shape.group
     pred_col, pred_op, pred_k = _pred_args(shape.pred)
@@ -523,11 +544,13 @@ def _compile_groupby(
         )
 
     # a scan op like the aggregate: joins an open same-table batch's shared
-    # pass, or runs on the single-op groupby_sum kernel when compiled alone
+    # pass, or runs on the single-op groupby_sum kernel when compiled alone;
+    # a snapshot pins MVCC visibility in-scan
     _check_fused_dtypes(shape.table, g.group, g.agg, pred_col)
     op = GroupByOp(
         shape.table, g.group, g.agg, g.num_groups,
         pred_col=pred_col, pred_op=pred_op, pred_k=pred_k,
+        snapshot_ts=snapshot_ts,
     )
 
     return PhysicalQuery(
@@ -554,7 +577,8 @@ def _resident_full_rows(engine: RelationalMemoryEngine, table, cols) -> jax.Arra
 
 
 def _compile_project(
-    engine: RelationalMemoryEngine, shape: QueryShape, path: str, colstore
+    engine: RelationalMemoryEngine, shape: QueryShape, path: str, colstore,
+    snapshot_ts: int | None = None,
 ) -> PhysicalQuery:
     table, cols = shape.table, shape.columns
     pred_col, pred_op, pred_k = _pred_args(shape.pred)
@@ -574,6 +598,8 @@ def _compile_project(
                         table.schema.column(pred_col).dtype,
                     )
                     mask = _pred_mask(p, pred_op, pred_k)
+                    if snapshot_ts is not None:
+                        mask = mask & engine.valid_mask(table, snapshot_ts)
                     packed = _resident_full_rows(engine, table, cols)
                     return jnp.where(mask[:, None], packed, 0), mask
 
@@ -585,10 +611,11 @@ def _compile_project(
             # a scan op with the rme_filter contract: (packed, mask) — joins
             # an open same-table batch's shared pass, or runs on the
             # single-op filter_project kernel when compiled alone (the
-            # projected group may be any dtype; only the predicate decodes)
+            # projected group may be any dtype; only the predicate decodes);
+            # a snapshot fuses the MVCC visibility test into the same mask
             _check_fused_dtypes(table, pred_col)
-            view = engine.register(table, cols)
-            op = FilterOp(view, pred_col, pred_op, pred_k)
+            view = engine.register(table, cols, snapshot_ts=snapshot_ts)
+            op = FilterOp(view, pred_col, pred_op, pred_k, snapshot_ts)
 
             return PhysicalQuery(
                 engine, shape, path, route="fused-filter", cost=None, ops=(op,),
@@ -608,6 +635,38 @@ def _compile_project(
         )
 
     if path == "rme":
+        if snapshot_ts is not None:
+            # a snapshot-pinned projection needs the validity bitmap the
+            # plain packed block cannot carry: route through the filter
+            # kernel with a pass-everything predicate — the result is the
+            # rme_filter contract, (packed with invisible rows zeroed, mask).
+            # The inert predicate still names a column whose words the kernel
+            # can decode, so it must be 4-byte numeric; a group without one
+            # (or beyond the Q cap) takes the resident-row fallback below.
+            pred_anchor = next(
+                (n for n in cols
+                 if table.schema.column(n).dtype in ("int32", "float32")),
+                None,
+            )
+            if len(cols) <= MAX_ENABLED_COLUMNS and pred_anchor is not None:
+                view = engine.register(table, cols, snapshot_ts=snapshot_ts)
+                op = FilterOp(view, pred_anchor, "none", 0, snapshot_ts)
+                return PhysicalQuery(
+                    engine, shape, path, route="snapshot-project", cost=None,
+                    ops=(op,),
+                    _launch=lambda results: results[0], _finalize=lambda t: t,
+                )
+
+            def launch(_):
+                mask = engine.valid_mask(table, snapshot_ts)
+                packed = _resident_full_rows(engine, table, cols)
+                return jnp.where(mask[:, None], packed, 0), mask
+
+            return PhysicalQuery(
+                engine, shape, path, route="row-fallback", cost=None, ops=(),
+                _launch=launch, _finalize=lambda t: t,
+            )
+
         cost = plan_query(engine, table, list(cols))
         if cost.path in ("rme", "hot"):
             view = engine.register(table, cols)
@@ -730,6 +789,7 @@ def compile_plan(
     path: str = "rme",
     colstore: Mapping[str, np.ndarray] | None = None,
     right_colstore: Mapping[str, np.ndarray] | None = None,
+    snapshot_ts: int | None = None,
 ) -> PhysicalQuery:
     """Lower a logical plan to a :class:`PhysicalQuery` on ``path``.
 
@@ -739,14 +799,26 @@ def compile_plan(
     or ``"col"`` (direct columnar baseline over a caller-supplied
     ``colstore``).  Joins read the probe side from ``colstore`` and the build
     side from ``right_colstore``.
+
+    ``snapshot_ts`` pins the query's MVCC visibility (rme path only): only
+    rows with ``ts_begin <= snapshot_ts < ts_end`` contribute.  Aggregates
+    and group-bys fuse the test in-scan; project-shaped queries return the
+    ``rme_filter`` contract — ``(packed block with invisible rows zeroed,
+    validity mask)`` — since a bare packed block has no visibility channel.
+    This is what the :class:`~repro.serve.query_server.QueryServer` uses to
+    serve every read of a tick from the tick's post-write snapshot.  Joins
+    do not support snapshots (their build/probe reads are unversioned).
     """
     if path not in ("rme", "row", "col"):
         raise ValueError(f"unknown path {path!r}; want rme, row or col")
+    _check_snapshot_path(path, snapshot_ts)
     shape = decompose(node)
     if shape.kind == "aggregate":
-        return _compile_aggregate(engine, shape, path, colstore)
+        return _compile_aggregate(engine, shape, path, colstore, snapshot_ts)
     if shape.kind == "groupby":
-        return _compile_groupby(engine, shape, path, colstore)
+        return _compile_groupby(engine, shape, path, colstore, snapshot_ts)
     if shape.kind == "join":
+        if snapshot_ts is not None:
+            raise PlanError("snapshot_ts is not supported for join plans")
         return _compile_join(engine, shape, path, colstore, right_colstore)
-    return _compile_project(engine, shape, path, colstore)
+    return _compile_project(engine, shape, path, colstore, snapshot_ts)

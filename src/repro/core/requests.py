@@ -13,6 +13,15 @@ Ops use identity equality (two clients asking the same aggregate are two
 ops); de-duplication happens at the kernel-request level, where equal lowered
 requests — same enabled words, same predicate, same snapshot — share one
 output slot in the fused pass.
+
+Chunk and snapshot semantics: a lowered request is *chunk-agnostic* — it
+names word offsets within a row, never row positions — so ``execute_many``
+can stream the same request tuple over every resident chunk of a
+delta-chunked table and combine the outputs
+(:func:`repro.kernels.rme_scan_multi.scan_multi_chunked`).  ``snapshot_ts``
+on the predicated ops fuses the MVCC visibility test against the hidden
+timestamp words, which the write path keeps current at O(patched rows)
+upload cost; an op without a snapshot sees every physical row version.
 """
 
 from __future__ import annotations

@@ -222,6 +222,19 @@ class TableGeometry:
             self.frame,
         )
 
+    def layout_key(self) -> tuple:
+        """The geometry's identity *minus the row count* — what delta-aware
+        caches key on.  Two views of the same column group over the same row
+        layout share one cache slot even as the table grows; the rows a
+        cached block actually covers travel in the entry's version token
+        (see :class:`repro.core.engine.ReorgCache`)."""
+        return (
+            self.row_bytes,
+            self.col_widths,
+            self.col_rel_offsets,
+            self.frame,
+        )
+
     @staticmethod
     def from_schema(
         schema: TableSchema, names: Sequence[str], row_count: int, frame: int = 0

@@ -10,6 +10,29 @@ MVCC (paper §4): every row carries two hidden timestamp fields.  ``ts_begin`` i
 set at insertion, ``ts_end`` marks deletion/replacement (``TS_INF`` while live).
 A snapshot at time ``t`` sees rows with ``ts_begin <= t < ts_end`` — snapshot
 isolation, exactly the scheme the paper sketches.
+
+Write-path change tracking
+--------------------------
+The table exposes its mutation history in two orthogonal pieces instead of one
+monolithic version counter, because the two kinds of OLTP write touch storage
+in structurally different ways:
+
+* **Appends** only ever add rows at the tail.  ``append_watermark`` (an alias
+  of ``row_count``) is the high-water mark: physical rows ``[0, w)`` are
+  immutable *in their user-column words* once written — all later writes land
+  at ``>= w`` or in the hidden ``__ts_end`` word.
+* **Destructive mutations** (``delete``, and the delete half of ``update``)
+  rewrite exactly one hidden word per touched row (``__ts_end``).
+  ``mutation_version`` counts these events, and the **patch log** records the
+  physical rows each event touched, so a consumer holding an older device copy
+  can replay just the patched timestamp words instead of re-reading the table
+  (``patches_since``).
+
+``version`` is the derived pair ``(row_count, mutation_version)``: equal
+versions imply byte-identical storage, so it remains a valid cache-invalidation
+token for consumers that don't care about deltas (e.g. the q5 build-index
+cache), while delta-aware consumers (:class:`~repro.core.engine.DeviceRowStore`,
+the reorganization cache) compare the components to ship O(delta) bytes.
 """
 
 from __future__ import annotations
@@ -29,6 +52,10 @@ _TABLE_UIDS = itertools.count()
 TS_INF = np.iinfo(np.int32).max
 
 _MVCC_COLS = (Column("__ts_begin", "int32"), Column("__ts_end", "int32"))
+
+# the patch log keeps at most this many delete events; consumers lagging
+# further behind fall back to a full re-sync (DeviceRowStore re-upload)
+MAX_PATCH_EVENTS = 256
 
 
 def _storage_schema(schema: TableSchema) -> TableSchema:
@@ -61,9 +88,12 @@ class RelationalTable:
     """Append-friendly row store over int32 words (the 'DRAM' of the system).
 
     Storage is ``(capacity, row_words)`` int32; the user-visible schema is
-    extended with the two MVCC word columns.  ``version`` increments on every
-    mutation — the engine uses it (plus its own epoch) to invalidate cached
-    reorganized views, mirroring the RME's single-cycle SPM invalidation.
+    extended with the two MVCC word columns.  Mutations are tracked at delta
+    granularity: appends advance ``append_watermark`` (= ``row_count``),
+    destructive mutations advance ``mutation_version`` and log the patched
+    rows, and the derived ``version`` pair invalidates anything cached against
+    an older state — mirroring the RME's single-cycle SPM invalidation without
+    forcing full re-materialization on O(1) writes.
     """
 
     def __init__(self, schema: TableSchema, capacity: int = 1024):
@@ -73,9 +103,12 @@ class RelationalTable:
             (max(capacity, 16), self.storage_schema.row_words), dtype=np.int32
         )
         self.row_count = 0
-        self.version = 0
         self.uid = next(_TABLE_UIDS)  # never-recycled cache identity
         self._clock = 0
+        # destructive-mutation tracking: one patch-log entry (the touched
+        # physical rows) per delete event; the base index supports trimming
+        self._patch_log: list[np.ndarray] = []
+        self._patch_base = 0
 
     # ------------------------------------------------------------------ time
     def now(self) -> int:
@@ -84,6 +117,57 @@ class RelationalTable:
     def tick(self) -> int:
         self._clock += 1
         return self._clock
+
+    # ------------------------------------------------------------- versioning
+    @property
+    def append_watermark(self) -> int:
+        """Rows ``[0, append_watermark)`` exist; their user-column words are
+        immutable (only the hidden ``__ts_end`` word may change later)."""
+        return self.row_count
+
+    @property
+    def mutation_version(self) -> int:
+        """Count of destructive-mutation events (``delete`` / ``update``)."""
+        return self._patch_base + len(self._patch_log)
+
+    @property
+    def version(self) -> tuple[int, int]:
+        """``(append_watermark, mutation_version)`` — equal pairs imply
+        byte-identical storage.  Kept as the coarse invalidation token for
+        consumers without a delta path."""
+        return (self.row_count, self.mutation_version)
+
+    @property
+    def ts_begin_word(self) -> int:
+        return self.schema.row_words
+
+    @property
+    def ts_end_word(self) -> int:
+        return self.schema.row_words + 1
+
+    def patches_since(self, seq: int) -> list[np.ndarray] | None:
+        """Patched-row arrays for mutation events ``(seq, mutation_version]``.
+
+        Returns ``None`` when ``seq`` predates the trimmed log — the caller's
+        copy is too old to patch forward and must fully re-sync.  Each entry
+        lists physical rows whose ``__ts_end`` word was rewritten by one
+        event; replaying them in order (values from :meth:`ts_end_at`)
+        reproduces the current timestamp state.
+        """
+        if seq < self._patch_base:
+            return None
+        return self._patch_log[seq - self._patch_base :]
+
+    def ts_end_at(self, rows: np.ndarray) -> np.ndarray:
+        """Current ``__ts_end`` words of the given physical rows."""
+        return self._words[np.asarray(rows), self.ts_end_word]
+
+    def _log_patch(self, rows: np.ndarray) -> None:
+        self._patch_log.append(np.asarray(rows, dtype=np.int64))
+        if len(self._patch_log) > MAX_PATCH_EVENTS:
+            drop = len(self._patch_log) - MAX_PATCH_EVENTS
+            del self._patch_log[:drop]
+            self._patch_base += drop
 
     # --------------------------------------------------------------- storage
     @property
@@ -98,6 +182,11 @@ class RelationalTable:
         """The live row-major word buffer (view; do not mutate)."""
         return self._words[: self.row_count]
 
+    def tail_words(self, start_row: int) -> np.ndarray:
+        """Rows ``[start_row, row_count)`` — the append delta a consumer that
+        synced at watermark ``start_row`` still has to ship."""
+        return self._words[start_row : self.row_count]
+
     def nbytes(self) -> int:
         return self.row_count * self.row_bytes
 
@@ -110,51 +199,87 @@ class RelationalTable:
         grown[: self.row_count] = self._words[: self.row_count]
         self._words = grown
 
+    def _append_rows(self, n: int, ts: int) -> int:
+        """Reserve ``n`` tail rows stamped ``[ts, TS_INF)``; returns the start."""
+        self._grow(self.row_count + n)
+        at = self.row_count
+        self._words[at : at + n, self.ts_begin_word] = ts
+        self._words[at : at + n, self.ts_end_word] = TS_INF
+        return at
+
     # ------------------------------------------------------------------ OLTP
     def append(self, columns: Mapping[str, Sequence | np.ndarray]) -> np.ndarray:
-        """Append new rows (insert); returns the new physical row indices."""
+        """Append new rows (insert); returns the new physical row indices.
+
+        Appends never touch existing rows: the delta a device-resident copy
+        must ship is exactly the new rows' words (see ``append_watermark``).
+        """
         missing = set(self.schema.names) - set(columns)
         if missing:
             raise ValueError(f"missing columns {sorted(missing)}")
         n = len(next(iter(columns.values())))
         ts = self.tick()
-        self._grow(self.row_count + n)
-        at = self.row_count
+        at = self._append_rows(n, ts)
         woff = 0
         for col in self.schema.columns:
             enc = _encode_column(col, np.asarray(columns[col.name]), n)
             self._words[at : at + n, woff : woff + col.words] = enc
             woff += col.words
-        self._words[at : at + n, woff] = ts  # __ts_begin
-        self._words[at : at + n, woff + 1] = TS_INF  # __ts_end
         self.row_count += n
-        self.version += 1
         return np.arange(at, at + n)
 
-    def delete(self, rows: np.ndarray) -> None:
-        """MVCC delete: end the validity of the given physical rows."""
+    def delete(self, rows: np.ndarray) -> int:
+        """MVCC delete: end the validity of the given physical rows.
+
+        Only the hidden ``__ts_end`` word of each still-live row is rewritten;
+        the touched rows are recorded in the patch log so delta-aware
+        consumers upload O(rows) timestamp words, not the whole table.  A
+        delete that touches no live row is a no-op (no mutation event).
+        Returns the number of rows actually deleted — already-dead or
+        duplicated ids don't count.
+        """
         ts = self.tick()
-        end_col = self.schema.row_words + 1
-        live = self._words[rows, end_col] == TS_INF
-        self._words[np.asarray(rows)[live], end_col] = ts
-        self.version += 1
+        rows = np.asarray(rows)
+        live = self._words[rows, self.ts_end_word] == TS_INF
+        touched = np.unique(rows[live])
+        if touched.size == 0:
+            return 0
+        self._words[touched, self.ts_end_word] = ts
+        self._log_patch(touched)
+        return int(touched.size)
 
     def update(self, rows: np.ndarray, values: Mapping[str, np.ndarray]) -> np.ndarray:
-        """MVCC update: end old versions, append replacements (paper §4)."""
+        """MVCC update: end old versions, append replacements (paper §4).
+
+        Columns absent from ``values`` are copied as raw storage words —
+        never round-tripped through decode/encode — so untouched columns are
+        byte-identical in the replacement rows (and immune to any lossy
+        re-encoding) and the copy is one sliced word move instead of a
+        per-column decode pass.
+        """
         rows = np.asarray(rows)
-        current = {
-            name: self.read_column_at(name, rows) for name in self.schema.names
-        }
-        current.update({k: np.asarray(v) for k, v in values.items()})
+        n = len(rows)
+        user_words = self.schema.row_words
+        raw = self._words[rows, :user_words].copy()  # before delete patches ts
+        for name, vals in values.items():
+            col = self.schema.column(name)  # raises KeyError for unknown names
+            woff = self.schema.word_offset(name)
+            raw[:, woff : woff + col.words] = _encode_column(
+                col, np.asarray(vals), n
+            )
         self.delete(rows)
-        return self.append(current)
+        ts = self.tick()
+        at = self._append_rows(n, ts)
+        self._words[at : at + n, :user_words] = raw
+        self.row_count += n
+        return np.arange(at, at + n)
 
     # ------------------------------------------------------------------ OLAP
     def snapshot_mask(self, ts: int | None = None) -> np.ndarray:
         """Row-validity mask at snapshot time ``ts`` (defaults to now)."""
         ts = self._clock if ts is None else ts
-        begin = self._words[: self.row_count, self.schema.row_words]
-        end = self._words[: self.row_count, self.schema.row_words + 1]
+        begin = self._words[: self.row_count, self.ts_begin_word]
+        end = self._words[: self.row_count, self.ts_end_word]
         return (begin <= ts) & (ts < end)
 
     def read_column_at(self, name: str, rows: np.ndarray) -> np.ndarray:

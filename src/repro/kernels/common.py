@@ -1,14 +1,37 @@
 """Shared kernel utilities — one definition for the whole RME kernel suite.
 
-Every fused kernel walks the same row-store representation (int32 word
-buffers, ``(N, row_words)``) with the same conventions: a default row-tile
-height, zero-padding to a whole number of tiles, word-granule column slices
-derived from a :class:`~repro.core.schema.TableGeometry`, 4-byte column
-decoding (int32 passthrough / float32 bitcast), and the single fused
-predicate (``gt`` / ``lt`` / ``none``).  These used to be copied per kernel
-module (``rme_project`` / ``rme_filter`` / ``rme_aggregate``); they live here
-once, and the heterogeneous one-pass kernel (``rme_scan_multi``) composes
-them the same way the single-op kernels do.
+The geometry contract every kernel honors
+-----------------------------------------
+A kernel's input is one table's row store (or one resident *chunk* of it): an
+``(N, row_words)`` int32 buffer whose row stride is the **storage** schema —
+the user columns back-to-back, followed by the two hidden MVCC timestamp
+words ``__ts_begin`` / ``__ts_end`` (``repro.core.table``).  What a kernel
+may touch is governed by word offsets into that stride:
+
+* **Enabled words** — the projected column group of a
+  :class:`~repro.core.schema.TableGeometry` (word-aligned widths/offsets,
+  the configuration-port payload), plus any predicate / aggregate / group
+  words a fused request names.  Only these are semantically read; the
+  engine's bus-beat accounting charges exactly their Eq. (3) bursts (the
+  union over all requests of a shared pass).
+* **Hidden timestamp words** — addressed only via ``ts_word`` (>= 0 fuses
+  the MVCC snapshot test ``begin <= ts < end`` into the row mask).  They are
+  never part of a projected output, which is why cached packed blocks stay
+  byte-valid across deletes/updates (the write path patches only these
+  words) — and when a request enables them, they join the enabled-word union
+  and are charged like any other burst.
+* **Rows** are position-local: a kernel never assumes a global row index
+  beyond padded-tail masking, so the same request runs unchanged over a
+  whole table or any chunk of it, and per-chunk outputs concatenate (blocked)
+  or add (accumulated) — the contract ``scan_multi_chunked`` builds on.
+
+Every fused kernel also shares the conventions below: a default row-tile
+height, zero-padding to a whole number of tiles, word-granule column slices,
+4-byte column decoding (int32 passthrough / float32 bitcast), and the single
+fused predicate (``gt`` / ``lt`` / ``none``).  These used to be copied per
+kernel module (``rme_project`` / ``rme_filter`` / ``rme_aggregate``); they
+live here once, and the heterogeneous one-pass kernel (``rme_scan_multi``)
+composes them the same way the single-op kernels do.
 """
 
 from __future__ import annotations

@@ -27,8 +27,10 @@ from .rme_scan_multi import (
     FilterRequest,
     GroupByRequest,
     ProjectRequest,
+    combine_chunk_outputs,
     request_intervals,
     scan_multi,
+    scan_multi_chunked,
     scan_multi_xla,
     scan_vmem_footprint_bytes,
     union_geometry,
@@ -59,6 +61,7 @@ __all__ = [
     "GroupByRequest",
     "ProjectRequest",
     "aggregate",
+    "combine_chunk_outputs",
     "filter_project",
     "groupby_sum",
     "project",
@@ -68,6 +71,7 @@ __all__ = [
     "project_xla",
     "request_intervals",
     "scan_multi",
+    "scan_multi_chunked",
     "scan_multi_xla",
     "scan_vmem_footprint_bytes",
     "union_geometry",

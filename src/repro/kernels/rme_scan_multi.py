@@ -119,8 +119,16 @@ ScanRequest = ProjectRequest | FilterRequest | AggregateRequest | GroupByRequest
 
 
 def _strip_dynamic(req: ScanRequest) -> ScanRequest:
-    """Zero the traced operands (predicate constant, snapshot time) so the
-    static kernel spec does not retrace per distinct k/ts value."""
+    """Normalize everything the kernel doesn't consume out of the static spec
+    so it never retraces for it: the traced operands (predicate constant,
+    snapshot time) and the geometry's ``row_count`` — output shapes follow
+    the *words* operand, so a growing table (the HTAP ingest pattern: every
+    tick appends a few rows) reuses one trace per chunk shape instead of
+    recompiling every request every tick."""
+    if isinstance(req, (ProjectRequest, FilterRequest)):
+        req = dataclasses.replace(
+            req, geom=dataclasses.replace(req.geom, row_count=0)
+        )
     if isinstance(req, ProjectRequest):
         return req
     return dataclasses.replace(req, pred_k=0, ts=0)
@@ -354,6 +362,64 @@ def scan_multi(
         block_rows, interpret,
     )
     return _unflatten(requests, flat, n)
+
+
+def combine_chunk_outputs(req: ScanRequest, parts: Sequence) -> object:
+    """Merge one request's per-chunk outputs into its whole-table result.
+
+    The delta-chunked row store (``repro.core.engine.DeviceRowStore``) keeps
+    a table as a base chunk plus appended tail chunks; a fused pass streams
+    each chunk independently and this is the combine rule — the reason it is
+    *possible* is that every request kind is either row-local (blocked
+    outputs: rows of chunk k land at their global offsets, so concatenation
+    reassembles the table order) or an associative reduction (aggregate /
+    group-by partials add, exactly how the single-chunk kernel already
+    combines its row tiles).  MVCC snapshot tests are per-row, so chunk
+    boundaries never change visibility.
+    """
+    if isinstance(req, ProjectRequest):
+        return jnp.concatenate(list(parts), axis=0)
+    if isinstance(req, FilterRequest):
+        return (jnp.concatenate([p[0] for p in parts], axis=0),
+                jnp.concatenate([p[1] for p in parts], axis=0))
+    if isinstance(req, AggregateRequest):
+        total = parts[0]
+        for p in parts[1:]:
+            total = total + p
+        return total
+    sums, counts = parts[0]
+    for s, c in parts[1:]:
+        sums, counts = sums + s, counts + c
+    return sums, counts
+
+
+def scan_multi_chunked(
+    chunks: Sequence[jax.Array],
+    requests: Sequence[ScanRequest],
+    revision: str = "mlp",
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> list:
+    """One fused pass per resident chunk, combined into per-request results.
+
+    ``chunks`` are consecutive row ranges of one table's row store (base +
+    appended tails); each is streamed through :func:`scan_multi` once and the
+    per-chunk outputs merge via :func:`combine_chunk_outputs`.  A single
+    chunk degenerates to exactly ``scan_multi`` — the common (write-free)
+    case pays nothing for the chunked formulation.
+    """
+    if len(chunks) == 1:
+        return scan_multi(chunks[0], requests, revision=revision,
+                          block_rows=block_rows, interpret=interpret)
+    per_chunk = [
+        scan_multi(chunk, requests, revision=revision,
+                   block_rows=block_rows, interpret=interpret)
+        for chunk in chunks
+    ]
+    return [
+        combine_chunk_outputs(req, [outs[r] for outs in per_chunk])
+        for r, req in enumerate(requests)
+    ]
 
 
 def _dynamic_operands(requests: Sequence[ScanRequest]) -> tuple[jax.Array, jax.Array]:

@@ -1,4 +1,5 @@
-"""Concurrent query serving: many clients, one engine, shared scans per tick.
+"""Concurrent query serving: many clients, one engine, shared scans per tick —
+and, since the write-path HTAP work, live writes interleaved with them.
 
 The paper's closing argument (§8) is that native column access "can vastly
 simplify the software logic" of an analytics engine.  This module is the
@@ -14,20 +15,40 @@ aggregates, and group-bys alike — rides a single shared Fetch-Unit stream
 same-table tick performs exactly one row-store pass instead of one per op
 kind.  Nothing in the tick syncs with the host until finalize.
 
-Threading model: ``submit`` is thread-safe and non-blocking (clients get a
+The write path (HTAP)
+---------------------
+Clients also submit **write tickets** — :meth:`QueryServer.submit_insert` /
+``submit_update`` / ``submit_delete`` — into the same admission queue.  A
+tick applies its writes *first*, in admission order, then serves every read
+of the tick from the resulting state: one consistent post-write snapshot per
+tick, so readers never block on writers and writers never wait for readers
+(MVCC gives pinned readers their own view regardless).  Once a server has
+admitted any write (or always, with ``snapshot_reads=True``), the snapshot
+is explicit — each read is compiled with ``snapshot_ts`` set to its table's
+post-write clock, fusing the MVCC visibility test in-scan (see
+:func:`repro.core.planner.compile_plan`; note this changes project-shaped
+results to the ``(packed, mask)`` filter contract).  Because the engine's
+row store is delta-chunked, a tick's writes
+cost O(delta) host→device bytes: appended rows ship as tail chunks, deletes
+and updates ship only patched timestamp words, and hot views survive appends
+via incremental tail scans instead of cold rebuilds.
+
+Threading model: ``submit*`` is thread-safe and non-blocking (clients get a
 :class:`QueryTicket` and block on ``result()`` at their leisure); all engine
-work happens on whichever single thread calls ``run_tick`` — either the
-caller's (deterministic, what the tests drive) or the background serving
-thread started by ``start()``/the ``serving()`` context manager.  JAX traces
-and device buffers are therefore never touched from two threads at once.
+*and table* work happens on whichever single thread calls ``run_tick`` —
+either the caller's (deterministic, what the tests drive) or the background
+serving thread started by ``start()``/the ``serving()`` context manager.  JAX
+traces, device buffers, and the host row stores are therefore never touched
+from two threads at once.
 
 Accounting: the server reports engine-level :class:`~repro.core.engine.
 EngineStats` plus its own :class:`ServerStats` — queue depth, shared-scan
-ratio (cold table-groups served by a genuine multi-view scan), and
-``bytes_saved``: the row-store bytes a per-query cold execution of the same
-traffic would have moved minus what the shared scans actually moved
-(union-geometry pricing, the same Eq.(3) bus-beat model the planner costs
-with).
+ratio (cold table-groups served by a genuine multi-view scan),
+``bytes_saved`` (the row-store bytes a per-query cold execution of the same
+traffic would have moved minus what the shared scans actually moved), and
+the write-side counters (writes applied per kind, rows written).  The
+engine's ``bytes_uploaded_delta``/``delta_uploads`` split shows what the
+write path actually shipped host→device.
 """
 
 from __future__ import annotations
@@ -41,13 +62,18 @@ from typing import Any, Mapping
 import numpy as np
 
 from repro.core.engine import RelationalMemoryEngine
-from repro.core.plan import PlanBuilder, PlanNode
+from repro.core.plan import Join, PlanBuilder, PlanNode, Scan
 from repro.core.planner import PhysicalQuery, compile_plan
 from repro.core.requests import ProjectOp
+from repro.core.table import RelationalTable
 
 
 class QueryTicket:
-    """A client's handle on one admitted query; resolved at end of its tick."""
+    """A client's handle on one admitted request; resolved at end of its tick.
+
+    Read tickets resolve to their query result; write tickets resolve to the
+    new physical row indices (insert/update) or ``None`` (delete).
+    """
 
     __slots__ = ("client", "submitted_at", "latency_s", "route",
                  "_event", "_result", "_error")
@@ -94,6 +120,13 @@ class ServerStats:
     bytes_saved: int = 0  # row-store bytes avoided vs per-query cold execution
     latency_sum_s: float = 0.0
     latency_max_s: float = 0.0
+    # write-path counters
+    writes_submitted: int = 0
+    writes_applied: int = 0
+    inserts: int = 0
+    updates: int = 0
+    deletes: int = 0
+    rows_written: int = 0  # rows inserted + replacement rows + rows deleted
 
     @property
     def shared_scan_ratio(self) -> float:
@@ -106,27 +139,58 @@ class ServerStats:
 
 
 @dataclasses.dataclass
+class _WritePayload:
+    """One admitted write: insert (columns), update (rows+values), delete (rows)."""
+
+    kind: str  # "insert" | "update" | "delete"
+    table: RelationalTable
+    columns: Mapping[str, np.ndarray] | None = None
+    rows: np.ndarray | None = None
+    values: Mapping[str, np.ndarray] | None = None
+
+
+@dataclasses.dataclass
 class _Admitted:
     ticket: QueryTicket
-    node: PlanNode
+    node: PlanNode | None
     path: str
     colstore: Mapping[str, np.ndarray] | None
     right_colstore: Mapping[str, np.ndarray] | None
+    write: _WritePayload | None = None
 
 
 class QueryServer:
-    """Admission queue + tick executor over one relational memory engine."""
+    """Admission queue + tick executor over one relational memory engine.
+
+    ``snapshot_reads`` controls whether reads are compiled with the tick's
+    post-write snapshot timestamp (fused MVCC visibility; project-shaped
+    plans then return ``(packed, mask)``).  The default, ``None``, is
+    **auto, per table**: reads of tables this server has never written keep
+    the historical unpinned contract (nothing about their results changes,
+    regardless of unrelated write traffic), while a table's first applied
+    write pins every subsequent read of *that table* — without pinning, a
+    read after an update/delete would count old *and* replacement row
+    versions, because unpinned scans have no MVCC test.  Pass
+    ``True``/``False`` to force either mode globally; plans that cannot
+    carry a snapshot (joins, row/col host paths) always compile unpinned.
+    """
 
     def __init__(
         self,
         engine: RelationalMemoryEngine | None = None,
         max_batch: int = 64,
+        snapshot_reads: bool | None = None,
     ):
         self.engine = engine if engine is not None else RelationalMemoryEngine()
         self.max_batch = max_batch
+        self.snapshot_reads = snapshot_reads
         self.stats = ServerStats()
         self._lock = threading.Lock()
         self._queue: deque[_Admitted] = deque()
+        # tables that have taken a write through this server (auto snapshot
+        # pinning is per-table: reads of never-written tables keep their
+        # historical result shapes); touched only on the tick thread
+        self._written_uids: set[int] = set()
         # per-client running (count, sum_s, max_s) — scalars, not a sample
         # list: a long-running server must not grow per served query
         self._client_latency: dict[str, list[float]] = {}
@@ -144,21 +208,112 @@ class QueryServer:
     ) -> QueryTicket:
         """Admit a logical plan; returns immediately with a ticket."""
         node = query.build() if isinstance(query, PlanBuilder) else query
-        ticket = QueryTicket(client)
+        return self._admit(_Admitted(
+            QueryTicket(client), node, path, colstore, right_colstore
+        ))
+
+    def submit_insert(
+        self,
+        table: RelationalTable,
+        columns: Mapping[str, np.ndarray],
+        client: str = "anon",
+    ) -> QueryTicket:
+        """Admit an insert; the ticket resolves to the new physical row indices.
+
+        The rows become visible to every read admitted into (or after) the
+        tick that applies the write — and cost O(rows) upload bytes, since
+        the device row store ships them as a tail chunk.
+        """
+        return self._admit(_Admitted(
+            QueryTicket(client), None, "write", None, None,
+            write=_WritePayload("insert", table, columns=dict(columns)),
+        ))
+
+    def submit_update(
+        self,
+        table: RelationalTable,
+        rows: np.ndarray,
+        values: Mapping[str, np.ndarray],
+        client: str = "anon",
+    ) -> QueryTicket:
+        """Admit an MVCC update of the given physical rows; resolves to the
+        replacement rows' indices.  Old versions stay readable at earlier
+        snapshots."""
+        return self._admit(_Admitted(
+            QueryTicket(client), None, "write", None, None,
+            write=_WritePayload("update", table, rows=np.asarray(rows),
+                                values=dict(values)),
+        ))
+
+    def submit_delete(
+        self,
+        table: RelationalTable,
+        rows: np.ndarray,
+        client: str = "anon",
+    ) -> QueryTicket:
+        """Admit an MVCC delete of the given physical rows; resolves to ``None``.
+        Costs O(rows) timestamp words of upload, never a table re-ship."""
+        return self._admit(_Admitted(
+            QueryTicket(client), None, "write", None, None,
+            write=_WritePayload("delete", table, rows=np.asarray(rows)),
+        ))
+
+    def _admit(self, adm: _Admitted) -> QueryTicket:
         with self._lock:
-            self._queue.append(
-                _Admitted(ticket, node, path, colstore, right_colstore)
-            )
+            self._queue.append(adm)
             self.stats.submitted += 1
+            if adm.write is not None:
+                self.stats.writes_submitted += 1
             self.stats.max_queue_depth = max(
                 self.stats.max_queue_depth, len(self._queue)
             )
-        return ticket
+        return adm.ticket
 
     @property
     def queue_depth(self) -> int:
         with self._lock:
             return len(self._queue)
+
+    # --------------------------------------------------------------- writes
+    def _apply_write(self, w: _WritePayload) -> Any:
+        if w.kind == "insert":
+            rows = w.table.append(w.columns)
+            self.stats.inserts += 1
+            self.stats.rows_written += len(rows)
+            return rows
+        if w.kind == "update":
+            rows = w.table.update(w.rows, w.values)
+            self.stats.updates += 1
+            self.stats.rows_written += len(rows)
+            return rows
+        if w.kind == "delete":
+            n_deleted = w.table.delete(w.rows)
+            self.stats.deletes += 1
+            self.stats.rows_written += n_deleted  # live rows only, not ids
+            return None
+        raise ValueError(f"unknown write kind {w.kind!r}")
+
+    def _run_writes(self, batch: list[_Admitted]) -> None:
+        """Apply the tick's writes in admission order, resolving their tickets.
+
+        Runs before any read compiles, so the tick's reads all observe one
+        consistent post-write state — the tick's snapshot.  A failing write
+        resolves its own ticket with the error and never blocks the reads.
+        """
+        for req in batch:
+            if req.write is None:
+                continue
+            try:
+                result = self._apply_write(req.write)
+            except Exception as e:
+                self.stats.failed += 1
+                req.ticket._resolve(error=e)
+                continue
+            self._written_uids.add(req.write.table.uid)
+            self.stats.writes_applied += 1
+            self.stats.served += 1
+            req.ticket._resolve(result=result, route=f"write-{req.write.kind}")
+            self._record_latency(req.ticket)
 
     # ------------------------------------------------------------ execution
     def _account_cold_groups(self, ops) -> None:
@@ -174,9 +329,11 @@ class QueryServer:
         by_table: dict[int, tuple[Any, dict]] = {}
         for op in ops:
             if isinstance(op, ProjectOp):
-                key = self.engine.view_key(op.table, op.view.geometry)
-                if self.engine.cache.peek(key, op.table.version) is not None:
-                    continue  # hot: free either way
+                # served from the cache — a full hot hit or a tail-only delta
+                # serve — means the op never joins the shared pass, so it
+                # must not be priced as a full cold scan here
+                if self.engine.projection_is_cached(op.table, op.view.geometry):
+                    continue
             entry = by_table.setdefault(op.table.uid, (op.table, {}))
             entry[1].setdefault(op.lower())
         for table, reqs in by_table.values():
@@ -188,14 +345,19 @@ class QueryServer:
                 )
                 union = self.engine.scan_bytes(table, tuple(reqs))
                 self.stats.bytes_saved += independent - union
+            # a lone cold request is priced identically either way
 
     def run_tick(self) -> int:
-        """Serve one batch: drain ≤ ``max_batch`` requests, coalesce, execute.
+        """Serve one batch: drain ≤ ``max_batch`` requests, apply writes,
+        coalesce and execute reads.
 
-        Returns the number of requests processed (served + failed).  All
-        device work of the batch is enqueued before any query's finalize
-        blocks, and every kind of same-table op fuses into the shared pass,
-        so one tick costs at most one scan per distinct table.
+        Returns the number of requests processed (served + failed).  Writes
+        apply first (admission order), so every read of the tick sees the
+        same post-write snapshot; then all device work of the read batch is
+        enqueued before any query's finalize blocks, and every kind of
+        same-table op fuses into the shared pass, so one tick costs at most
+        one scan per distinct table — plus O(delta) upload bytes for the
+        writes it applied.
         """
         with self._lock:
             n = min(self.max_batch, len(self._queue))
@@ -204,12 +366,27 @@ class QueryServer:
             return 0
         self.stats.ticks += 1
 
+        self._run_writes(batch)
+        reads = [req for req in batch if req.write is None]
+        if not reads:
+            return len(batch)
+
         compiled: list[PhysicalQuery | None] = []
-        for req in batch:
+        for req in reads:
             try:
+                snapshot_ts = None
+                if (self._pin_read(req.node)
+                        and _snapshot_capable(req.node, req.path)):
+                    # the tick's snapshot: the post-write clock of the plan's
+                    # base table (per-table clocks; writes already applied).
+                    # Plans that cannot carry a snapshot — joins, host-path
+                    # baselines — compile unpinned; they still observe the
+                    # tick-consistent post-write state (writes ran first)
+                    snapshot_ts = _plan_table(req.node).now()
                 compiled.append(compile_plan(
                     self.engine, req.node, path=req.path,
                     colstore=req.colstore, right_colstore=req.right_colstore,
+                    snapshot_ts=snapshot_ts,
                 ))
             except Exception as e:  # compile errors belong to the client
                 compiled.append(None)
@@ -236,7 +413,7 @@ class QueryServer:
             # healthy ticket still resolves with its result and only the
             # offender carries the error.  (PMU counters may over-charge the
             # aborted shared attempt — accounting noise, not a result bug.)
-            for req, pq in zip(batch, compiled):
+            for req, pq in zip(reads, compiled):
                 if pq is None:
                     continue
                 try:
@@ -251,7 +428,7 @@ class QueryServer:
             return len(batch)
 
         tokens: list[Any] = []
-        for i, (req, pq) in enumerate(zip(batch, compiled)):
+        for i, (req, pq) in enumerate(zip(reads, compiled)):
             if pq is None:
                 tokens.append(None)
                 continue
@@ -264,7 +441,7 @@ class QueryServer:
                 self.stats.failed += 1
                 req.ticket._resolve(error=e)
 
-        for req, pq, token in zip(batch, compiled, tokens):
+        for req, pq, token in zip(reads, compiled, tokens):
             if pq is None:
                 continue
             try:
@@ -277,6 +454,16 @@ class QueryServer:
             self.stats.served += 1
             self._record_latency(req.ticket)
         return len(batch)
+
+    def _pin_read(self, node: PlanNode) -> bool:
+        """Should this read carry the tick snapshot?  Auto mode pins exactly
+        the tables this server has written — a mutated table must not
+        double-count row versions, while reads of never-written tables keep
+        their historical (unpinned) result shapes no matter what unrelated
+        traffic does."""
+        if self.snapshot_reads is not None:
+            return self.snapshot_reads
+        return _plan_table(node).uid in self._written_uids
 
     def _record_latency(self, ticket: QueryTicket) -> None:
         lat = ticket.latency_s
@@ -353,10 +540,37 @@ class QueryServer:
             "bytes_saved": self.stats.bytes_saved,
             "mean_latency_s": self.stats.mean_latency_s,
             "max_latency_s": self.stats.latency_max_s,
+            "writes_applied": self.stats.writes_applied,
+            "rows_written": self.stats.rows_written,
             "engine_shared_scans": e.shared_scans,
             "engine_hot_hits": e.hot_hits,
+            "engine_delta_hits": e.delta_hits,
             "engine_cold_misses": e.cold_misses,
             "engine_bytes_from_dram": e.bytes_from_dram,
             "engine_bytes_uploaded": e.bytes_uploaded,
             "engine_uploads": e.uploads,
+            "engine_bytes_uploaded_delta": e.bytes_uploaded_delta,
+            "engine_delta_uploads": e.delta_uploads,
         }
+
+
+def _plan_table(node: PlanNode) -> RelationalTable:
+    """The base table of a single-relation plan (left table for joins)."""
+    while not isinstance(node, Scan):
+        node = node.children()[0]
+    return node.table
+
+
+def _snapshot_capable(node: PlanNode, path: str) -> bool:
+    """Whether ``compile_plan`` accepts a ``snapshot_ts`` for this request:
+    rme-path single-relation plans only (joins and the row/col host baselines
+    have no MVCC visibility channel — see planner._check_snapshot_path)."""
+    if path != "rme":
+        return False
+    stack = [node]
+    while stack:
+        n = stack.pop()
+        if isinstance(n, Join):
+            return False
+        stack.extend(n.children())
+    return True
