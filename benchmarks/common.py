@@ -21,6 +21,7 @@ ROWS: list[tuple[str, float, str]] = []
 
 SMOKE = False
 SMOKE_ROW_CAP = 2_000
+ROW_CAP: int | None = None  # non-smoke global cap (the nightly 50k regime)
 
 
 def set_smoke(on: bool = True) -> None:
@@ -29,9 +30,21 @@ def set_smoke(on: bool = True) -> None:
     SMOKE = on
 
 
+def set_row_cap(n: int | None) -> None:
+    """Cap every figure's table size without smoke-mode timing shortcuts —
+    the nightly CI runs the full suite at ``--rows 50000`` so scheduled
+    measurements finish in bounded time at a fixed, comparable scale."""
+    global ROW_CAP
+    ROW_CAP = n
+
+
 def bench_rows(n: int, cap: int = SMOKE_ROW_CAP) -> int:
-    """The figure's row count, capped in smoke mode."""
-    return min(n, cap) if SMOKE else n
+    """The figure's row count, capped in smoke mode (or by ``set_row_cap``)."""
+    if SMOKE:
+        return min(n, cap)
+    if ROW_CAP is not None:
+        return min(n, ROW_CAP)
+    return n
 
 
 def timeit(fn, iters: int = 5, warmup: int = 1) -> float:

@@ -27,7 +27,7 @@ with the same Eq. (3) union-geometry model, so the ratio is apples-to-apples.
 
 import numpy as np
 
-from repro.core import compile_plan, plan
+from repro.core import RelationalTable, compile_plan, plan
 from repro.serve import QueryServer
 
 from .common import bench_rows, emit, fresh_engine, make_benchmark_table, timeit
@@ -38,15 +38,19 @@ CLIENT_COUNTS = (16, 64)
 NUM_GROUPS = 32
 
 
-def _client_plans(table, n_clients: int):
+def _client_plans(table, build_table, n_clients: int):
     """The (client, round) grid cycles through mixed op kinds over the
-    Q0–Q5 column-group shapes — same-table, different operators."""
-    t = table
+    Q0–Q5 column-group shapes — same-table, different operators, the
+    device-offloaded Q5 join included (its probe-side scan rides the same
+    fused pass as everything else on the table)."""
+    t, rt = table, build_table
     shapes = [
         lambda: plan(t).project("A1", "A2", "A3", "A4"),          # Q1 scan
         lambda: plan(t).filter("A3", "gt", 0).project("A1"),      # Q2 filter
         lambda: plan(t).filter("A4", "lt", 10).sum("A2"),         # Q3 agg
         lambda: plan(t).groupby("A2", "A1", "avg", NUM_GROUPS),   # Q4 gby
+        lambda: plan(t).join(rt, key="A2", left_proj="A1",
+                             right_proj="A3"),                    # Q5 join
         lambda: plan(t).project("A5", "A9"),
         lambda: plan(t).filter("A7", "gt", -5).project("A2", "A6"),
         lambda: plan(t).sum("A8"),
@@ -59,28 +63,41 @@ def _client_plans(table, n_clients: int):
     ]
 
 
+def _make_build_table(table, n_r: int = 2_048):
+    rng = np.random.default_rng(4)
+    n_r = bench_rows(n_r, cap=256)
+    cols = {c.name: rng.integers(-1000, 1000, n_r).astype(np.int32)
+            for c in table.schema.columns}
+    cols["A2"] = np.arange(n_r, dtype=np.int32)  # primary key
+    return RelationalTable.from_columns(table.schema, cols)
+
+
 def _row_store_bytes(stats) -> int:
     return stats.bytes_from_dram + stats.bytes_uploaded
 
 
-def _one_pass_probe(table) -> int:
-    """A single mixed-kind same-table tick on a fresh engine: how many scans?"""
+def _one_pass_probe(table, build_table) -> int:
+    """A single mixed-kind same-table tick on a fresh engine: how many scans?
+    The join's probe-side projection must ride the same fused pass."""
     eng = fresh_engine()
     server = QueryServer(eng)
     server.submit(plan(table).project("A1", "A2"))
     server.submit(plan(table).filter("A3", "gt", 0).project("A1"))
     server.submit(plan(table).filter("A4", "lt", 10).sum("A2"))
     server.submit(plan(table).groupby("A2", "A1", "avg", NUM_GROUPS))
+    server.submit(plan(table).join(build_table, key="A2", left_proj="A1",
+                                   right_proj="A3"))
     server.run_tick()
     return eng.stats.shared_scans
 
 
 def run() -> None:
     t = make_benchmark_table(n_rows=bench_rows(N_ROWS))
-    one_pass = _one_pass_probe(t)
+    rt = _make_build_table(t)
+    one_pass = _one_pass_probe(t, rt)
 
     for n_clients in CLIENT_COUNTS:
-        plans = _client_plans(t, n_clients)
+        plans = _client_plans(t, rt, n_clients)
 
         # ---- byte accounting (one cold batch each way) --------------------
         solo = fresh_engine()

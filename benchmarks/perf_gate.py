@@ -1,0 +1,168 @@
+"""Perf-regression gate: diff a benchmark JSON report against a baseline.
+
+CI runs ``python -m benchmarks.run --smoke --json bench.json`` and then::
+
+    python -m benchmarks.perf_gate benchmarks/baselines/smoke.json bench.json
+
+The gate walks every baseline row's *derived* metrics (the parsed ``k=v``
+fields — byte counts, ratios, throughput) and fails when any metric
+regresses beyond tolerance in its bad direction.  Two metric classes:
+
+* **deterministic** — PMU byte counts, accounting ratios, scan/upload
+  counts.  These are exact outputs of the engine's charging rules, so any
+  drift beyond the tolerance means the accounting (or the datapath behind
+  it) changed; the default 25% headroom only absorbs benign row-count
+  rounding between environments.
+* **wall-derived** (``speedup``/``qps``/``tok_per_s``/…) — smoke mode times
+  a single iteration, and back-to-back runs on one machine were measured
+  swinging a serving-tick qps by 6x, so these cannot fail the gate by
+  default: violations beyond ``tolerance × noise-factor`` (default 3x ⇒
+  75%) are printed as warnings for a human to read.  ``--strict-noisy``
+  escalates them to failures (useful on a quiet dedicated runner).  Raw
+  latency percentiles are skipped outright.
+
+Unknown metric names and non-numeric fields are skipped; a baseline row
+missing from the current report fails (a figure silently disappearing is a
+regression).  After an *intentional* perf change, refresh the baseline with
+``python -m benchmarks.run --smoke --json /dev/null --update-baselines``
+and commit the diff — the gate is a ratchet, not an aspiration.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# Deterministic accounting metrics: exact outputs of the PMU charging rules.
+HIGHER_BETTER = {
+    "bytes_ratio", "shared_ratio", "bytes_saved", "saving", "seed_vs_batch",
+    "upload_ratio", "delta_hits",
+}
+LOWER_BETTER = {
+    "device_bytes", "host_bytes", "solo_bytes", "served_bytes", "batch_bytes",
+    "seed_bytes", "masked_bytes", "compact_bytes", "beats_bytes", "rme_bytes",
+    "row_bytes", "col_bytes", "union_rme_bytes", "uploaded", "uploaded_delta",
+    "uploads_first", "uploads_now", "uploads_seed", "uploads_solo",
+    "uploads_batch", "one_pass_scans", "vmem_bytes", "vmem_frac",
+}
+# Wall-clock-derived metrics: direction known, but smoke noise is real.
+NOISY_HIGHER = {"speedup", "qps", "tok_per_s"}
+NOISY_LOWER = {"norm_vs_row"}
+# Workload parameters (not measurements) and raw single-iteration latency
+# percentiles (pure scheduler noise at smoke scale — the qps/speedup ratios
+# gate the same path with run-relative normalization).
+SKIP = {
+    "k", "rows", "cols", "clients", "groups", "queries", "rounds", "views",
+    "writes", "tile", "projectivity", "notes", "p50_ms", "p95_ms",
+}
+
+
+def classify(key: str) -> tuple[str, bool] | None:
+    """(bad direction, noisy) for a metric, or None to skip.
+
+    ``"down"`` means a *decrease* is a regression (higher is better);
+    ``"up"`` means an increase is.  Unknown ``*_bytes`` keys default to
+    deterministic lower-better so new byte metrics are gated from day one.
+    """
+    if key in SKIP:
+        return None
+    if key in HIGHER_BETTER:
+        return "down", False
+    if key in LOWER_BETTER:
+        return "up", False
+    if key in NOISY_HIGHER:
+        return "down", True
+    if key in NOISY_LOWER:
+        return "up", True
+    if key.endswith("_bytes"):
+        return "up", False
+    return None
+
+
+def regression(base: float, cur: float, bad: str) -> float:
+    """Relative change in the bad direction (0 when improved or flat)."""
+    if base == 0:
+        return 0.0 if cur == 0 else float("inf") if bad == "up" else 0.0
+    delta = (cur - base) / abs(base)
+    return max(0.0, delta if bad == "up" else -delta)
+
+
+def gate(baseline: dict, current: dict, tolerance: float,
+         noise_factor: float) -> tuple[list[str], list[str]]:
+    """(failures, warnings): deterministic-metric violations and missing
+    rows fail; wall-derived violations warn (escalated by --strict-noisy)."""
+    cur_rows = {row["name"]: row for row in current["rows"]}
+    failures: list[str] = []
+    warnings: list[str] = []
+    for row in baseline["rows"]:
+        name = row["name"]
+        cur = cur_rows.get(name)
+        if cur is None:
+            failures.append(f"{name}: row missing from current report")
+            continue
+        for key, base_val in row["derived"].items():
+            if not isinstance(base_val, (int, float)):
+                continue
+            cls = classify(key)
+            if cls is None:
+                continue
+            cur_val = cur["derived"].get(key)
+            if not isinstance(cur_val, (int, float)):
+                failures.append(f"{name}: metric {key} missing from current")
+                continue
+            bad, noisy = cls
+            allowed = tolerance * (noise_factor if noisy else 1.0)
+            reg = regression(float(base_val), float(cur_val), bad)
+            if reg > allowed:
+                msg = (
+                    f"{name}: {key} regressed {reg:.0%} "
+                    f"(baseline {base_val}, current {cur_val}, "
+                    f"allowed {allowed:.0%}{' noisy' if noisy else ''})"
+                )
+                (warnings if noisy else failures).append(msg)
+    return failures, warnings
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("current", help="freshly generated report JSON")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed regression for deterministic metrics")
+    ap.add_argument("--noise-factor", type=float, default=3.0,
+                    help="warning threshold multiplier for wall-derived metrics")
+    ap.add_argument("--strict-noisy", action="store_true",
+                    help="escalate wall-derived violations from warnings to "
+                         "failures (quiet dedicated runners only)")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+    failures, warnings = gate(baseline, current, args.tolerance,
+                              args.noise_factor)
+    if args.strict_noisy:
+        failures, warnings = failures + warnings, []
+    checked = sum(
+        1
+        for row in baseline["rows"]
+        for k, v in row["derived"].items()
+        if isinstance(v, (int, float)) and classify(k) is not None
+    )
+    for w in warnings:
+        print(f"  WARN {w}")
+    if failures:
+        print(f"perf-gate: {len(failures)} regression(s) over "
+              f"{checked} gated metrics:")
+        for f_ in failures:
+            print(f"  FAIL {f_}")
+        print("(intentional change? refresh with "
+              "`python -m benchmarks.run --smoke --update-baselines`)")
+        sys.exit(1)
+    print(f"perf-gate: OK — {checked} metrics within tolerance "
+          f"({args.tolerance:.0%}), {len(warnings)} noisy warning(s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,10 +11,18 @@ regressions without paying for real measurements.
 name, wall time, and parsed ``derived`` key=value fields (bytes moved,
 throughput, latency percentiles, ...), so perf can be diffed across PRs
 (``benchmarks/run.py --json BENCH_pr3.json`` then compare files).
+
+``--update-baselines`` refreshes the committed perf-gate baseline
+(``benchmarks/baselines/smoke.json`` for ``--smoke``, ``full.json``
+otherwise) — run it after an intentional perf change, commit the diff, and
+the CI ``perf-gate`` job compares every future run against it
+(``python -m benchmarks.perf_gate``).  ``--rows N`` caps every figure's
+table size without smoke-mode shortcuts (the nightly job's 50k regime).
 """
 
 import argparse
 import json
+import pathlib
 import time
 
 from . import (
@@ -33,7 +41,9 @@ from . import (
     table2_vmem_budget,
     lm_step,
 )
-from .common import flush_rows, set_smoke
+from .common import flush_rows, set_row_cap, set_smoke
+
+BASELINE_DIR = pathlib.Path(__file__).parent / "baselines"
 
 MODULES = [
     fig6_offset_revisions,
@@ -80,9 +90,16 @@ def main() -> None:
                     help="tiny row counts + single iterations (CI regression probe)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write results as JSON for cross-PR perf diffing")
+    ap.add_argument("--rows", type=int, default=None, metavar="N",
+                    help="cap every figure's table size (nightly: 50000)")
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="write the report to benchmarks/baselines/ — the "
+                         "committed reference the CI perf-gate compares against")
     args = ap.parse_args()
     if args.smoke:
         set_smoke(True)
+    if args.rows is not None:
+        set_row_cap(args.rows)
     print("name,us_per_call,derived")
     t0 = time.time()
     rows = []
@@ -93,19 +110,27 @@ def main() -> None:
         rows.extend(flush_rows())
     elapsed = time.time() - t0
     print(f"# {len(rows)} rows in {elapsed:.1f}s")
+    report = {
+        "smoke": args.smoke,
+        "pattern": args.pattern,
+        "elapsed_s": round(elapsed, 3),
+        "rows": [
+            {"name": name, "us_per_call": us, "derived": _parse_derived(d)}
+            for name, us, d in rows
+        ],
+    }
     if args.json:
-        report = {
-            "smoke": args.smoke,
-            "pattern": args.pattern,
-            "elapsed_s": round(elapsed, 3),
-            "rows": [
-                {"name": name, "us_per_call": us, "derived": _parse_derived(d)}
-                for name, us, d in rows
-            ],
-        }
         with open(args.json, "w") as f:
             json.dump(report, f, indent=1)
         print(f"# wrote {args.json}")
+    if args.update_baselines:
+        if args.pattern:
+            raise SystemExit("--update-baselines needs a full run (no pattern)")
+        BASELINE_DIR.mkdir(exist_ok=True)
+        path = BASELINE_DIR / ("smoke.json" if args.smoke else "full.json")
+        with open(path, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"# wrote baseline {path}")
 
 
 if __name__ == "__main__":

@@ -23,7 +23,9 @@ from .schema import (
 from .table import TS_INF, RelationalTable, columnar_copy
 from .descriptor import BUS_WIDTH, Descriptor, bytes_moved, descriptor_arrays, descriptors, fetch_model
 from .ephemeral import EphemeralView
-from .requests import AggregateOp, FilterOp, GroupByOp, ProjectOp, ScanOp
+from .requests import (
+    AggregateOp, FilterOp, GroupByOp, JoinOp, JoinResult, ProjectOp, ScanOp,
+)
 from .engine import DeviceRowStore, EngineStats, RelationalMemoryEngine, ReorgCache
 from .executor import BatchExecutor, execute_batch, materialize_batch
 from .plan import (
@@ -41,7 +43,8 @@ __all__ = [
     "Descriptor", "descriptors", "descriptor_arrays", "fetch_model", "bytes_moved",
     "EphemeralView", "DeviceRowStore", "EngineStats", "RelationalMemoryEngine",
     "ReorgCache", "BatchExecutor", "execute_batch", "materialize_batch",
-    "AggregateOp", "FilterOp", "GroupByOp", "ProjectOp", "ScanOp",
+    "AggregateOp", "FilterOp", "GroupByOp", "JoinOp", "JoinResult",
+    "ProjectOp", "ScanOp",
     "Aggregate", "Filter", "GroupBy", "Join", "PlanBuilder", "PlanError",
     "PlanNode", "Project", "Scan", "decompose", "plan",
     "PhysicalQuery", "compile_plan",

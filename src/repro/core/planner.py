@@ -53,11 +53,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.rme_join import estimated_partition_bytes
+
 from .descriptor import bytes_moved
 from .engine import RelationalMemoryEngine
 from .ephemeral import EphemeralView
 from .plan import PlanBuilder, PlanError, PlanNode, Predicate, QueryShape, decompose
-from .requests import AggregateOp, FilterOp, GroupByOp, ProjectOp, ScanOp
+from .requests import (
+    AggregateOp,
+    FilterOp,
+    GroupByOp,
+    JoinOp,
+    JoinResult,
+    ProjectOp,
+    ScanOp,
+)
 from .schema import MAX_ENABLED_COLUMNS, TableGeometry, merge_geometries
 from .table import RelationalTable
 
@@ -264,6 +274,16 @@ def _host_words(
 
 
 # ------------------------------------------------- q5 build-side index cache
+# One cache, two entry kinds, keyed by (uid, version, key, payload, path):
+# the host sort-probe route stores its sorted {key, payload} index under
+# path="rme", and the device hash route stores its bucket partition arrays
+# (a NamedTuple of four device arrays — see kernels.rme_join.JoinPartitions)
+# under path=DEVICE_JOIN_PATH.  Both kinds share the byte bound, the FIFO
+# eviction, the version-drop rule, and the weakref lifetime — and both are
+# dropped by clear_join_build_cache() / RelationalMemoryEngine.reset(), so
+# neither can leak stale device bytes across benchmark repetitions.
+DEVICE_JOIN_PATH = "rme-hash"
+
 _BUILD_INDEX_CACHE: dict[tuple, tuple[jax.Array, jax.Array]] = {}
 _BUILD_INDEX_CAPACITY = 64 << 20
 _build_index_bytes = 0  # incremental occupancy (kept exact by every mutation)
@@ -297,6 +317,18 @@ def _drop_build_entries(uid: int, keep_version: int | None = None) -> None:
     for k in [k for k in _BUILD_INDEX_CACHE
               if k[0] == uid and k[1] != keep_version]:
         _pop_build_entry(k)
+
+
+def _peek_build_entry(
+    r_table: RelationalTable, key: str, r_proj: str, path: str
+):
+    """Stat-free cache probe for route costing: the join route chooser must
+    be able to ask "is the sorted index / partition set warm?" for *both*
+    routes without perturbing ``JOIN_BUILD_STATS`` (only the chosen route's
+    compile-time probe counts a hit or miss)."""
+    return _BUILD_INDEX_CACHE.get(
+        (r_table.uid, r_table.version, key, r_proj, path)
+    )
 
 
 def _probe_build_index(
@@ -340,15 +372,6 @@ def _insert_build_index(
     if r_table.uid not in _BUILD_INDEX_FINALIZED:
         weakref.finalize(r_table, _drop_build_entries, r_table.uid)
         _BUILD_INDEX_FINALIZED.add(r_table.uid)
-
-
-@dataclasses.dataclass
-class JoinResult:
-    """Static-shape join output: one slot per probe row + match validity."""
-
-    s_proj: jax.Array  # projected column from the probe side S
-    r_proj: jax.Array  # matched column from the build side R (0 where no match)
-    matched: jax.Array  # bool mask
 
 
 # ------------------------------------------------------------ plan compiler
@@ -724,19 +747,118 @@ def _sort_probe(
     )
 
 
+def _device_join_expressible(shape: QueryShape) -> bool:
+    """Can the device hash route serve this join?  The probe kernel reads raw
+    single-word columns and hashes the key with integer modulo, so both key
+    columns must be int32 and both payloads 4-byte numeric."""
+    j = shape.join
+    for table, names in ((shape.table, (j.key, j.left_proj)),
+                         (j.right_table, (j.key, j.right_proj))):
+        for name in names:
+            col = table.schema.column(name)
+            if col.words != 1 or col.dtype not in ("int32", "float32"):
+                return False
+    return (shape.table.schema.column(j.key).dtype == "int32"
+            and j.right_table.schema.column(j.key).dtype == "int32")
+
+
+def _join_route(
+    engine: RelationalMemoryEngine, shape: QueryShape, snapshot_ts: int | None
+) -> str:
+    """Choose ``"device-hash-join"`` vs the host ``"shared-scan-join"`` by
+    modeled bytes through the hierarchy, mirroring :func:`plan_query`:
+
+    * device: probe bus beats over the {key, payload} union (the probe's
+      output never crosses toward the CPU) + the partition-array upload when
+      the build cache is cold for this build-table version.
+    * host: the probe-side scan **and** its packed block shipped up the
+      hierarchy for the CPU-side sort-probe, plus the same pair for the
+      build side when the sorted index is cold — each term dropping to zero
+      when the reorg cache / build cache already holds it.
+
+    A snapshot-pinned join has no host spelling (the sort-probe carries no
+    MVCC channel), so it must take the device route or fail at compile time.
+    """
+    j = shape.join
+    s_table, r_table = shape.table, j.right_table
+    expressible = _device_join_expressible(shape)
+    if snapshot_ts is not None:
+        if not expressible:
+            raise PlanError(
+                "snapshot_ts join needs device-expressible columns "
+                "(int32 keys, 4-byte numeric payloads)"
+            )
+        return "device-hash-join"
+    if not expressible:
+        return "shared-scan-join"
+    s_geom = TableGeometry.from_schema(
+        s_table.schema, [j.left_proj, j.key], s_table.row_count
+    )
+    probe_beats = bytes_moved(s_geom)["rme"]
+    device = probe_beats
+    if _peek_build_entry(r_table, j.key, j.right_proj, DEVICE_JOIN_PATH) is None:
+        device += estimated_partition_bytes(r_table.row_count)
+    host = 0
+    if engine.peek_project(s_table, s_geom) is None:
+        host += probe_beats + s_table.row_count * s_geom.out_bytes_per_row
+    if _peek_build_entry(r_table, j.key, j.right_proj, "rme") is None:
+        r_geom = TableGeometry.from_schema(
+            r_table.schema, [j.key, j.right_proj], r_table.row_count
+        )
+        if engine.peek_project(r_table, r_geom) is None:
+            host += (bytes_moved(r_geom)["rme"]
+                     + r_table.row_count * r_geom.out_bytes_per_row)
+    # ties resolve toward the device: at equal bytes the offloaded probe
+    # additionally leaves the CPU free (the paper's whole argument)
+    return "device-hash-join" if device <= host else "shared-scan-join"
+
+
 def _compile_join(
     engine: RelationalMemoryEngine,
     shape: QueryShape,
     path: str,
     colstore,
     right_colstore,
+    snapshot_ts: int | None = None,
+    join_route: str | None = None,
 ) -> PhysicalQuery:
-    """Sort-probe equi-join (paper §6): RME slims both sides to {key, payload},
-    the CPU joins "once good locality has been achieved".  Functionally the
-    single-pass hash build + probe of the paper, but MXU/VPU-friendly (no
-    dynamic-size hash buckets) — a TPU adaptation noted in DESIGN.md."""
+    """Equi-join (paper §6 / §8).  On the rme path the compiler chooses
+    between two physical routes by modeled bytes (:func:`_join_route`, or
+    the caller's ``join_route`` override):
+
+    * ``device-hash-join`` — the §8 offload: the build side lives as cached
+      device hash buckets (one build per build-table version), and the probe
+      is a Pallas grid pass over the probe rows — straight from the device
+      row-store chunks when the join is alone on its table, or fused into
+      the tick's shared scan when co-tick ops touch the same table.  MVCC
+      visibility tests fuse in on both sides, so this is also the only route
+      that can serve a ``snapshot_ts`` join.
+    * ``shared-scan-join`` — the paper's §6 sort-probe: RME slims both sides
+      to {key, payload}, the CPU joins "once good locality has been
+      achieved" (MXU/VPU-friendly static shapes; a TPU adaptation noted in
+      DESIGN.md).
+    """
     j = shape.join
     s_table, r_table = shape.table, j.right_table
+
+    if path == "rme":
+        route = join_route or _join_route(engine, shape, snapshot_ts)
+        if route == "device-hash-join":
+            # probe the partition cache before touching the build side at
+            # all: a warm hit skips the build-side reads and the build
+            partitions = _probe_build_index(
+                r_table, j.key, j.right_proj, DEVICE_JOIN_PATH
+            )
+            sv = engine.register(s_table, (j.left_proj, j.key),
+                                 snapshot_ts=snapshot_ts)
+            op = JoinOp(sv, j.left_proj, j.key, r_table, j.right_proj,
+                        snapshot_ts=snapshot_ts, partitions=partitions)
+            return PhysicalQuery(
+                engine, shape, path, route="device-hash-join", cost=None,
+                ops=(op,),
+                _launch=lambda results: results[0], _finalize=lambda t: t,
+            )
+
     # probe the sorted-index cache before touching the build side at all: a
     # warm hit skips the build-side column reads, not just the argsort
     cached = _probe_build_index(r_table, j.key, j.right_proj, path)
@@ -790,6 +912,7 @@ def compile_plan(
     colstore: Mapping[str, np.ndarray] | None = None,
     right_colstore: Mapping[str, np.ndarray] | None = None,
     snapshot_ts: int | None = None,
+    join_route: str | None = None,
 ) -> PhysicalQuery:
     """Lower a logical plan to a :class:`PhysicalQuery` on ``path``.
 
@@ -805,9 +928,17 @@ def compile_plan(
     and group-bys fuse the test in-scan; project-shaped queries return the
     ``rme_filter`` contract — ``(packed block with invisible rows zeroed,
     validity mask)`` — since a bare packed block has no visibility channel.
-    This is what the :class:`~repro.serve.query_server.QueryServer` uses to
-    serve every read of a tick from the tick's post-write snapshot.  Joins
-    do not support snapshots (their build/probe reads are unversioned).
+    Joins take the ``device-hash-join`` route under a snapshot: the probe
+    pass tests the probe rows' timestamps in-scan and the cached build
+    buckets carry the build rows' timestamps, so both sides pin (probe rows
+    invisible at the snapshot emit zeros and ``matched=False``).  This is
+    what the :class:`~repro.serve.query_server.QueryServer` uses to serve
+    every read of a tick — joins included — from the tick's post-write
+    snapshot.
+
+    ``join_route`` overrides the join route choice (``"device-hash-join"``
+    or ``"shared-scan-join"``) — benchmarks use it to measure both routes on
+    one engine; ``None`` lets :func:`_join_route` cost them.
     """
     if path not in ("rme", "row", "col"):
         raise ValueError(f"unknown path {path!r}; want rme, row or col")
@@ -818,7 +949,6 @@ def compile_plan(
     if shape.kind == "groupby":
         return _compile_groupby(engine, shape, path, colstore, snapshot_ts)
     if shape.kind == "join":
-        if snapshot_ts is not None:
-            raise PlanError("snapshot_ts is not supported for join plans")
-        return _compile_join(engine, shape, path, colstore, right_colstore)
+        return _compile_join(engine, shape, path, colstore, right_colstore,
+                             snapshot_ts, join_route)
     return _compile_project(engine, shape, path, colstore, snapshot_ts)

@@ -28,10 +28,27 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
+
 from repro.kernels import rme_scan_multi as KR
 
 from .ephemeral import EphemeralView
 from .table import RelationalTable
+
+
+@dataclasses.dataclass
+class JoinResult:
+    """Static-shape join output: one slot per probe row + match validity.
+
+    Every join route — host sort-probe, device hash-partition probe, XLA
+    fallback — emits exactly this contract, so routes are interchangeable
+    and tests can assert cross-route equality.  Under a ``snapshot_ts``,
+    probe rows invisible at the snapshot carry zeros and ``matched=False``.
+    """
+
+    s_proj: jax.Array  # projected column from the probe side S
+    r_proj: jax.Array  # matched column from the build side R (0 where no match)
+    matched: jax.Array  # bool mask
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -145,4 +162,48 @@ class GroupByOp:
         )
 
 
-ScanOp = ProjectOp | FilterOp | AggregateOp | GroupByOp
+@dataclasses.dataclass(frozen=True, eq=False)
+class JoinOp:
+    """Device-resident equi-join: probe-side scan + bucketed build probe.
+
+    The op names the registered probe-side ``{left_proj, key}`` view, the
+    build table, and (optionally) the hash partitions the planner found in
+    the build cache at compile time (``None`` means build-and-insert at
+    execution, exactly like the sorted-index closure of the host route).
+
+    :meth:`lower` emits only the **probe-side scan request** — a plain
+    ``ProjectRequest`` (or, snapshot-pinned, a ``FilterRequest`` with an
+    inert predicate whose mask is the MVCC visibility) — so a join admitted
+    into a mixed tick coalesces into the same heterogeneous one-pass scan as
+    co-tick filters/aggregates on the probe table; the bucket probe itself
+    runs on the packed output (``RelationalMemoryEngine._finish_join``).  A
+    join that is *alone* on its table skips the packed materialization
+    entirely: the engine streams the probe kernel straight over the
+    device row-store chunks (``_join_direct``).
+    """
+
+    view: EphemeralView  # probe-side {left_proj, key} registered view
+    left_proj: str
+    key: str
+    right_table: RelationalTable
+    right_proj: str
+    snapshot_ts: int | None = None
+    partitions: object | None = None  # JoinPartitions from the build cache
+
+    @property
+    def table(self) -> RelationalTable:
+        return self.view.table
+
+    def lower(self) -> KR.ProjectRequest | KR.FilterRequest:
+        if self.snapshot_ts is None:
+            return KR.ProjectRequest(self.view.geometry)
+        # inert predicate over the (int32) key column: the request's mask is
+        # exactly the probe rows' MVCC visibility at the snapshot
+        return KR.FilterRequest(
+            self.view.geometry,
+            **_pred_fields(self.table, self.key, "none", 0,
+                           self.snapshot_ts, 0, "int32"),
+        )
+
+
+ScanOp = ProjectOp | FilterOp | AggregateOp | GroupByOp | JoinOp

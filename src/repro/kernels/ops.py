@@ -15,6 +15,13 @@ from repro.core.schema import TableGeometry
 
 from .rme_aggregate import aggregate, groupby_sum
 from .rme_filter import filter_project
+from .rme_join import (
+    JoinPartitions,
+    build_partitions,
+    hash_join,
+    hash_join_xla,
+    probe_vmem_footprint_bytes,
+)
 from .rme_project import (
     DEFAULT_BLOCK_ROWS,
     project,
@@ -59,11 +66,16 @@ __all__ = [
     "AggregateRequest",
     "FilterRequest",
     "GroupByRequest",
+    "JoinPartitions",
     "ProjectRequest",
     "aggregate",
+    "build_partitions",
     "combine_chunk_outputs",
     "filter_project",
     "groupby_sum",
+    "hash_join",
+    "hash_join_xla",
+    "probe_vmem_footprint_bytes",
     "project",
     "project_any",
     "project_multi",

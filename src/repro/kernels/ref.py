@@ -94,6 +94,38 @@ def filter_project_ref(
     return jnp.where(mask[:, None], packed, 0), mask
 
 
+def hash_join_ref(
+    s_key: jax.Array,
+    s_val: jax.Array,
+    r_key: jax.Array,
+    r_val: jax.Array,
+    s_valid: jax.Array | None = None,
+    r_valid: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Equi-join oracle: one slot per probe row + validity mask (Q5 contract).
+
+    The build side is duplicate-free on ``r_key`` (primary key, paper §6).
+    ``s_valid``/``r_valid`` are MVCC visibility masks — an invisible probe row
+    emits zeros and ``matched=False``; an invisible build row never matches.
+    Pure jnp sort-probe: the ground truth both the host sort-probe route and
+    the device hash-partition probe must reproduce bit-exactly.
+    """
+    order = jnp.argsort(r_key)
+    rk, rv = r_key[order], r_val[order]
+    rvalid = (jnp.ones(rk.shape, dtype=bool) if r_valid is None
+              else r_valid[order])
+    pos = jnp.clip(jnp.searchsorted(rk, s_key), 0, rk.shape[0] - 1)
+    matched = (rk[pos] == s_key) & rvalid[pos]
+    svalid = (jnp.ones(s_key.shape, dtype=bool) if s_valid is None
+              else s_valid)
+    matched = matched & svalid
+    return (
+        jnp.where(svalid, s_val, 0),
+        jnp.where(matched, rv[pos], 0),
+        matched,
+    )
+
+
 def groupby_sum_ref(
     words: jax.Array,
     group_word: int,

@@ -62,8 +62,12 @@ from typing import Any, Mapping
 import numpy as np
 
 from repro.core.engine import RelationalMemoryEngine
-from repro.core.plan import Join, PlanBuilder, PlanNode, Scan
-from repro.core.planner import PhysicalQuery, compile_plan
+from repro.core.plan import Join, PlanBuilder, PlanNode, Scan, decompose
+from repro.core.planner import (
+    PhysicalQuery,
+    _device_join_expressible,
+    compile_plan,
+)
 from repro.core.requests import ProjectOp
 from repro.core.table import RelationalTable
 
@@ -378,11 +382,16 @@ class QueryServer:
                 if (self._pin_read(req.node)
                         and _snapshot_capable(req.node, req.path)):
                     # the tick's snapshot: the post-write clock of the plan's
-                    # base table (per-table clocks; writes already applied).
-                    # Plans that cannot carry a snapshot — joins, host-path
-                    # baselines — compile unpinned; they still observe the
-                    # tick-consistent post-write state (writes ran first)
-                    snapshot_ts = _plan_table(req.node).now()
+                    # tables (per-table clocks; writes already applied) — for
+                    # a join, the max over both sides, so every row live in
+                    # either table right now is visible.  Plans that cannot
+                    # carry a snapshot — host-path baselines, joins whose
+                    # columns the device route cannot express — compile
+                    # unpinned; they still observe the tick-consistent
+                    # post-write state (writes ran first)
+                    snapshot_ts = max(
+                        t.now() for t in _plan_tables(req.node)
+                    )
                 compiled.append(compile_plan(
                     self.engine, req.node, path=req.path,
                     colstore=req.colstore, right_colstore=req.right_colstore,
@@ -460,10 +469,11 @@ class QueryServer:
         the tables this server has written — a mutated table must not
         double-count row versions, while reads of never-written tables keep
         their historical (unpinned) result shapes no matter what unrelated
-        traffic does."""
+        traffic does.  A join pins when *either* side has been written."""
         if self.snapshot_reads is not None:
             return self.snapshot_reads
-        return _plan_table(node).uid in self._written_uids
+        return any(t.uid in self._written_uids
+                   for t in _plan_tables(node))
 
     def _record_latency(self, ticket: QueryTicket) -> None:
         lat = ticket.latency_s
@@ -554,23 +564,29 @@ class QueryServer:
         }
 
 
-def _plan_table(node: PlanNode) -> RelationalTable:
-    """The base table of a single-relation plan (left table for joins)."""
-    while not isinstance(node, Scan):
-        node = node.children()[0]
-    return node.table
+def _plan_tables(node: PlanNode) -> list[RelationalTable]:
+    """Every base table a plan reads (both sides of a join)."""
+    tables, stack = [], [node]
+    while stack:
+        n = stack.pop()
+        if isinstance(n, Scan):
+            tables.append(n.table)
+        stack.extend(n.children())
+    return tables
 
 
 def _snapshot_capable(node: PlanNode, path: str) -> bool:
     """Whether ``compile_plan`` accepts a ``snapshot_ts`` for this request:
-    rme-path single-relation plans only (joins and the row/col host baselines
-    have no MVCC visibility channel — see planner._check_snapshot_path)."""
+    rme-path plans only (the row/col host baselines have no MVCC visibility
+    channel — see planner._check_snapshot_path).  Joins pin through the
+    device hash route when its column constraints hold (int32 keys, 4-byte
+    payloads); an inexpressible join compiles unpinned rather than failing
+    its ticket."""
     if path != "rme":
         return False
-    stack = [node]
-    while stack:
-        n = stack.pop()
-        if isinstance(n, Join):
+    if isinstance(node, Join):
+        try:
+            return _device_join_expressible(decompose(node))
+        except Exception:
             return False
-        stack.extend(n.children())
     return True

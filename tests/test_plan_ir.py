@@ -270,3 +270,28 @@ def test_engine_reset_clears_join_build_cache(table, build_table):
     assert not ops._BUILD_INDEX_CACHE  # no stale sorted indexes survive reset
     _ = ops.q5_hash_join(eng, table, build_table)
     assert ops.JOIN_BUILD_STATS == {"hits": 0, "misses": 1}  # cold again
+
+
+def test_engine_reset_clears_device_partition_cache(table, build_table):
+    """Same stale-bytes leak class for the device hash route: reset() (and
+    clear_join_build_cache()) must also drop the cached hash-partition
+    arrays, or a benchmark repetition would warm-probe a previous rep's
+    device buckets."""
+    from repro.core.planner import DEVICE_JOIN_PATH
+
+    eng = RelationalMemoryEngine()
+    ops.clear_join_build_cache()
+    pq = compile_plan(
+        eng, plan(table).join(build_table, key="A2", left_proj="A1",
+                              right_proj="A3"))
+    assert pq.route == "device-hash-join"
+    _ = pq.run()
+    assert eng.stats.join_builds == 1
+    assert [k for k in ops._BUILD_INDEX_CACHE if k[-1] == DEVICE_JOIN_PATH]
+    eng.reset()
+    assert not ops._BUILD_INDEX_CACHE  # partitions dropped with the indexes
+    assert ops.JOIN_BUILD_STATS == {"hits": 0, "misses": 0}
+    _ = compile_plan(
+        eng, plan(table).join(build_table, key="A2", left_proj="A1",
+                              right_proj="A3")).run()
+    assert eng.stats.join_builds == 2  # cold again: a fresh build ran
