@@ -1,0 +1,84 @@
+"""Sharded-serving scaling: one fused pass per shard, reduction-only traffic.
+
+Sweeps the mesh width (1/2/4/8 shards) over the same mixed tick — project +
+filter + aggregate + group-by in ONE fused scan per shard — and reports the
+interconnect accounting next to the scan itself: ``collective_bytes`` is the
+cross-shard reduction traffic (aggregate/group-by partials), ``dram_bytes``
+the per-bank streaming.  Real devices are used when the process has them
+(``--xla_force_host_platform_device_count``); otherwise every shard is a
+logical bank on the one CPU device — the datapath and the charging rules are
+identical, which is what the gate cares about.
+
+The figure also *checks* the paper's interconnect claim rather than just
+plotting it: the same request set at 2x the rows must produce byte-identical
+collective traffic (O(results), not O(rows)) — a violation raises, so CI
+smoke catches any accounting or datapath change that starts shipping rows
+across shards.
+"""
+
+import jax
+
+from repro.core.requests import AggregateOp, FilterOp, GroupByOp, ProjectOp
+
+from . import common
+from .common import emit, make_benchmark_table, timeit
+
+SHARD_COUNTS = (1, 2, 4, 8)
+
+
+def _engine(shards: int):
+    from repro.core.distributed import ShardedEngine
+
+    if len(jax.devices()) >= shards > 1:
+        from repro.launch.mesh import make_mesh
+
+        return ShardedEngine(mesh=make_mesh((shards,), ("data",)))
+    return ShardedEngine(num_shards=shards)
+
+
+def _mixed_tick_ops(eng, t):
+    return [
+        ProjectOp(eng.register(t, ("A1", "A5"))),
+        FilterOp(eng.register(t, ("A1", "A3")), "A3", "gt", 10),
+        AggregateOp(t, "A1", pred_col="A2", pred_op="lt", pred_k=0),
+        GroupByOp(t, "A2", "A1", 16),
+    ]
+
+
+def _collective_bytes(shards: int, n_rows: int) -> int:
+    eng = _engine(shards)
+    t = make_benchmark_table(n_rows=n_rows, seed=3)
+    eng.execute_many(_mixed_tick_ops(eng, t))
+    return eng.stats.bytes_collective
+
+
+def run() -> None:
+    n_rows = common.bench_rows(44_000)
+    for shards in SHARD_COUNTS:
+        t = make_benchmark_table(n_rows=n_rows, seed=3)
+        eng = _engine(shards)
+        ops = _mixed_tick_ops(eng, t)
+        eng.execute_many(ops)  # cold pass: uploads + accounting
+        coll = eng.stats.bytes_collective
+        coll_ops = eng.stats.collective_ops
+        dram = eng.stats.bytes_from_dram
+        us = timeit(lambda: eng.execute_many(ops), iters=3)
+        emit(
+            f"fig_dist/shards{shards}",
+            us,
+            f"shards={shards},collective_bytes={coll},"
+            f"collective_ops={coll_ops},dram_bytes={dram},"
+            f"qps={1e6 / max(us, 1e-9):.1f}",
+        )
+
+    # interconnect traffic is a function of RESULT size only: double the
+    # rows, byte-identical collectives (per-request reduced partials)
+    small = _collective_bytes(4, max(n_rows // 2, 64))
+    large = _collective_bytes(4, n_rows)
+    if small != large:
+        raise AssertionError(
+            f"collective bytes scaled with rows ({small} -> {large}); "
+            "reductions must cross the interconnect, never rows"
+        )
+    emit("fig_dist/collective_o_results", 0.0,
+         f"collective_bytes={large},rows={n_rows}")

@@ -45,6 +45,7 @@ LOWER_BETTER = {
     "row_bytes", "col_bytes", "union_rme_bytes", "uploaded", "uploaded_delta",
     "uploads_first", "uploads_now", "uploads_seed", "uploads_solo",
     "uploads_batch", "one_pass_scans", "vmem_bytes", "vmem_frac",
+    "collective_ops",
 }
 # Wall-clock-derived metrics: direction known, but smoke noise is real.
 NOISY_HIGHER = {"speedup", "qps", "tok_per_s"}
@@ -54,7 +55,7 @@ NOISY_LOWER = {"norm_vs_row"}
 # gate the same path with run-relative normalization).
 SKIP = {
     "k", "rows", "cols", "clients", "groups", "queries", "rounds", "views",
-    "writes", "tile", "projectivity", "notes", "p50_ms", "p95_ms",
+    "writes", "tile", "projectivity", "notes", "p50_ms", "p95_ms", "shards",
 }
 
 

@@ -34,6 +34,7 @@ from . import (
     fig12_join,
     fig13_scaling,
     fig_concurrent_queries,
+    fig_dist_scaling,
     fig_htap_ingest,
     fig_mixed_batch,
     fig_scan_sharing,
@@ -54,6 +55,7 @@ MODULES = [
     fig12_join,
     fig13_scaling,
     fig_concurrent_queries,
+    fig_dist_scaling,
     fig_htap_ingest,
     fig_mixed_batch,
     fig_scan_sharing,

@@ -116,6 +116,12 @@ class EngineStats:
     * ``delta_hits`` — reorg-cache entries served by an incremental
       tail-chunk projection (also counted in ``cold_misses``: a scan, albeit
       a small one, did run).
+    * ``bytes_collective`` / ``collective_ops`` — modeled interconnect
+      traffic of the sharded backend: cross-shard reduction combines
+      (aggregate ``[sum, count]`` pairs, group-by ``(G, 2)`` partials) and
+      join build-partition broadcasts.  Always O(result/build) bytes, never
+      O(rows) — blocked outputs gather through ``bytes_to_cpu`` like any
+      packed view.  Zero on the single-device backend.
     """
 
     hot_hits: int = 0
@@ -132,6 +138,8 @@ class EngineStats:
     last_block_rows: int = 0  # row-tile height the fused-pass VMEM guard chose
     join_builds: int = 0  # hash-partition builds (one per build-table version)
     bytes_join_build: int = 0  # of bytes_uploaded: partition-array uploads
+    bytes_collective: int = 0  # interconnect bytes (sharded reductions/broadcasts)
+    collective_ops: int = 0  # cross-shard combine/broadcast events
 
     def reset(self) -> None:
         self.hot_hits = 0
@@ -148,6 +156,8 @@ class EngineStats:
         self.last_block_rows = 0
         self.join_builds = 0
         self.bytes_join_build = 0
+        self.bytes_collective = 0
+        self.collective_ops = 0
 
 
 class ReorgCache:
@@ -441,6 +451,16 @@ class RelationalMemoryEngine:
         self.stats = EngineStats()
         self.rowstore = DeviceRowStore(self.stats, delta=delta_uploads)
 
+    @property
+    def backend(self) -> str:
+        """Execution-backend identity: ``"single"`` here, ``"sharded"`` on
+        :class:`repro.core.distributed.ShardedEngine`.  The planner's
+        ``compile_plan(..., backend=...)`` validates against this — routing
+        itself is dynamic dispatch (the sharded engine overrides the scan
+        and join serving hooks), so a compiled plan runs on whichever
+        backend its engine is."""
+        return "single"
+
     # ---------------------------------------------------------------- config
     def register(
         self,
@@ -648,24 +668,7 @@ class RelationalMemoryEngine:
                 # nothing crosses toward the CPU but the join result
                 results[entries[0][0]] = self._join_direct(ops[entries[0][0]])
                 continue
-            if len(reqs) == 1:
-                # nothing to fuse: stay on the single-op datapath (keeps the
-                # bsl/pck revision kernels) and don't count a shared scan
-                words = self.device_words(table)
-                outs = [self._execute_solo(words, table, reqs[0])]
-            else:
-                chunks = self.device_chunks(table)
-                block_rows = self._fused_block_rows(reqs, table.row_words)
-                outs = K.scan_multi_chunked(
-                    chunks, reqs, revision=self.revision,
-                    block_rows=block_rows, interpret=self.interpret,
-                )
-                self.stats.shared_scans += 1
-                self.stats.rows_projected += table.row_count
-                for chunk in chunks:
-                    self.stats.bytes_from_dram += self.scan_bytes(
-                        table, reqs, row_count=chunk.shape[0]
-                    )
+            outs = self._serve_scan(table, reqs)
             by_req = dict(zip(reqs, outs))
             # a packed block consumed only by join probes stays on device —
             # bytes_to_cpu is charged only when a non-join consumer ships it
@@ -699,6 +702,35 @@ class RelationalMemoryEngine:
         return self.execute_many([ProjectOp(v) for v in views])
 
     # -------------------------------------------- fused one-pass internals
+    def _serve_scan(self, table: RelationalTable,
+                    reqs: tuple["KR.ScanRequest", ...]) -> list:
+        """Serve one table's de-duplicated request tuple — the backend hook.
+
+        Single-device: a lone request stays on its single-op kernel (keeps
+        the bsl/pck revision kernels exercised, doesn't count a shared
+        scan); two or more fuse into one heterogeneous pass streamed over
+        the resident chunk list.  The sharded backend overrides this with
+        one fused pass per shard plus reduction-only cross-shard combines —
+        requests are chunk-agnostic (word offsets, row-position-local), so
+        the same lowered tuple serves both backends unchanged.
+        """
+        if len(reqs) == 1:
+            words = self.device_words(table)
+            return [self._execute_solo(words, table, reqs[0])]
+        chunks = self.device_chunks(table)
+        block_rows = self._fused_block_rows(reqs, table.row_words)
+        outs = K.scan_multi_chunked(
+            chunks, reqs, revision=self.revision,
+            block_rows=block_rows, interpret=self.interpret,
+        )
+        self.stats.shared_scans += 1
+        self.stats.rows_projected += table.row_count
+        for chunk in chunks:
+            self.stats.bytes_from_dram += self.scan_bytes(
+                table, reqs, row_count=chunk.shape[0]
+            )
+        return outs
+
     def _execute_solo(self, words: jax.Array, table: RelationalTable,
                       req: "KR.ScanRequest"):
         """One request, today's single-op kernel, engine-side accounting."""
@@ -827,10 +859,7 @@ class RelationalMemoryEngine:
             self.stats.bytes_from_dram += self.scan_bytes(
                 table, (acc_req,), row_count=chunk.shape[0]
             )
-        s, r, m = (outs[0] if len(outs) == 1 else tuple(
-            jnp.concatenate([o[j] for o in outs]) for j in range(3)
-        ))
-        return JoinResult(s_proj=s, r_proj=r, matched=m)
+        return JoinResult.concat([JoinResult(*o) for o in outs])
 
     def _finish_join(self, op: JoinOp, out) -> JoinResult:
         """Probe a shared-scan output: the op's probe-side scan rode the

@@ -13,7 +13,10 @@ Nothing here executes.  :func:`repro.core.planner.compile_plan` lowers a tree
 to a :class:`~repro.core.planner.PhysicalQuery` routed through fused offload
 kernels, shared-scan materialization, or host-side fallback; the
 :class:`~repro.serve.query_server.QueryServer` admission-queues trees from many
-clients and coalesces their scans.  :func:`decompose` is the shared front end:
+clients and coalesces their scans.  Plans are backend-agnostic: the same tree
+compiles unchanged for the single-device engine and the mesh-sharded backend
+(``compile_plan(..., backend=...)`` only *validates* the pairing — see
+:class:`repro.core.distributed.ShardedEngine`).  :func:`decompose` is the shared front end:
 it flattens a tree into the canonical ``QueryShape`` both consumers route on,
 rejecting shapes the physical layer cannot serve (:class:`PlanError`).
 """

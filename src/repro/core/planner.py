@@ -53,6 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.common import group_ids
 from repro.kernels.rme_join import estimated_partition_bytes
 
 from .descriptor import bytes_moved
@@ -413,6 +414,13 @@ class PhysicalQuery:
         """The projection views among ``ops`` (kept for introspection)."""
         return tuple(op.view for op in self.ops if isinstance(op, ProjectOp))
 
+    @property
+    def backend(self) -> str:
+        """The execution backend this query will run on (``"single"`` /
+        ``"sharded"``) — the engine's identity, since routing is dynamic
+        dispatch through the engine's serving hooks."""
+        return self.engine.backend
+
     def launch(self, results: Sequence[Any]) -> Any:
         return self._launch(results)
 
@@ -547,7 +555,7 @@ def _compile_groupby(
     if path != "rme":
         def launch(_):
             a = _host_col(shape.table, colstore, g.agg, path).astype(jnp.float32)
-            grp = jnp.remainder(
+            grp = group_ids(
                 _host_col(shape.table, colstore, g.group, path), g.num_groups
             )
             if pred_col is not None:
@@ -913,6 +921,7 @@ def compile_plan(
     right_colstore: Mapping[str, np.ndarray] | None = None,
     snapshot_ts: int | None = None,
     join_route: str | None = None,
+    backend: str | None = None,
 ) -> PhysicalQuery:
     """Lower a logical plan to a :class:`PhysicalQuery` on ``path``.
 
@@ -939,9 +948,23 @@ def compile_plan(
     ``join_route`` overrides the join route choice (``"device-hash-join"``
     or ``"shared-scan-join"``) — benchmarks use it to measure both routes on
     one engine; ``None`` lets :func:`_join_route` cost them.
+
+    ``backend`` pins the execution backend the caller compiled for
+    (``"single"`` or ``"sharded"``) and is validated against the engine's
+    own :attr:`~repro.core.engine.RelationalMemoryEngine.backend`; ``None``
+    accepts either.  Routing itself needs no per-backend lowering — a
+    compiled plan's ops are chunk-agnostic and the engine's serving hooks
+    dispatch dynamically — so the parameter exists to fail fast when a plan
+    meant for a sharded deployment is handed a single-device engine (or
+    vice versa), not to produce different plans.
     """
     if path not in ("rme", "row", "col"):
         raise ValueError(f"unknown path {path!r}; want rme, row or col")
+    if backend is not None and backend != engine.backend:
+        raise PlanError(
+            f"plan compiled for backend {backend!r} but the engine is "
+            f"{engine.backend!r}"
+        )
     _check_snapshot_path(path, snapshot_ts)
     shape = decompose(node)
     if shape.kind == "aggregate":

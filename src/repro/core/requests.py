@@ -27,8 +27,10 @@ upload cost; an op without a snapshot sees every physical row version.
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import rme_scan_multi as KR
 
@@ -49,6 +51,20 @@ class JoinResult:
     s_proj: jax.Array  # projected column from the probe side S
     r_proj: jax.Array  # matched column from the build side R (0 where no match)
     matched: jax.Array  # bool mask
+
+    @classmethod
+    def concat(cls, parts: Sequence["JoinResult"]) -> "JoinResult":
+        """Row-wise concatenation of per-chunk (or per-shard-segment) join
+        outputs back into probe-table row order.  Join outputs are row-local
+        — one slot per probe row, no cross-row state — so chunked and
+        sharded probes reassemble exactly like blocked scan outputs."""
+        if len(parts) == 1:
+            return parts[0]
+        return cls(
+            s_proj=jnp.concatenate([p.s_proj for p in parts]),
+            r_proj=jnp.concatenate([p.r_proj for p in parts]),
+            matched=jnp.concatenate([p.matched for p in parts]),
+        )
 
 
 @dataclasses.dataclass(frozen=True, eq=False)

@@ -64,6 +64,21 @@ def pred_mask(vals: jax.Array, op: str, k: jax.Array) -> jax.Array:
     raise ValueError(op)
 
 
+def group_ids(raw: jax.Array, num_groups: int) -> jax.Array:
+    """The one group-key lowering every group-by path shares.
+
+    Raw int32 storage words map to ``[0, num_groups)`` by floored modulo —
+    the sign follows the (positive) divisor, so negative keys land in-range
+    instead of producing negative group ids, and int32 overflow keys wrap the
+    same way on every path.  The fused Pallas kernel, the XLA fallback, the
+    single-op ``groupby_sum`` kernel, the host-path planner fallback, the
+    reference oracle, and the sharded ``dist_groupby`` all call this one
+    definition, so sharded and fused group-bys agree bit-for-bit on every
+    key, however hostile.
+    """
+    return jnp.remainder(raw, num_groups)
+
+
 def pad_rows(words: jax.Array, block_rows: int) -> jax.Array:
     """Zero-pad the row dimension to a whole number of row tiles."""
     n = words.shape[0]

@@ -17,6 +17,7 @@ from .rme_aggregate import aggregate, groupby_sum
 from .rme_filter import filter_project
 from .rme_join import (
     JoinPartitions,
+    broadcast_partitions,
     build_partitions,
     hash_join,
     hash_join_xla,
@@ -35,10 +36,12 @@ from .rme_scan_multi import (
     GroupByRequest,
     ProjectRequest,
     combine_chunk_outputs,
+    reduced_result_bytes,
     request_intervals,
     scan_multi,
     scan_multi_chunked,
     scan_multi_xla,
+    scan_shard,
     scan_vmem_footprint_bytes,
     union_geometry,
 )
@@ -69,6 +72,7 @@ __all__ = [
     "JoinPartitions",
     "ProjectRequest",
     "aggregate",
+    "broadcast_partitions",
     "build_partitions",
     "combine_chunk_outputs",
     "filter_project",
@@ -81,10 +85,12 @@ __all__ = [
     "project_multi",
     "project_multi_xla",
     "project_xla",
+    "reduced_result_bytes",
     "request_intervals",
     "scan_multi",
     "scan_multi_chunked",
     "scan_multi_xla",
+    "scan_shard",
     "scan_vmem_footprint_bytes",
     "union_geometry",
     "vmem_footprint_bytes",

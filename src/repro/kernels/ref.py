@@ -15,6 +15,8 @@ import jax.numpy as jnp
 
 from repro.core.schema import TableGeometry
 
+from .common import group_ids
+
 
 def gather_indices(geom: TableGeometry) -> np.ndarray:
     """Word indices within a row for the packed projection, in packed order."""
@@ -143,7 +145,7 @@ def groupby_sum_ref(
     Group keys are int32 taken modulo ``num_groups`` (static group domain).
     Returns (sums[G], counts[G]).
     """
-    g = jnp.remainder(words[:, group_word], num_groups)
+    g = group_ids(words[:, group_word], num_groups)
     vals = _decode(words[:, agg_word], agg_dtype).astype(jnp.float32)
     mask = jnp.ones(g.shape, dtype=bool)
     if pred_word is not None:

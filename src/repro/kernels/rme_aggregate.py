@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import DEFAULT_BLOCK_ROWS
+from .common import DEFAULT_BLOCK_ROWS, group_ids
 from .common import decode as _decode
 from .common import pred_mask as _pred
 
@@ -133,7 +133,7 @@ def _groupby_kernel(
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    g = jnp.remainder(x_ref[:, group_word], num_groups)  # (B,)
+    g = group_ids(x_ref[:, group_word], num_groups)  # (B,)
     vals = _decode(x_ref[:, agg_word], agg_dtype).astype(jnp.float32)
     k = _decode(k_ref[0, 0], pred_dtype)
     mask = _pred(_decode(x_ref[:, pred_word], pred_dtype), pred_op, k)

@@ -377,3 +377,21 @@ def probe_vmem_footprint_bytes(
     row tile and output columns, plus the bucket arrays resident for the
     whole pass."""
     return (2 * block_rows * (row_words + 3) * 4) + partitions.nbytes
+
+
+def broadcast_partitions(
+    partitions: JoinPartitions, devices,
+) -> list[JoinPartitions]:
+    """Shard-local entry point: replicate the (small) build-side partition
+    set onto every shard's device — the join's only collective.
+
+    ``devices`` is one entry per shard; ``None`` means a logical shard on the
+    current device (the replica is the original, no transfer).  The sharded
+    engine charges ``(shards - 1) * partitions.nbytes`` of interconnect
+    traffic for this broadcast — build partitions are O(build rows), never
+    O(probe rows), which is what keeps collective bytes proportional to the
+    smaller relation."""
+    return [
+        partitions if d is None else jax.device_put(partitions, d)
+        for d in devices
+    ]

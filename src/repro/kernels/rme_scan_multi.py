@@ -58,6 +58,7 @@ from .common import (
     DEFAULT_BLOCK_ROWS,
     column_slices,
     decode,
+    group_ids,
     pad_rows,
     pred_k_bits,
     pred_mask,
@@ -244,7 +245,7 @@ def _scan_multi_kernel(requests, n_rows, x_ref, k_ref, ts_ref, *o_refs):
             o_ref[0, 0] += jnp.sum(vals * fm)
             o_ref[0, 1] += jnp.sum(fm)
         else:  # GroupByRequest: one-hot × matmul MXU contraction
-            g = jnp.remainder(x_ref[:, req.group_word], req.num_groups)
+            g = group_ids(x_ref[:, req.group_word], req.num_groups)
             onehot = (
                 g[:, None] == jax.lax.iota(jnp.int32, req.num_groups)[None, :]
             ).astype(jnp.float32)  # (B, G)
@@ -422,6 +423,50 @@ def scan_multi_chunked(
     ]
 
 
+def reduced_result_bytes(req: ScanRequest) -> int | None:
+    """Bytes of one request's *reduced* partial, or ``None`` for blocked kinds.
+
+    This is the unit of the sharded backend's interconnect accounting: when
+    per-shard fused passes combine via :func:`combine_chunk_outputs`, an
+    aggregate ships its float32 ``[sum, count]`` pair (8 bytes) and a
+    group-by its ``(G, 2)`` partial — never anything proportional to the
+    shard's row count.  Blocked outputs (projections, filters) return
+    ``None``: they stay shard-resident until finalize and are charged to
+    ``bytes_to_cpu`` like any packed view, not to the collective.
+    """
+    if isinstance(req, AggregateRequest):
+        return 2 * 4
+    if isinstance(req, GroupByRequest):
+        return req.num_groups * 2 * 4
+    return None
+
+
+def scan_shard(
+    chunks: Sequence[jax.Array],
+    requests: Sequence[ScanRequest],
+    revision: str = "mlp",
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> list[list]:
+    """Shard-local entry point: one fused pass over each resident chunk of
+    one shard (bank), per-chunk outputs left **uncombined**.
+
+    The sharded engine needs the per-chunk granularity — blocked outputs are
+    reassembled into global row order from each chunk's ownership segments,
+    and reduced partials combine shard-locally before anything crosses the
+    interconnect — so unlike :func:`scan_multi_chunked` this returns
+    ``[chunk][request]`` raw outputs.  Every pass is an ordinary
+    single-device :func:`scan_multi` on the shard's own device: requests are
+    row-position-local, so no SPMD lowering is required and the Pallas
+    revisions work per shard exactly as they do per chunk.
+    """
+    return [
+        scan_multi(chunk, requests, revision=revision,
+                   block_rows=block_rows, interpret=interpret)
+        for chunk in chunks
+    ]
+
+
 def _dynamic_operands(requests: Sequence[ScanRequest]) -> tuple[jax.Array, jax.Array]:
     """Per-request (k_bits, ts) operand columns — traced, never static."""
     k_bits = jnp.stack(
@@ -502,7 +547,7 @@ def _scan_multi_xla(
         if isinstance(req, AggregateRequest):
             results.append(jnp.stack([jnp.sum(vals * fm), jnp.sum(fm)]))
         else:
-            g = jnp.remainder(col(req.group_word), req.num_groups)
+            g = group_ids(col(req.group_word), req.num_groups)
             sums = jax.ops.segment_sum(vals * fm, g, num_segments=req.num_groups)
             counts = jax.ops.segment_sum(fm, g, num_segments=req.num_groups)
             results.append((sums, counts))

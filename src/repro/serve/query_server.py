@@ -177,6 +177,14 @@ class QueryServer:
     versions, because unpinned scans have no MVCC test.  Pass
     ``True``/``False`` to force either mode globally; plans that cannot
     carry a snapshot (joins, row/col host paths) always compile unpinned.
+
+    ``mesh`` / ``num_shards`` construct a mesh-sharded backend
+    (:class:`repro.core.distributed.ShardedEngine`) instead of the default
+    single-device engine: each shard owns a contiguous row range on its own
+    device, a tick's fused pass runs per shard, and only reduced results
+    cross the interconnect (``engine_bytes_collective`` in
+    :meth:`snapshot`).  Mutually exclusive with passing ``engine`` — a
+    pre-built engine already fixes the backend.
     """
 
     def __init__(
@@ -184,7 +192,17 @@ class QueryServer:
         engine: RelationalMemoryEngine | None = None,
         max_batch: int = 64,
         snapshot_reads: bool | None = None,
+        mesh=None,
+        num_shards: int | None = None,
     ):
+        if engine is not None and (mesh is not None or num_shards is not None):
+            raise ValueError(
+                "pass either a pre-built engine or mesh/num_shards, not both"
+            )
+        if engine is None and (mesh is not None or num_shards is not None):
+            from repro.core.distributed import ShardedEngine  # deferred import
+
+            engine = ShardedEngine(mesh=mesh, num_shards=num_shards)
         self.engine = engine if engine is not None else RelationalMemoryEngine()
         self.max_batch = max_batch
         self.snapshot_reads = snapshot_reads
@@ -561,6 +579,8 @@ class QueryServer:
             "engine_uploads": e.uploads,
             "engine_bytes_uploaded_delta": e.bytes_uploaded_delta,
             "engine_delta_uploads": e.delta_uploads,
+            "engine_bytes_collective": e.bytes_collective,
+            "engine_collective_ops": e.collective_ops,
         }
 
 

@@ -35,16 +35,17 @@ def test_distributed_relational_operators():
 
         rng = np.random.default_rng(2)
         schema = benchmark_schema(64, 4)
-        n = 1000
+        n = 1003  # deliberately not divisible by 8: padding must be masked
         cols = {f"A{i+1}": rng.integers(-100, 100, n).astype(np.int32) for i in range(16)}
         t = RelationalTable.from_columns(schema, cols)
         mesh = make_mesh((8,), ("data",))
         words = D.pad_rows_to(t.words(), 8)
         geom = TableGeometry.from_schema(schema, ["A1", "A5"], row_count=n)
 
-        out = D.dist_project(words, geom, mesh)
+        out = np.asarray(D.dist_project(words, geom, mesh, valid_rows=n))
         ref = np.stack([cols["A1"], cols["A5"]], 1)
-        np.testing.assert_array_equal(np.asarray(out)[:n], ref)
+        np.testing.assert_array_equal(out[:n], ref)
+        assert (out[n:] == 0).all(), "padding rows leaked into the packed output"
 
         agg = D.dist_aggregate(words, mesh, agg_word=0, pred_word=2,
                                pred_op="gt", pred_k=10, valid_rows=n)
@@ -56,6 +57,52 @@ def test_distributed_relational_operators():
         g = cols["A2"] % 16
         sr = np.zeros(16); np.add.at(sr, g, cols["A1"].astype(np.float64))
         np.testing.assert_allclose(np.asarray(s), sr, rtol=1e-5)
+        print("OK")
+    """)
+
+
+def test_dist_join_padding_regression():
+    """Padded rows carry key word 0; a legitimate key-0 build row must match
+    real probes and never the padding (the pre-fix false-positive)."""
+    run_child("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import RelationalTable, benchmark_schema, TableGeometry
+        from repro.core import distributed as D
+        from repro.kernels.ref import hash_join_ref
+        from repro.launch.mesh import make_mesh
+
+        rng = np.random.default_rng(5)
+        schema = benchmark_schema(64, 4)
+        n_s, n_r = 1001, 117  # both non-divisible by 8
+        s_cols = {f"A{i+1}": rng.integers(-20, 20, n_s).astype(np.int32)
+                  for i in range(16)}
+        r_cols = {f"A{i+1}": rng.integers(-20, 20, n_r).astype(np.int32)
+                  for i in range(16)}
+        r_cols["A2"] = np.arange(n_r, dtype=np.int32) - 3  # unique keys incl. 0
+        s_t = RelationalTable.from_columns(schema, s_cols)
+        r_t = RelationalTable.from_columns(schema, r_cols)
+        mesh = make_mesh((8,), ("data",))
+        s_geom = TableGeometry.from_schema(schema, ["A1", "A2"], row_count=n_s)
+        r_geom = TableGeometry.from_schema(schema, ["A2", "A3"], row_count=n_r)
+
+        s_val, r_val, matched = D.dist_join(
+            D.pad_rows_to(s_t.words(), 8), D.pad_rows_to(r_t.words(), 8),
+            mesh, s_geom, r_geom, s_key_word=1, s_val_word=0,
+            r_key_word=0, r_val_word=1, s_valid_rows=n_s, r_valid_rows=n_r,
+        )
+        s_val, r_val, matched = (np.asarray(s_val), np.asarray(r_val),
+                                 np.asarray(matched))
+        ref_s, ref_r, ref_m = hash_join_ref(
+            jnp.asarray(s_cols["A2"]), jnp.asarray(s_cols["A1"]),
+            jnp.asarray(r_cols["A2"]), jnp.asarray(r_cols["A3"]),
+        )
+        np.testing.assert_array_equal(matched[:n_s], np.asarray(ref_m))
+        np.testing.assert_array_equal(r_val[:n_s], np.asarray(ref_r))
+        np.testing.assert_array_equal(s_val[:n_s], np.asarray(ref_s))
+        # key 0 exists on the build side, so some real probe matches it...
+        assert matched[:n_s][s_cols["A2"] == 0].all()
+        # ...but padded probe rows (also key 0) never match anything
+        assert not matched[n_s:].any(), "padding probed the build side"
         print("OK")
     """)
 
@@ -301,3 +348,339 @@ def test_dryrun_cell_on_tiny_mesh():
         assert res.collective["total"] > 0
         print("OK", t)
     """, devices=8)
+
+
+# ===================================================== sharded backend (logical)
+# The sharded engine's code path is device-count-independent: ``num_shards``
+# without a mesh runs every shard on the current device, so the equality
+# suite runs in-process (1 device) and the mesh placement runs in a child.
+
+def _sharded_case(seed=7, n=1003, n_extra=37):
+    import numpy as np
+    from repro.core import benchmark_schema
+
+    rng = np.random.default_rng(seed)
+    schema = benchmark_schema(64, 4)
+    # bounded int values: every partial sum is exactly representable in
+    # float32, so re-associated sharded reductions are bit-equal
+    cols = {c.name: rng.integers(-50, 50, n).astype(np.int32)
+            for c in schema.columns}
+    extra = {c.name: rng.integers(-50, 50, n_extra).astype(np.int32)
+             for c in schema.columns}
+    return schema, cols, extra
+
+
+def _mk_ops(engine, t, r_t, snapshot_ts=None):
+    from repro.core.requests import (
+        AggregateOp, FilterOp, GroupByOp, JoinOp, ProjectOp,
+    )
+
+    return [
+        ProjectOp(engine.register(t, ("A1", "A2"))),
+        FilterOp(engine.register(t, ("A1", "A3")), "A3", "gt", 5,
+                 snapshot_ts=snapshot_ts),
+        AggregateOp(t, "A1", pred_col="A2", pred_op="lt", pred_k=0,
+                    snapshot_ts=snapshot_ts),
+        GroupByOp(t, "A2", "A1", 16, snapshot_ts=snapshot_ts),
+        JoinOp(engine.register(t, ("A1", "A4")), "A1", "A4", r_t, "A3",
+               snapshot_ts=snapshot_ts),
+    ]
+
+
+def _flatten(result):
+    import numpy as np
+    from repro.core.requests import JoinResult
+
+    if isinstance(result, JoinResult):
+        return [np.asarray(result.s_proj), np.asarray(result.r_proj),
+                np.asarray(result.matched)]
+    if isinstance(result, tuple):
+        return [np.asarray(x) for x in result]
+    return [np.asarray(result)]
+
+
+def _assert_results_equal(a, b, label):
+    import numpy as np
+
+    for i, (x, y) in enumerate(zip(a, b)):
+        for xa, ya in zip(_flatten(x), _flatten(y)):
+            np.testing.assert_array_equal(xa, ya, err_msg=f"{label} op {i}")
+
+
+def test_sharded_engine_matches_single_device():
+    """Byte-identical results for every op kind, with and without a
+    snapshot, across shard counts and revisions, on a non-divisible table."""
+    import numpy as np
+    from repro.core import RelationalMemoryEngine, RelationalTable
+    from repro.core.distributed import ShardedEngine
+
+    schema, cols, extra = _sharded_case()
+    rng_r = np.random.default_rng(11)
+    r_cols = {c.name: rng_r.integers(-50, 50, 130).astype(np.int32)
+              for c in schema.columns}
+    r_cols["A1"] = np.arange(130, dtype=np.int32) - 7  # unique keys incl. 0
+
+    def run(engine, snapshot):
+        t = RelationalTable.from_columns(
+            schema, {k: v.copy() for k, v in cols.items()})
+        r_t = RelationalTable.from_columns(
+            schema, {k: v.copy() for k, v in r_cols.items()})
+        ts = t.now() if snapshot else None
+        return engine.execute_many(_mk_ops(engine, t, r_t, snapshot_ts=ts))
+
+    for revision in ("xla", "mlp"):
+        for snapshot in (False, True):
+            ref = run(RelationalMemoryEngine(revision=revision), snapshot)
+            for shards in (3, 4):
+                got = run(ShardedEngine(num_shards=shards, revision=revision),
+                          snapshot)
+                _assert_results_equal(
+                    ref, got, f"{revision} snap={snapshot} shards={shards}")
+
+
+def test_sharded_mixed_tick_one_fused_pass_per_shard(monkeypatch):
+    """A mixed-kind tick launches exactly one fused scan_multi per shard."""
+    from repro.core import RelationalTable
+    from repro.core.distributed import ShardedEngine
+    from repro.core.plan import plan
+    from repro.kernels import rme_scan_multi as KR
+    from repro.serve.query_server import QueryServer
+
+    schema, cols, _ = _sharded_case()
+    t = RelationalTable.from_columns(schema, cols)
+    engine = ShardedEngine(num_shards=4, revision="xla")
+    server = QueryServer(engine, snapshot_reads=False)
+
+    calls = []
+    orig = KR.scan_multi
+
+    def spy(words, requests, **kw):
+        calls.append((words.shape[0], len(tuple(requests))))
+        return orig(words, requests, **kw)
+
+    monkeypatch.setattr(KR, "scan_multi", spy)
+    for q in (plan(t).project("A1", "A2"),
+              plan(t).aggregate("A1", "sum"),
+              plan(t).groupby("A2", "A1", "sum", num_groups=8)):
+        server.submit(q)
+    server.run_tick()
+    assert len(calls) == 4, calls  # one fused pass per shard, nothing else
+    assert all(n_req == 3 for _, n_req in calls), calls
+    assert sum(rows for rows, _ in calls) == t.row_count
+    assert engine.stats.shared_scans == 1
+    snap = server.snapshot()
+    assert snap["engine_collective_ops"] == 2  # aggregate + group-by combines
+    assert snap["engine_bytes_collective"] == 3 * (8 + 8 * 2 * 4)
+
+
+def test_sharded_append_lands_only_in_owning_shard():
+    """An append uploads O(new rows) bytes to exactly one shard's chunks."""
+    from repro.core import RelationalTable
+    from repro.core.distributed import ShardedEngine
+    from repro.core.requests import AggregateOp
+
+    schema, cols, extra = _sharded_case()
+    t = RelationalTable.from_columns(schema, cols)
+    engine = ShardedEngine(num_shards=4, revision="xla")
+    engine.execute_many([AggregateOp(t, "A1")])  # full upload
+    before = [[c.segments for c in chunks]
+              for chunks in engine.rowstore.shard_parts(t)]
+
+    n0 = t.row_count
+    t.append(extra)
+    delta0 = engine.stats.bytes_uploaded_delta
+    engine.execute_many([AggregateOp(t, "A1")])  # syncs the delta
+    n_extra = len(next(iter(extra.values())))
+    assert (engine.stats.bytes_uploaded_delta - delta0
+            == n_extra * t.row_words * 4)
+    after = [[c.segments for c in chunks]
+             for chunks in engine.rowstore.shard_parts(t)]
+    changed = [s for s in range(4) if after[s] != before[s]]
+    assert len(changed) == 1, changed  # exactly one owning shard grew
+    new_segs = [seg for segs in after[changed[0]] for seg in segs
+                if segs not in before[changed[0]]]
+    assert (n0, n_extra) in new_segs
+
+
+def test_sharded_mvcc_snapshot_reads_under_concurrent_writes():
+    """A pinned read is byte-identical across backends while writes land."""
+    import numpy as np
+    from repro.core import RelationalMemoryEngine, RelationalTable
+    from repro.core.distributed import ShardedEngine
+    from repro.core.requests import AggregateOp, FilterOp, GroupByOp
+
+    schema, cols, extra = _sharded_case(seed=13)
+
+    def run(engine):
+        t = RelationalTable.from_columns(
+            schema, {k: v.copy() for k, v in cols.items()})
+        engine.execute_many([AggregateOp(t, "A1")])  # resident before writes
+        ts = t.now()
+        t.append({k: v.copy() for k, v in extra.items()})
+        t.delete(np.arange(20))
+        t.update(np.arange(30, 40),
+                 {"A1": np.full(10, 7, np.int32)})
+        pinned = engine.execute_many([
+            AggregateOp(t, "A1", snapshot_ts=ts),
+            GroupByOp(t, "A2", "A1", 8, snapshot_ts=ts),
+            FilterOp(engine.register(t, ("A1", "A2")), "A2", "gt", 0,
+                     snapshot_ts=ts),
+        ])
+        live = engine.execute_many([AggregateOp(t, "A1", snapshot_ts=t.now())])
+        return pinned + live
+
+    ref = run(RelationalMemoryEngine(revision="xla"))
+    got = run(ShardedEngine(num_shards=4, revision="xla"))
+    _assert_results_equal(ref, got, "mvcc-under-writes")
+
+
+def test_sharded_reset_drops_broadcast_cache():
+    import numpy as np
+    from repro.core import RelationalTable
+    from repro.core.distributed import ShardedEngine
+    from repro.core.requests import JoinOp
+
+    schema, cols, _ = _sharded_case()
+    rng = np.random.default_rng(17)
+    r_cols = {c.name: rng.integers(-50, 50, 64).astype(np.int32)
+              for c in schema.columns}
+    r_cols["A1"] = np.arange(64, dtype=np.int32)
+    t = RelationalTable.from_columns(schema, cols)
+    r_t = RelationalTable.from_columns(schema, r_cols)
+    engine = ShardedEngine(num_shards=4, revision="xla")
+    engine.execute_many(
+        [JoinOp(engine.register(t, ("A1", "A4")), "A1", "A4", r_t, "A3")])
+    assert engine._bcast_parts  # broadcast replicas cached
+    ops0 = engine.stats.collective_ops
+    engine.reset()
+    assert not engine._bcast_parts
+    # the next probe re-broadcasts (fresh build after reset)
+    engine.execute_many(
+        [JoinOp(engine.register(t, ("A1", "A4")), "A1", "A4", r_t, "A3")])
+    assert engine.stats.collective_ops > ops0
+
+
+def test_sharded_collective_bytes_scale_with_results_not_rows():
+    """Interconnect bytes are a function of result size only: growing the
+    table 4x leaves aggregate/group-by collective traffic unchanged."""
+    import numpy as np
+    from repro.core import RelationalTable, benchmark_schema
+    from repro.core.distributed import ShardedEngine
+    from repro.core.requests import AggregateOp, GroupByOp
+
+    schema = benchmark_schema(64, 4)
+    rng = np.random.default_rng(19)
+
+    def collective_bytes(n):
+        cols = {c.name: rng.integers(-50, 50, n).astype(np.int32)
+                for c in schema.columns}
+        t = RelationalTable.from_columns(schema, cols)
+        engine = ShardedEngine(num_shards=4, revision="xla")
+        engine.execute_many([AggregateOp(t, "A1"),
+                             GroupByOp(t, "A2", "A1", 16)])
+        assert engine.stats.bytes_from_dram > 0
+        return engine.stats.bytes_collective, engine.stats.bytes_from_dram
+
+    coll_small, dram_small = collective_bytes(500)
+    coll_large, dram_large = collective_bytes(2000)
+    assert dram_large > 3 * dram_small  # the scan itself does scale
+    assert coll_large == coll_small  # the interconnect does not
+
+
+def test_group_ids_agree_across_paths():
+    """Hostile keys (negative, near-overflow) group identically on the
+    fused kernel, the sharded engine, the oracle, and dist_groupby."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core import RelationalMemoryEngine, RelationalTable, benchmark_schema
+    from repro.core.distributed import ShardedEngine
+    from repro.core.requests import GroupByOp
+    from repro.kernels.common import group_ids
+    from repro.kernels.ref import groupby_sum_ref
+
+    schema = benchmark_schema(64, 4)
+    n, G = 512, 16
+    rng = np.random.default_rng(23)
+    hostile = np.concatenate([
+        rng.integers(-(2**31), 2**31 - 1, n - 8).astype(np.int32),
+        np.asarray([0, -1, -16, 2**31 - 1, -(2**31), 17, -17, 5], np.int32),
+    ])
+    cols = {c.name: rng.integers(-10, 10, n).astype(np.int32)
+            for c in schema.columns}
+    cols["A2"] = hostile
+    t1 = RelationalTable.from_columns(schema, {k: v.copy() for k, v in cols.items()})
+    t2 = RelationalTable.from_columns(schema, {k: v.copy() for k, v in cols.items()})
+
+    # the shared lowering is a floored modulo: always in [0, G)
+    g = np.asarray(group_ids(jnp.asarray(hostile), G))
+    assert ((g >= 0) & (g < G)).all()
+    np.testing.assert_array_equal(g, np.mod(hostile.astype(np.int64), G))
+
+    fused = RelationalMemoryEngine(revision="xla").execute_many(
+        [GroupByOp(t1, "A2", "A1", G)])[0]
+    sharded = ShardedEngine(num_shards=4, revision="xla").execute_many(
+        [GroupByOp(t2, "A2", "A1", G)])[0]
+    oracle = groupby_sum_ref(jnp.asarray(t1.words()), 1, 0, "int32", G)
+    from repro.core import distributed as D
+    from repro.launch.mesh import make_mesh
+
+    dist = D.dist_groupby(jnp.asarray(t1.words()), make_mesh((1,), ("data",)),
+                          group_word=1, agg_word=0, num_groups=G, valid_rows=n)
+    for a, b in ((fused, sharded), (fused, oracle), (fused, dist)):
+        np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+        np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+def test_sharded_engine_on_mesh_matches_single_device():
+    """The same backend on a real 8-device mesh: per-device placement plus
+    byte-identical results through the QueryServer."""
+    run_child("""
+        import numpy as np, jax
+        assert len(jax.devices()) == 8
+        from repro.core import RelationalMemoryEngine, RelationalTable, benchmark_schema
+        from repro.core.distributed import ShardedEngine
+        from repro.core.plan import plan
+        from repro.launch.mesh import make_mesh
+        from repro.serve.query_server import QueryServer
+
+        rng = np.random.default_rng(29)
+        schema = benchmark_schema(64, 4)
+        n = 1003
+        cols = {c.name: rng.integers(-50, 50, n).astype(np.int32)
+                for c in schema.columns}
+        extra = {c.name: rng.integers(-50, 50, 21).astype(np.int32)
+                 for c in schema.columns}
+
+        def serve(server):
+            t = RelationalTable.from_columns(
+                schema, {k: v.copy() for k, v in cols.items()})
+            tickets = [
+                server.submit(plan(t).project("A1", "A2")),
+                server.submit(plan(t).filter("A3", "gt", 3).aggregate("A1", "sum")),
+                server.submit(plan(t).groupby("A2", "A1", "sum", num_groups=8)),
+                server.submit_insert(t, extra),
+                server.submit(plan(t).aggregate("A1", "count")),
+            ]
+            server.run_tick()
+            return [tk.result(timeout=30) for tk in tickets], t
+
+        mesh = make_mesh((8,), ("data",))
+        ref_server = QueryServer(RelationalMemoryEngine(revision="xla"))
+        sh_engine = ShardedEngine(mesh=mesh, revision="xla")
+        sh_server = QueryServer(sh_engine)
+        ref, _ = serve(ref_server)
+        got, t = serve(sh_server)
+        for i, (a, b) in enumerate(zip(ref, got)):
+            fa = a if isinstance(a, tuple) else (a,)
+            fb = b if isinstance(b, tuple) else (b,)
+            for x, y in zip(fa, fb):
+                assert np.array_equal(np.asarray(x), np.asarray(y)), f"query {i}"
+        # every shard's buffers live on that shard's own device
+        for s, chunks in enumerate(sh_engine.rowstore.shard_parts(t)):
+            for c in chunks:
+                assert {d.id for d in c.words.devices()} == {s}
+        snap = sh_server.snapshot()
+        assert snap["engine_bytes_collective"] > 0
+        assert snap["engine_collective_ops"] > 0
+        print("OK")
+    """)
