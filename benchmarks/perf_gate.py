@@ -18,8 +18,10 @@ regresses beyond tolerance in its bad direction.  Two metric classes:
   swinging a serving-tick qps by 6x, so these cannot fail the gate by
   default: violations beyond ``tolerance × noise-factor`` (default 3x ⇒
   75%) are printed as warnings for a human to read.  ``--strict-noisy``
-  escalates them to failures (useful on a quiet dedicated runner).  Raw
-  latency percentiles are skipped outright.
+  escalates them to failures (useful on a quiet dedicated runner).  Per-lane
+  latency percentiles (any ``*_ms`` metric, e.g. ``express_p99_ms``) gate
+  the same way — lower-better, warn-only — except the legacy ``p50_ms``/
+  ``p95_ms`` keys, which stay skipped.
 
 Unknown metric names and non-numeric fields are skipped; a baseline row
 missing from the current report fails (a figure silently disappearing is a
@@ -38,6 +40,9 @@ import sys
 HIGHER_BETTER = {
     "bytes_ratio", "shared_ratio", "bytes_saved", "saving", "seed_vs_batch",
     "upload_ratio", "delta_hits",
+    # a streamed projection collapsing to fewer chunks means incremental
+    # delivery regressed (the count is exact at a fixed row count)
+    "stream_chunks",
 }
 LOWER_BETTER = {
     "device_bytes", "host_bytes", "solo_bytes", "served_bytes", "batch_bytes",
@@ -46,9 +51,12 @@ LOWER_BETTER = {
     "uploads_first", "uploads_now", "uploads_seed", "uploads_solo",
     "uploads_batch", "one_pass_scans", "vmem_bytes", "vmem_frac",
     "collective_ops",
+    # SLO counters from exact-count scenarios: more misses/refusals than the
+    # scenario constructs means admission control or deadline logic drifted
+    "deadline_misses", "shed", "degraded",
 }
 # Wall-clock-derived metrics: direction known, but smoke noise is real.
-NOISY_HIGHER = {"speedup", "qps", "tok_per_s"}
+NOISY_HIGHER = {"speedup", "qps", "tok_per_s", "express_speedup"}
 NOISY_LOWER = {"norm_vs_row"}
 # Workload parameters (not measurements) and raw single-iteration latency
 # percentiles (pure scheduler noise at smoke scale — the qps/speedup ratios
@@ -75,6 +83,11 @@ def classify(key: str) -> tuple[str, bool] | None:
     if key in NOISY_HIGHER:
         return "down", True
     if key in NOISY_LOWER:
+        return "up", True
+    if key.endswith("_ms"):
+        # per-lane latency percentiles (express_p99_ms, ...): wall-derived,
+        # lower is better — gated as warnings like qps/speedup, so the tail
+        # is watched without smoke-scheduler noise failing CI
         return "up", True
     if key.endswith("_bytes"):
         return "up", False

@@ -39,6 +39,7 @@ from . import (
     fig_mixed_batch,
     fig_scan_sharing,
     fig_selectivity,
+    fig_serving_pipeline,
     table2_vmem_budget,
     lm_step,
 )
@@ -60,6 +61,7 @@ MODULES = [
     fig_mixed_batch,
     fig_scan_sharing,
     fig_selectivity,
+    fig_serving_pipeline,
     table2_vmem_budget,
     lm_step,
 ]

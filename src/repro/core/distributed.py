@@ -31,6 +31,14 @@ Two layers live here:
   only the (small) cached build-partition set.  ``EngineStats`` charges the
   interconnect explicitly (``bytes_collective`` / ``collective_ops``) —
   O(result/build) bytes by construction, never O(rows).
+
+The serving loop's pipelined primitives are inherited unchanged:
+``execute_many_async`` wraps this class's ``execute_many`` (whose per-shard
+passes already enqueue without a host sync — blocking happens only when a
+result is pulled), and ``stream_project`` iterates ``device_chunks``, which
+:meth:`ShardedRowStore.chunks` yields in global row order (ownership
+segments sorted by starting row), so streamed chunks concatenate to the
+same packed block on both backends.
 """
 
 from __future__ import annotations

@@ -92,6 +92,11 @@ from .table import RelationalTable
 # the fused-pass tile guard never shrinks below this (grid overhead dominates)
 MIN_FUSED_BLOCK_ROWS = 32
 
+# streamed projections never slice finer than this: below it the per-chunk
+# launch overhead dwarfs the chunk itself and the bus-beat rounding per slice
+# starts to distort the Eq.(3) accounting
+MIN_STREAM_CHUNK_ROWS = 32
+
 # tail chunks are coalesced (device-side, no host transfer) beyond this count
 # so per-chunk pass overhead stays bounded under sustained appends
 MAX_TAIL_CHUNKS = 8
@@ -158,6 +163,34 @@ class EngineStats:
         self.bytes_join_build = 0
         self.bytes_collective = 0
         self.collective_ops = 0
+
+
+@dataclasses.dataclass
+class PassHandle:
+    """One enqueued op batch: the named half of the launch/finalize split.
+
+    ``execute_many`` itself never syncs with the host — every result it
+    returns is a device value (or a lazy cache hit) — but callers that want
+    to *overlap* work need that contract spelled out as an object they can
+    hold while doing something else.  :meth:`RelationalMemoryEngine.
+    execute_many_async` returns one of these; the pipelined QueryServer
+    stashes it for tick N while tick N+1 drains, compiles, and launches.
+
+    ``results`` is aligned with the submitted ops (same order, same per-op
+    contracts as ``execute_many``).  ``block_until_ready()`` is the only
+    blocking member — an explicit rendezvous for callers that want the
+    device drained without pulling any result to the host.
+    """
+
+    results: list
+
+    def block_until_ready(self) -> "PassHandle":
+        for r in self.results:
+            if isinstance(r, JoinResult):
+                jax.block_until_ready((r.s_proj, r.r_proj, r.matched))
+            elif r is not None:
+                jax.block_until_ready(r)
+        return self
 
 
 class ReorgCache:
@@ -623,6 +656,77 @@ class RelationalMemoryEngine:
         self.cache.put(self.view_key(table, geom), table.row_count, packed)
         return packed
 
+    def stream_project(self, view: EphemeralView,
+                       chunk_rows: int | None = None):
+        """Generator: the view's packed projection, one chunk at a time.
+
+        The streaming sibling of :meth:`materialize` — instead of one packed
+        block (and one blocking transfer for the consumer), the projection is
+        emitted incrementally per **resident chunk** of the delta-chunked
+        device row store, so a consumer (the QueryServer's streaming tickets)
+        can forward each piece as soon as its scan lands.  ``chunk_rows``
+        optionally re-slices resident chunks into at-most-that-many-row
+        pieces (never below ``MIN_STREAM_CHUNK_ROWS``): a never-appended
+        table is a single base chunk, and a bounded slice is what gives a
+        multi-megabyte output its incremental delivery.
+
+        Charging is per emitted chunk, with the same rules as a cold
+        materialization of that many rows: ``rows_projected``, Eq.(3)
+        ``bytes_from_dram`` over the sliced geometry, and packed
+        ``bytes_to_cpu`` — each charged when its chunk is yielded, so an
+        abandoned stream charges only what it actually moved.  A view the
+        reorg cache can serve (hot hit or delta serve) arrives as one free
+        chunk; a cold stream's concatenation lands in the cache after the
+        last chunk, exactly like :meth:`materialize`.  The sharded backend
+        streams unchanged: :meth:`device_chunks` there returns the per-shard
+        parts in global row order.
+
+        The *call* snapshots the resident chunk list eagerly (and triggers
+        any needed upload); only the per-chunk scans are lazy.  This is what
+        makes streams safe under pipelined serving — writes applied after
+        the call (e.g. by the next tick's ``begin_tick``) cannot leak into
+        a stream that was launched against the previous tick's state.
+        """
+        table, geom = view.table, view.geometry
+        served = self._project_from_cache(table, geom)
+        if served is not None:
+            return iter((served,))
+        self.stats.cold_misses += 1
+        if chunk_rows is not None:
+            chunk_rows = max(int(chunk_rows), MIN_STREAM_CHUNK_ROWS)
+        chunks = tuple(self.device_chunks(table))
+        return self._stream_chunks(table, geom, chunks, chunk_rows,
+                                   table.row_count)
+
+    def _stream_chunks(self, table: RelationalTable, geom, chunks,
+                       chunk_rows: int | None, row_count: int):
+        """The lazy half of :meth:`stream_project`: scan + charge + yield
+        per chunk, then cache the concatenation under the snapshotted
+        ``row_count`` (not the table's current one — the table may have
+        grown while the stream drained)."""
+        parts = []
+        for chunk in chunks:
+            start = 0
+            while start < chunk.shape[0]:
+                stop = (chunk.shape[0] if chunk_rows is None
+                        else min(start + chunk_rows, chunk.shape[0]))
+                piece = chunk[start:stop]
+                start = stop
+                cg = dataclasses.replace(geom, row_count=piece.shape[0])
+                packed = K.project_any(
+                    piece, cg, revision=self.revision,
+                    block_rows=self.block_rows, interpret=self.interpret,
+                )
+                moved = bytes_moved(cg)
+                self.stats.rows_projected += cg.row_count
+                self.stats.bytes_from_dram += moved["rme"]
+                self.stats.bytes_to_cpu += moved["columnar"]
+                parts.append(packed)
+                yield packed
+        if parts:
+            full = parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
+            self.cache.put(self.view_key(table, geom), row_count, full)
+
     def execute_many(self, ops: Sequence[ScanOp]) -> list:
         """Serve a heterogeneous op batch with one shared scan per table.
 
@@ -689,6 +793,19 @@ class RelationalMemoryEngine:
                 results[i] = (self._finish_join(ops[i], out)
                               if isinstance(ops[i], JoinOp) else out)
         return results
+
+    def execute_many_async(self, ops: Sequence[ScanOp]) -> PassHandle:
+        """:meth:`execute_many` wrapped in a :class:`PassHandle`.
+
+        Identical serving and accounting — one heterogeneous shared pass per
+        table, results in op order — but the return type states the async
+        contract explicitly: nothing has synced with the host, and the
+        caller may hold the handle across arbitrary host work (the pipelined
+        serving tick compiles and launches tick N+1 while tick N's handle is
+        outstanding).  Works unchanged on the sharded backend, whose
+        per-shard passes also enqueue without host syncs.
+        """
+        return PassHandle(self.execute_many(ops))
 
     def materialize_many(self, views: Sequence[EphemeralView]) -> list[jax.Array]:
         """Materialize a batch of views with one shared scan per table.

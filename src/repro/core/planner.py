@@ -396,6 +396,16 @@ class PhysicalQuery:
     * ``finalize(token)`` — produce the user-facing result; the only step
       allowed to pull scalars to the host.
 
+    A query compiled with ``stream=True`` (projection-shaped, rme path)
+    additionally carries ``stream`` — a zero-argument callable returning the
+    chunk generator of :meth:`RelationalMemoryEngine.stream_project`.  Such a
+    query has no scan ops: its work is the incremental finalize itself, one
+    packed chunk per resident (or re-sliced) row-store chunk, and the
+    serving layer forwards each chunk to the client's streaming ticket as it
+    lands instead of blocking on one monolithic finalize.  ``run()`` on a
+    streamed query drains the generator and concatenates — byte-identical to
+    the blocking route.
+
     ``run()`` is the blocking one-shot spelling (what the q0–q5 operator
     wrappers call).
     """
@@ -408,6 +418,7 @@ class PhysicalQuery:
     ops: tuple[ScanOp, ...]
     _launch: Callable[[Sequence[Any]], Any]
     _finalize: Callable[[Any], Any]
+    stream: Callable[[], Any] | None = None  # chunk-generator factory
 
     @property
     def views(self) -> tuple[EphemeralView, ...]:
@@ -428,6 +439,15 @@ class PhysicalQuery:
         return self._finalize(token)
 
     def run(self) -> Any:
+        if self.stream is not None:
+            parts = list(self.stream())
+            if len(parts) == 1:
+                return parts[0]
+            out_words = sum(self.shape.table.schema.column(c).words
+                            for c in self.shape.columns)
+            if not parts:  # an empty table streams zero chunks
+                return jnp.zeros((0, out_words), dtype=jnp.int32)
+            return jnp.concatenate(parts, 0)
         results = self.engine.execute_many(list(self.ops)) if self.ops else []
         return self._finalize(self._launch(results))
 
@@ -609,10 +629,41 @@ def _resident_full_rows(engine: RelationalMemoryEngine, table, cols) -> jax.Arra
 
 def _compile_project(
     engine: RelationalMemoryEngine, shape: QueryShape, path: str, colstore,
-    snapshot_ts: int | None = None,
+    snapshot_ts: int | None = None, stream: bool = False,
+    stream_chunk_rows: int | None = None,
 ) -> PhysicalQuery:
     table, cols = shape.table, shape.columns
     pred_col, pred_op, pred_k = _pred_args(shape.pred)
+
+    if stream:
+        # incremental delivery: the packed projection arrives one row-store
+        # chunk at a time (RelationalMemoryEngine.stream_project), so a
+        # large output resolves its ticket chunk-by-chunk instead of in one
+        # blocking finalize.  The streamed contract is the plain packed
+        # block — per-chunk, with no visibility channel — so only the
+        # predicate-free, snapshot-free rme projection qualifies; anything
+        # else must say what a partial (masked) chunk means and doesn't.
+        if path != "rme":
+            raise PlanError(f"streamed results need the rme path, not {path!r}")
+        if shape.pred is not None or snapshot_ts is not None:
+            raise PlanError(
+                "streamed results serve plain projections only — a "
+                "predicate or MVCC snapshot needs the (packed, mask) "
+                "contract, which has no per-chunk spelling"
+            )
+        if len(cols) > MAX_ENABLED_COLUMNS:
+            raise PlanError(
+                f"streamed projection of {len(cols)} columns exceeds the "
+                f"configuration port's Q cap ({MAX_ENABLED_COLUMNS})"
+            )
+        view = engine.register(table, cols)
+        return PhysicalQuery(
+            engine, shape, path, route="stream-project", cost=None, ops=(),
+            _launch=lambda _: None, _finalize=lambda t: t,
+            stream=lambda: engine.stream_project(
+                view, chunk_rows=stream_chunk_rows
+            ),
+        )
 
     if shape.pred is not None:
         # fused selection+projection: rows failing the predicate are zeroed
@@ -922,6 +973,8 @@ def compile_plan(
     snapshot_ts: int | None = None,
     join_route: str | None = None,
     backend: str | None = None,
+    stream: bool = False,
+    stream_chunk_rows: int | None = None,
 ) -> PhysicalQuery:
     """Lower a logical plan to a :class:`PhysicalQuery` on ``path``.
 
@@ -957,6 +1010,14 @@ def compile_plan(
     dispatch dynamically — so the parameter exists to fail fast when a plan
     meant for a sharded deployment is handed a single-device engine (or
     vice versa), not to produce different plans.
+
+    ``stream=True`` compiles a projection-shaped rme plan to the
+    ``stream-project`` route: the :class:`PhysicalQuery` carries a chunk
+    generator (:meth:`RelationalMemoryEngine.stream_project`) instead of scan
+    ops, and the result arrives one packed chunk per resident row-store
+    chunk (``stream_chunk_rows`` bounds the slice height).  Predicated,
+    snapshot-pinned, or host-path plans cannot stream — the per-chunk
+    contract is the plain packed block only — and raise :class:`PlanError`.
     """
     if path not in ("rme", "row", "col"):
         raise ValueError(f"unknown path {path!r}; want rme, row or col")
@@ -967,6 +1028,11 @@ def compile_plan(
         )
     _check_snapshot_path(path, snapshot_ts)
     shape = decompose(node)
+    if stream and shape.kind != "project":
+        raise PlanError(
+            f"stream=True serves projection-shaped plans only, not "
+            f"{shape.kind!r} (scalar/grouped results have nothing to chunk)"
+        )
     if shape.kind == "aggregate":
         return _compile_aggregate(engine, shape, path, colstore, snapshot_ts)
     if shape.kind == "groupby":
@@ -974,4 +1040,5 @@ def compile_plan(
     if shape.kind == "join":
         return _compile_join(engine, shape, path, colstore, right_colstore,
                              snapshot_ts, join_route)
-    return _compile_project(engine, shape, path, colstore, snapshot_ts)
+    return _compile_project(engine, shape, path, colstore, snapshot_ts,
+                            stream, stream_chunk_rows)

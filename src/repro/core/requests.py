@@ -14,6 +14,16 @@ ops); de-duplication happens at the kernel-request level, where equal lowered
 requests — same enabled words, same predicate, same snapshot — share one
 output slot in the fused pass.
 
+Every op also knows its **result size**: :meth:`result_bytes` is the bytes
+of the op's own output under its single-op contract (packed block + validity
+mask for filters, the 8-byte ``[sum, count]`` pair for aggregates, ``(G, 2)``
+partials for group-bys, the three per-probe-row arrays for joins).  This is
+an *output* estimate — orthogonal to the bus-beat scan cost the engine's PMU
+charges — and it is what the serving layer's priority lanes account against:
+an express ticket's defining property is a result small enough to finalize
+immediately, and the per-lane ``result_bytes`` counters in ``ServerStats``
+make that visible.
+
 Chunk and snapshot semantics: a lowered request is *chunk-agnostic* — it
 names word offsets within a row, never row positions — so ``execute_many``
 can stream the same request tuple over every resident chunk of a
@@ -80,6 +90,10 @@ class ProjectOp:
     def lower(self) -> KR.ProjectRequest:
         return KR.ProjectRequest(self.view.geometry)
 
+    def result_bytes(self) -> int:
+        g = self.view.geometry
+        return g.row_count * g.out_bytes_per_row
+
 
 def _pred_fields(table: RelationalTable, pred_col: str | None, pred_op: str,
                  pred_k, snapshot_ts: int | None, default_word: int,
@@ -126,6 +140,11 @@ class FilterOp:
             ),
         )
 
+    def result_bytes(self) -> int:
+        # (packed block, bool validity mask) — the rme_filter contract
+        g = self.view.geometry
+        return g.row_count * (g.out_bytes_per_row + 1)
+
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class AggregateOp:
@@ -149,6 +168,9 @@ class AggregateOp:
             **_pred_fields(self.table, self.pred_col, self.pred_op,
                            self.pred_k, self.snapshot_ts, agg_word, agg_dtype),
         )
+
+    def result_bytes(self) -> int:
+        return 8  # the [sum, count] float pair
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -176,6 +198,9 @@ class GroupByOp:
             **_pred_fields(self.table, self.pred_col, self.pred_op,
                            self.pred_k, self.snapshot_ts, agg_word, agg_dtype),
         )
+
+    def result_bytes(self) -> int:
+        return self.num_groups * 8  # (G, 2) float partials
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -220,6 +245,10 @@ class JoinOp:
             **_pred_fields(self.table, self.key, "none", 0,
                            self.snapshot_ts, 0, "int32"),
         )
+
+    def result_bytes(self) -> int:
+        # JoinResult: s_proj (4B) + r_proj (4B) + matched (1B) per probe row
+        return self.view.geometry.row_count * 9
 
 
 ScanOp = ProjectOp | FilterOp | AggregateOp | GroupByOp | JoinOp

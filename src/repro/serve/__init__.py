@@ -1,13 +1,27 @@
 """Serving substrate: LM prefill/decode sessions + the relational QueryServer."""
 
 from .engine import ServeSession, make_decode_step, make_prefill
-from .query_server import QueryServer, QueryTicket, ServerStats
+from .query_server import (
+    DeadlineExceeded,
+    LaneStats,
+    LatencyReservoir,
+    QueryServer,
+    QueryTicket,
+    ServerOverloaded,
+    ServerStats,
+    StreamingTicket,
+)
 
 __all__ = [
+    "DeadlineExceeded",
+    "LaneStats",
+    "LatencyReservoir",
     "QueryServer",
     "QueryTicket",
     "ServeSession",
+    "ServerOverloaded",
     "ServerStats",
+    "StreamingTicket",
     "make_decode_step",
     "make_prefill",
 ]

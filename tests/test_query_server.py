@@ -188,3 +188,252 @@ def test_served_join_shares_scans(table):
                                   np.asarray(ref.matched))
     np.testing.assert_array_equal(np.asarray(res.r_proj),
                                   np.asarray(ref.r_proj))
+
+
+# ---------------------------------------------------------------------------
+# Pipelined serving: lanes, deadlines, backpressure, streaming, reservoirs
+# ---------------------------------------------------------------------------
+
+def _cols(seed, n, schema):
+    rng = np.random.default_rng(seed)
+    return {c.name: rng.integers(-100, 100, n).astype(np.int32)
+            for c in schema.columns}
+
+
+def test_express_completes_while_bulk_in_flight(table):
+    """begin_tick serves express tickets to completion while the bulk lane's
+    (same fused) pass is still awaiting finish_tick."""
+    eng = RelationalMemoryEngine()
+    server = QueryServer(eng)
+    t_bulk = server.submit(plan(table).project("A1", "A2", "A3"))
+    t_exp = server.submit(plan(table).sum("A1"))
+    assert t_exp.lane == "express" and t_bulk.lane == "bulk"
+
+    tick = server.begin_tick()
+    assert t_exp.done() and not t_bulk.done()
+    assert isinstance(t_exp.result(timeout=1), float)
+
+    assert server.finish_tick(tick) == 2
+    assert t_bulk.done()
+    # lanes share one fused pass — the one-pass-per-tick invariant holds
+    assert eng.stats.shared_scans == 1
+    snap = server.snapshot()
+    assert snap["express_served"] == 1 and snap["bulk_served"] == 1
+    assert snap["express_p99_ms"] > 0 and snap["bulk_p99_ms"] > 0
+
+
+def test_deadline_missed_fails_typed_not_hung(table):
+    """An expired ticket resolves promptly with DeadlineExceeded (a
+    TimeoutError) — and healthy co-tick tickets are unaffected."""
+    from repro.serve import DeadlineExceeded
+
+    server = QueryServer(RelationalMemoryEngine())
+    doomed = server.submit(plan(table).project("A1"), deadline_s=0.0)
+    fine = server.submit(plan(table).project("A2"))
+    server.run_tick()
+    assert doomed.done()
+    with pytest.raises(DeadlineExceeded):
+        doomed.result(timeout=1)
+    assert isinstance(DeadlineExceeded("x"), TimeoutError)
+    assert fine.result(timeout=5) is not None
+    snap = server.snapshot()
+    assert snap["deadline_misses"] == 1
+    assert snap["bulk_deadline_misses"] == 1
+    assert server.stats.failed == 1 and server.stats.served == 1
+
+
+def _mixed_workload(server, t, other):
+    return [
+        server.submit(plan(t).project("A1", "A3")),
+        server.submit(plan(t).filter("A5", "gt", 10).project("A1", "A2")),
+        server.submit(plan(t).sum("A2")),
+        server.submit(plan(t).groupby("A2", "A1", "avg", 16)),
+        server.submit(plan(other).project("A2", "A4")),
+        server.submit(plan(other).filter("A4", "lt", 5).sum("A1")),
+    ]
+
+
+@pytest.mark.parametrize("backend", ["single", "sharded"])
+def test_overlapped_ticks_match_serial(table, backend):
+    """Pipelined (double-buffered) drain is byte-identical to serial ticks,
+    on both backends."""
+    def mk_engine():
+        if backend == "sharded":
+            from repro.core.distributed import ShardedEngine
+            return ShardedEngine(num_shards=3, revision="xla")
+        return RelationalMemoryEngine()
+
+    def run(pipeline):
+        t = RelationalTable.from_columns(
+            table.schema, _cols(3, 300, table.schema))
+        other = RelationalTable.from_columns(
+            table.schema, _cols(4, 200, table.schema))
+        # max_batch=2 forces several ticks, so the pipelined drain overlaps
+        server = QueryServer(mk_engine(), max_batch=2, pipeline=pipeline)
+        tickets = _mixed_workload(server, t, other)
+        assert server.drain() == len(tickets)
+        return [tk.result(timeout=30) for tk in tickets], server
+
+    serial, _ = run(pipeline=False)
+    piped, server = run(pipeline=True)
+    assert server.stats.ticks_overlapped > 0  # it really double-buffered
+    for i, (a, b) in enumerate(zip(serial, piped)):
+        fa = a if isinstance(a, tuple) else (a,)
+        fb = b if isinstance(b, tuple) else (b,)
+        for x, y in zip(fa, fb):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), f"query {i}"
+
+
+@pytest.mark.parametrize("backend", ["single", "sharded"])
+def test_streamed_chunks_concat_to_blocking_result(table, backend):
+    """A streamed projection's chunks concatenate to exactly the blocking
+    result, and arrive as more than one piece."""
+    if backend == "sharded":
+        from repro.core.distributed import ShardedEngine
+        engine = ShardedEngine(num_shards=3, revision="xla")
+    else:
+        engine = RelationalMemoryEngine()
+    t = RelationalTable.from_columns(table.schema, _cols(5, 400, table.schema))
+    server = QueryServer(engine)
+
+    blocking = server.submit(plan(t).project("A1", "A4"))
+    server.drain()
+    expect = np.asarray(blocking.result(timeout=30))
+
+    # fresh server+engine so the stream runs cold, not from the warm cache
+    if backend == "sharded":
+        engine = ShardedEngine(num_shards=3, revision="xla")
+    else:
+        engine = RelationalMemoryEngine()
+    t2 = RelationalTable.from_columns(table.schema, _cols(5, 400, table.schema))
+    server = QueryServer(engine)
+    tk = server.submit(plan(t2).project("A1", "A4"), stream=True,
+                       stream_chunk_rows=64)
+    from repro.serve import StreamingTicket
+    assert isinstance(tk, StreamingTicket)
+    server.drain()
+    chunks = list(tk.chunks(timeout=5))
+    assert len(chunks) > 1
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(c) for c in chunks]), expect)
+    np.testing.assert_array_equal(np.asarray(tk.result(timeout=5)), expect)
+    snap = server.snapshot()
+    assert snap["streams"] == 1
+    assert snap["stream_chunks"] == len(chunks)
+
+
+def test_stream_yields_chunks_before_resolution(table):
+    """chunks() observes early chunks while the pass is still in flight:
+    after begin_tick the stream is launched but unresolved."""
+    server = QueryServer(RelationalMemoryEngine())
+    tk = server.submit(plan(table).project("A1"), stream=True,
+                       stream_chunk_rows=64)
+    tick = server.begin_tick()
+    assert not tk.done()  # launched, not finalized
+    server.finish_tick(tick)
+    assert tk.done()
+    assert len(list(tk.chunks(timeout=1))) > 1
+
+
+def test_stream_of_written_table_fails_honestly(table):
+    """A streamed read of a table this server has written compiles with the
+    tick snapshot, which the stream contract cannot carry — the ticket must
+    fail with PlanError, never return unversioned rows."""
+    from repro.core.plan import PlanError
+
+    t = RelationalTable.from_columns(table.schema, _cols(6, 100, table.schema))
+    server = QueryServer(RelationalMemoryEngine())
+    server.submit_delete(t, np.array([0, 1]))
+    tk = server.submit(plan(t).project("A1"), stream=True)
+    server.drain()
+    with pytest.raises(PlanError):
+        tk.result(timeout=5)
+
+
+def test_backpressure_shed_at_bound(table):
+    from repro.serve import ServerOverloaded
+
+    server = QueryServer(RelationalMemoryEngine(), max_queue=4)
+    tks = [server.submit(plan(table).project("A1")) for _ in range(4)]
+    with pytest.raises(ServerOverloaded):
+        server.submit(plan(table).project("A2"))
+    assert server.stats.shed == 1
+    server.drain()
+    for tk in tks:
+        assert tk.result(timeout=5) is not None
+
+
+def test_backpressure_degrade_then_hard_shed(table):
+    from repro.serve import ServerOverloaded
+
+    server = QueryServer(RelationalMemoryEngine(), max_queue=2,
+                         overload="degrade")
+    server.submit(plan(table).sum("A1"))
+    server.submit(plan(table).sum("A2"))
+    # at the bound: demoted to bulk, deadline stripped, not refused
+    demoted = server.submit(plan(table).sum("A3"), deadline_s=10.0)
+    assert demoted.lane == "bulk" and demoted.deadline_s is None
+    assert server.stats.degraded == 1
+    server.submit(plan(table).sum("A4"))  # depth 4 == 2 * bound
+    with pytest.raises(ServerOverloaded):  # hard shed keeps memory bounded
+        server.submit(plan(table).sum("A5"))
+    # writes are never degraded — refused outright at the bound
+    with pytest.raises(ServerOverloaded):
+        server.submit_insert(table, _cols(7, 4, table.schema))
+    assert server.stats.shed == 2
+    server.drain()
+
+
+def test_lanes_off_restores_single_fifo(table):
+    server = QueryServer(RelationalMemoryEngine(), lanes=False)
+    tk = server.submit(plan(table).sum("A1"))
+    assert tk.lane == "bulk"
+    tick = server.begin_tick()
+    assert not tk.done()  # no express fast path
+    server.finish_tick(tick)
+    assert isinstance(tk.result(timeout=5), float)
+
+
+def test_latency_reservoir_exact_small_n():
+    from repro.serve import LatencyReservoir
+
+    r = LatencyReservoir(cap=512)
+    values = list(range(1, 101))
+    rng = np.random.default_rng(8)
+    rng.shuffle(values)
+    for v in values:
+        r.add(float(v))
+    assert r.count == 100
+    assert r.sum == sum(range(1, 101))
+    assert r.max == 100.0
+    # nearest-rank percentiles are exact below the cap
+    assert r.percentile(50) == 50.0
+    assert r.percentile(95) == 95.0
+    assert r.percentile(99) == 99.0
+    assert r.percentile(100) == 100.0
+
+
+def test_latency_reservoir_bounded_memory():
+    from repro.serve import LatencyReservoir
+
+    r = LatencyReservoir(cap=64)
+    n = 100_000
+    for i in range(n):
+        r.add(float(i % 1000))
+    assert r.count == n  # exact totals survive the sampling
+    assert r.sum == sum(float(i % 1000) for i in range(n))
+    assert r.max == 999.0
+    assert len(r._samples) == 64  # memory stays at the cap
+    assert 0.0 <= r.percentile(50) <= 999.0
+
+
+def test_snapshot_back_compat_keys(table):
+    """Historical snapshot/stat consumers keep working after the reservoir
+    rework: mean/max read through the reservoir-backed properties."""
+    server = QueryServer(RelationalMemoryEngine())
+    server.submit(plan(table).project("A1"))
+    server.drain()
+    snap = server.snapshot()
+    assert snap["max_latency_s"] >= snap["mean_latency_s"] > 0
+    assert server.stats.latency_sum_s > 0
+    assert server.stats.latency_max_s >= server.stats.latency_sum_s / 1
