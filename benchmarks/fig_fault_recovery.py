@@ -1,0 +1,331 @@
+"""Fault-tolerance figure: instrumented-path overhead + recovery cost per site.
+
+Two claims of the reliability layer (docs/reliability.md), both **checked**
+in-module rather than just plotted, so CI smoke fails on a drift:
+
+1. *Fault-free overhead* — the injection hooks (``faults.maybe_fault`` at
+   every site) are a dict lookup when no plan is installed.  The same mixed
+   tick with hooks idle vs. a non-matching plan installed must move
+   byte-identical traffic (``overhead_delta_bytes == 0``, a deterministic
+   gate metric) and cost at most 5% wall time (min-of-N interleaved, a hard
+   in-module assert — the figure raises, like fig_dist_scaling's
+   O(results) collective check).
+
+2. *Recovery cost per site* — one scenario per injection site, each
+   verifying the recovered answer is byte-identical to a fault-free run
+   (or typed, for quarantine paths) and emitting the exact counters the
+   recovery burned: ``retries``/``failovers`` (deterministic exact counts,
+   like the SLO counters) and ``failover_bytes``/``wal_bytes``
+   (deterministic byte metrics, gated from day one by the ``*_bytes``
+   rule).
+"""
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    FaultPlan, RelationalMemoryEngine, RelationalTable, WriteAheadLog,
+    fault_plan, plan,
+)
+from repro.core.distributed import ShardedEngine
+from repro.core.requests import AggregateOp, FilterOp, GroupByOp, ProjectOp
+from repro.serve.query_server import QueryServer
+
+from . import common
+from .common import emit, make_benchmark_table
+
+OVERHEAD_PAIRS = 25
+OVERHEAD_LIMIT = 1.05  # the ≤5% fault-free instrumentation budget
+
+
+def _mixed_ops(eng, t):
+    return [
+        ProjectOp(eng.register(t, ("A1", "A5"))),
+        FilterOp(eng.register(t, ("A1", "A3")), "A3", "gt", 10),
+        AggregateOp(t, "A1"),
+        GroupByOp(t, "A2", "A1", 16),
+    ]
+
+
+def _assert_same(a, b, what):
+    for x, y in zip(a, b):
+        xs = x if isinstance(x, tuple) else (x,)
+        ys = y if isinstance(y, tuple) else (y,)
+        for xi, yi in zip(xs, ys):
+            if not np.array_equal(np.asarray(xi), np.asarray(yi)):
+                raise AssertionError(f"{what}: recovered result diverged "
+                                     "from the fault-free run")
+
+
+def _never_fires():
+    # a real installed plan whose spec can never match: the hooks take
+    # their slow path (context assembly + spec scan) on every hit
+    return FaultPlan().inject("upload", times=None, table=-1)
+
+
+def bench_overhead(n_rows: int) -> None:
+    t = make_benchmark_table(n_rows=n_rows, seed=5)
+    eng_idle = RelationalMemoryEngine(revision="xla")
+    eng_inst = RelationalMemoryEngine(revision="xla")
+    ops_idle = _mixed_ops(eng_idle, t)
+    ops_inst = _mixed_ops(eng_inst, t)
+
+    out_idle = eng_idle.execute_many(ops_idle)  # cold: uploads
+    with fault_plan(_never_fires()):
+        out_inst = eng_inst.execute_many(ops_inst)
+    _assert_same(out_idle, out_inst, "fault-free overhead")
+    delta_bytes = abs(eng_inst.stats.bytes_from_dram
+                      - eng_idle.stats.bytes_from_dram)
+    if delta_bytes:
+        raise AssertionError(
+            f"idle fault hooks changed DRAM traffic by {delta_bytes} bytes")
+
+    # wall overhead: the SAME warm engine with the real hooks (no plan
+    # installed — the production configuration) vs the hooks stubbed to a
+    # no-op, i.e. the un-instrumented path.  Each sample batches K serves
+    # (a sub-millisecond warm serve alone is all scheduler noise); arms
+    # interleave and take the min sample, so a background stall hits both
+    # arms alike.
+    from repro.core import faults
+
+    batch = 20 if common.SMOKE else 4
+    real_hook = faults.maybe_fault
+
+    def _sample(stubbed: bool) -> float:
+        faults.maybe_fault = ((lambda site, **ctx: None) if stubbed
+                              else real_hook)
+        try:
+            t0 = time.perf_counter()
+            for _ in range(batch):
+                eng_inst.execute_many(ops_inst)
+            return time.perf_counter() - t0
+        finally:
+            faults.maybe_fault = real_hook
+
+    _sample(False)  # warmup
+    pairs = []
+    bare, inst = float("inf"), float("inf")
+    for i in range(OVERHEAD_PAIRS):
+        first_stubbed = i % 2 == 0  # alternate order: drift cancels
+        a = _sample(first_stubbed)
+        b = _sample(not first_stubbed)
+        bare_i, inst_i = (a, b) if first_stubbed else (b, a)
+        bare = min(bare, bare_i)
+        inst = min(inst, inst_i)
+        pairs.append(inst_i / max(bare_i, 1e-12))
+    # two robust estimators of the true ratio, each noisy differently:
+    # median of adjacent-pair ratios (a background stall lands on both
+    # members of its pair, or skews one odd pair the median drops) and
+    # best-vs-best (scheduler noise only ever ADDS time, so the min sample
+    # per arm is the cleanest single observation).  Noise inflates both
+    # upward; a genuine regression inflates both — gate on the smaller.
+    ratio = min(float(np.median(pairs)), inst / max(bare, 1e-12))
+    if ratio > OVERHEAD_LIMIT:
+        raise AssertionError(
+            f"fault-free instrumentation overhead {ratio:.3f}x exceeds "
+            f"the {OVERHEAD_LIMIT:.2f}x budget")
+    emit(
+        "fig_fault/overhead",
+        inst / batch * 1e6,
+        f"rows={n_rows},overhead_delta_bytes={delta_bytes},"
+        f"overhead_pct={max(ratio - 1.0, 0.0) * 100:.2f}",
+    )
+
+
+def _timed_drain(srv):
+    t0 = time.perf_counter()
+    srv.drain()
+    return (time.perf_counter() - t0) * 1e6
+
+
+def bench_server_site(site, n_rows, make_query, **inject_kw) -> None:
+    """One server-recovered site: transient fault, bounded retry, result
+    byte-identical to a fault-free serve of the same plan."""
+    t = make_benchmark_table(n_rows=n_rows, seed=6)
+    ref_srv = QueryServer(RelationalMemoryEngine(revision="xla"))
+    tk = make_query(ref_srv, t)
+    ref_srv.drain()
+    ref = tk.result()
+
+    srv = QueryServer(RelationalMemoryEngine(revision="xla"))
+    with fault_plan(FaultPlan().inject(site, **inject_kw)):
+        tk = make_query(srv, t)
+        us = _timed_drain(srv)
+    _assert_same([tk.result()], [ref], f"site {site}")
+    snap = srv.snapshot()
+    emit(
+        f"fig_fault/{site}",
+        us,
+        f"rows={n_rows},retries={snap['retries']},served={snap['served']},"
+        f"poisoned={snap['poisoned']}",
+    )
+
+
+def bench_shard_sites(n_rows: int) -> None:
+    t = make_benchmark_table(n_rows=n_rows, seed=7)
+    ops = lambda: [AggregateOp(t, "A1"), GroupByOp(t, "A2", "A1", 16)]
+    ref = RelationalMemoryEngine(revision="xla").execute_many(ops())
+
+    # transient shard fault: one bounded retry, zero bytes re-shipped
+    eng = ShardedEngine(num_shards=2, revision="xla")
+    with fault_plan(FaultPlan().inject("shard_pass", shard=1)):
+        t0 = time.perf_counter()
+        out = eng.execute_many(ops())
+        us = (time.perf_counter() - t0) * 1e6
+    _assert_same(out, ref, "shard_pass transient")
+    emit(
+        "fig_fault/shard_pass",
+        us,
+        f"rows={n_rows},retries={eng.stats.retries},"
+        f"failovers={eng.stats.failovers},"
+        f"failover_bytes={eng.stats.bytes_failover}",
+    )
+
+    # permanent shard fault: the shard's chunks re-execute on the root
+    # device — the recovery cost is exactly the shard's resident bytes
+    eng = ShardedEngine(num_shards=2, revision="xla")
+    with fault_plan(FaultPlan().inject("shard_pass", kind="permanent",
+                                       times=None, shard=0)):
+        t0 = time.perf_counter()
+        out = eng.execute_many(ops())
+        us = (time.perf_counter() - t0) * 1e6
+    _assert_same(out, ref, "shard_pass failover")
+    emit(
+        "fig_fault/shard_failover",
+        us,
+        f"rows={n_rows},failovers={eng.stats.failovers},"
+        f"failover_bytes={eng.stats.bytes_failover},"
+        f"quarantined={sum(h == 'quarantined' for h in eng.shard_health())}",
+    )
+
+    # collective combine: reduction-only retry (no re-scan, no re-upload)
+    eng = ShardedEngine(num_shards=2, revision="xla")
+    with fault_plan(FaultPlan().inject("collective_combine")):
+        t0 = time.perf_counter()
+        out = eng.execute_many(ops())
+        us = (time.perf_counter() - t0) * 1e6
+    _assert_same(out, ref, "collective_combine")
+    emit(
+        "fig_fault/collective_combine",
+        us,
+        f"rows={n_rows},retries={eng.stats.retries},"
+        f"failover_bytes={eng.stats.bytes_failover}",
+    )
+
+
+def bench_breaker(n_rows: int) -> None:
+    """Persistent lowering failure: the breaker trips the route to the XLA
+    fallback — every serve still answers byte-identically."""
+    t = make_benchmark_table(n_rows=n_rows, seed=8)
+    ops = lambda: [AggregateOp(t, "A1"), GroupByOp(t, "A2", "A1", 16)]
+    ref = RelationalMemoryEngine(revision="xla").execute_many(ops())
+    eng = RelationalMemoryEngine(revision="mlp", breaker_threshold=2,
+                                 breaker_cooldown=4)
+    with fault_plan(FaultPlan().inject("lowering", times=None, op="scan")):
+        t0 = time.perf_counter()
+        for _ in range(4):
+            _assert_same(eng.execute_many(ops()), ref, "lowering breaker")
+        us = (time.perf_counter() - t0) * 1e6 / 4
+    snap = eng.breaker.snapshot()
+    emit(
+        "fig_fault/lowering",
+        us,
+        f"rows={n_rows},breaker_trips={snap['breaker_trips']},"
+        f"breaker_fallbacks={snap['breaker_fallbacks']},"
+        f"breaker_open={snap['breaker_open']}",
+    )
+
+
+def bench_join_build(n_rows: int) -> None:
+    """Transient fault while hash-partitioning the build side: the server's
+    bounded retry rebuilds; the probe answer stays byte-identical."""
+    from repro.core import operators as ops
+
+    t = make_benchmark_table(n_rows=n_rows, seed=10)
+    rt = make_benchmark_table(n_rows=max(n_rows // 8, 32), seed=11)
+    q = plan(t).join(rt, key="A2", left_proj="A1", right_proj="A3").build()
+
+    ops.clear_join_build_cache()
+    ref_srv = QueryServer(RelationalMemoryEngine(revision="xla"))
+    tk = ref_srv.submit(q)
+    ref_srv.drain()
+    ref = tk.result()
+
+    ops.clear_join_build_cache()
+    srv = QueryServer(RelationalMemoryEngine(revision="xla"))
+    with fault_plan(FaultPlan().inject("join_build")):
+        tk = srv.submit(q)
+        us = _timed_drain(srv)
+    out = tk.result()
+    _assert_same([out.s_proj, out.r_proj, out.matched],
+                 [ref.s_proj, ref.r_proj, ref.matched], "join_build")
+    snap = srv.snapshot()
+    emit(
+        "fig_fault/join_build",
+        us,
+        f"rows={n_rows},retries={snap['retries']},served={snap['served']}",
+    )
+
+
+def bench_wal(n_rows: int) -> None:
+    """WAL durability: log a write workload, crash (corrupt the tail),
+    recover, and verify the recovered table is byte-identical to the
+    surviving prefix state.  ``wal_bytes`` is the log's exact footprint."""
+    from repro.core import benchmark_schema
+
+    rng = np.random.default_rng(9)
+    schema = benchmark_schema(64, 4)
+    schema_cols = lambda n: {
+        c.name: rng.integers(-100, 100, n).astype(np.int32)
+        for c in schema.columns
+    }
+    t = RelationalTable.from_columns(schema, schema_cols(n_rows))
+    wal = WriteAheadLog()
+    srv = QueryServer(RelationalMemoryEngine(revision="xla"), wal=wal)
+    srv.submit_insert(t, schema_cols(16))
+    srv.submit_delete(t, np.array([1, 3], np.int64))
+    srv.drain()
+    pre_update = t._words[: t.row_count].copy()
+    srv.submit_update(t, np.array([0], np.int64),
+                      {"A1": np.array([7], np.int32)})
+    srv.drain()
+    pre_crash = t._words[: t.row_count].copy()
+
+    t0 = time.perf_counter()
+    recovered = RelationalTable.recover(wal, t.uid)
+    us = (time.perf_counter() - t0) * 1e6
+    if not np.array_equal(recovered._words[: recovered.row_count], pre_crash):
+        raise AssertionError("WAL replay diverged from the live table")
+    # crash mid-flush: the torn tail record (the update) is dropped, and
+    # recovery lands byte-exactly on the state before it
+    torn = RelationalTable.recover(wal.corrupted_tail(), t.uid)
+    if not np.array_equal(torn._words[: torn.row_count], pre_update):
+        raise AssertionError("corrupted-tail recovery lost the wrong suffix")
+    emit(
+        "fig_fault/wal_replay",
+        us,
+        f"rows={n_rows},wal_records={wal.record_count},"
+        f"wal_bytes={wal.nbytes}",
+    )
+
+
+def run() -> None:
+    n_rows = common.bench_rows(44_000)
+    bench_overhead(n_rows)
+    bench_server_site("upload", n_rows,
+                      lambda srv, t: srv.submit(plan(t).project("A1", "A4")))
+    bench_server_site("scan_launch", n_rows,
+                      lambda srv, t: srv.submit(plan(t).aggregate("A1")))
+    bench_server_site(
+        "stream_chunk", n_rows,
+        lambda srv, t: srv.submit(plan(t).project("A1", "A4"), stream=True,
+                                  stream_chunk_rows=max(n_rows // 4, 64)))
+    bench_join_build(n_rows)
+    bench_shard_sites(n_rows)
+    bench_breaker(n_rows)
+    bench_wal(min(n_rows, 4_000))
+
+
+if __name__ == "__main__":
+    run()

@@ -43,6 +43,9 @@ HIGHER_BETTER = {
     # a streamed projection collapsing to fewer chunks means incremental
     # delivery regressed (the count is exact at a fixed row count)
     "stream_chunks",
+    # fault scenarios construct an exact ticket count: serving fewer means
+    # a recovery path started failing tickets it used to save
+    "served",
 }
 LOWER_BETTER = {
     "device_bytes", "host_bytes", "solo_bytes", "served_bytes", "batch_bytes",
@@ -54,6 +57,12 @@ LOWER_BETTER = {
     # SLO counters from exact-count scenarios: more misses/refusals than the
     # scenario constructs means admission control or deadline logic drifted
     "deadline_misses", "shed", "degraded",
+    # fault-recovery counters (fig_fault_recovery): each scenario injects an
+    # exact fault schedule, so burning more retries/failovers/trips than it
+    # constructs means the recovery ladder drifted (e.g. a transient now
+    # escalates to failover, or the breaker trips on healthy routes)
+    "retries", "failovers", "poisoned", "quarantined",
+    "breaker_trips", "breaker_fallbacks", "breaker_open", "wal_records",
 }
 # Wall-clock-derived metrics: direction known, but smoke noise is real.
 NOISY_HIGHER = {"speedup", "qps", "tok_per_s", "express_speedup"}
@@ -64,6 +73,9 @@ NOISY_LOWER = {"norm_vs_row"}
 SKIP = {
     "k", "rows", "cols", "clients", "groups", "queries", "rounds", "views",
     "writes", "tile", "projectivity", "notes", "p50_ms", "p95_ms", "shards",
+    # gated by fig_fault_recovery's own in-module ≤5% hard assert; the
+    # relative-regression math degenerates on its ~0 baseline
+    "overhead_pct",
 }
 
 

@@ -35,6 +35,7 @@ from . import (
     fig13_scaling,
     fig_concurrent_queries,
     fig_dist_scaling,
+    fig_fault_recovery,
     fig_htap_ingest,
     fig_mixed_batch,
     fig_scan_sharing,
@@ -57,6 +58,7 @@ MODULES = [
     fig13_scaling,
     fig_concurrent_queries,
     fig_dist_scaling,
+    fig_fault_recovery,
     fig_htap_ingest,
     fig_mixed_batch,
     fig_scan_sharing,

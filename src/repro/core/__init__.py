@@ -14,6 +14,8 @@ Layers (bottom-up):
                 plan constructors since the plan-IR refactor)
   distributed — shard_map row-bank parallel operators for the cluster meshes
   compression — dictionary + delta/FOR codecs (paper §4)
+  faults      — deterministic fault injection + lowering circuit breaker
+  wal         — checksummed write-ahead log for crash-consistent writes
 """
 
 from .schema import (
@@ -33,7 +35,12 @@ from .plan import (
     Project, Scan, decompose, plan,
 )
 from .planner import PhysicalQuery, compile_plan
-from . import compression, distributed, executor, operators, planner
+from .faults import (
+    CircuitBreaker, FaultError, FaultPlan, PermanentFault, TransientFault,
+    fault_plan,
+)
+from .wal import WriteAheadLog
+from . import compression, distributed, executor, faults, operators, planner, wal
 
 __all__ = [
     "BUS_WIDTH", "WORD", "TS_INF",
@@ -48,5 +55,8 @@ __all__ = [
     "Aggregate", "Filter", "GroupBy", "Join", "PlanBuilder", "PlanError",
     "PlanNode", "Project", "Scan", "decompose", "plan",
     "PhysicalQuery", "compile_plan",
-    "compression", "distributed", "executor", "operators", "planner",
+    "CircuitBreaker", "FaultError", "FaultPlan", "PermanentFault",
+    "TransientFault", "fault_plan", "WriteAheadLog",
+    "compression", "distributed", "executor", "faults", "operators",
+    "planner", "wal",
 ]

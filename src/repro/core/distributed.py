@@ -44,6 +44,7 @@ same packed block on both backends.
 from __future__ import annotations
 
 import dataclasses
+import time
 import weakref
 from typing import Iterator, Sequence
 
@@ -59,6 +60,7 @@ from repro.kernels import rme_scan_multi as KR
 from repro.kernels.common import group_ids
 from repro.kernels.rme_project import project_xla
 
+from . import faults
 from .engine import (
     MAX_TAIL_CHUNKS,
     DeviceRowStore,
@@ -372,6 +374,7 @@ class ShardedRowStore(DeviceRowStore):
 
     # ----------------------------------------------------------------- sync
     def _full_upload(self, table: RelationalTable) -> _ShardedEntry:
+        faults.maybe_fault("upload", table=table.uid, delta=False)
         host = table.words()
         shards: list[list[_ShardChunk]] = [[] for _ in range(self.num_shards)]
         for s, (start, n) in enumerate(
@@ -440,6 +443,10 @@ class ShardedRowStore(DeviceRowStore):
                    if ent.patch_seq != table.mutation_version else [])
         if patches is None:  # lagged past the trimmed patch log: full re-sync
             return self._full_upload(table)
+        if patches or table.row_count > ent.rows:
+            # before any entry mutation: a fault here leaves every shard at
+            # its pre-sync state, so a bare retry re-syncs cleanly
+            faults.maybe_fault("upload", table=table.uid, delta=True)
         moved = self._apply_patches(ent, table, patches)
         ent.patch_seq = table.mutation_version
         if table.row_count > ent.rows:
@@ -556,7 +563,12 @@ class ShardedEngine(RelationalMemoryEngine):
     """
 
     def __init__(self, mesh: Mesh | None = None,
-                 num_shards: int | None = None, **kwargs):
+                 num_shards: int | None = None,
+                 shard_retries: int = 2,
+                 retry_backoff_s: float = 0.0,
+                 quarantine_after: int = 3,
+                 quarantine_probe_every: int = 4,
+                 **kwargs):
         super().__init__(**kwargs)
         if mesh is not None:
             devices = list(mesh.devices.flat)
@@ -582,6 +594,19 @@ class ShardedEngine(RelationalMemoryEngine):
         # broadcast replicas of join build partitions, one set per build
         # version: (table uid, mutation version) -> (source parts, replicas)
         self._bcast_parts: dict[tuple, tuple] = {}
+        # failover policy (docs/reliability.md): transient shard-pass faults
+        # retry with exponential backoff, then — or immediately on a
+        # permanent fault — the shard's chunks re-execute on the root
+        # device; repeated failures quarantine the shard (straight to
+        # failover) with periodic half-open probes back to health
+        self.shard_retries = shard_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.quarantine_after = quarantine_after
+        self.quarantine_probe_every = quarantine_probe_every
+        self._health = [
+            {"state": "healthy", "failures": 0, "skips": 0}
+            for _ in range(self.num_shards)
+        ]
 
     @property
     def backend(self) -> str:
@@ -607,17 +632,20 @@ class ShardedEngine(RelationalMemoryEngine):
         the identical lowered tuple streams over every shard's chunks.  A
         lone request takes the same path — per-bank parallelism applies to
         solo queries too, and the per-shard pass count stays exactly one.
+
+        Every per-shard pass runs through :meth:`_shard_pass` (bounded
+        retry → root-device failover → quarantine), and the cross-shard
+        combine of reduced partials through :meth:`_combine_collective` —
+        both byte-identical to the healthy run by construction.
         """
+        faults.maybe_fault("scan_launch", table=table.uid)
         shards = self.rowstore.shard_parts(table)
         block_rows = self._fused_block_rows(reqs, table.row_words)
         per_shard: list[tuple[list[_ShardChunk], list[list]]] = []
-        for chunks in shards:
+        for s, chunks in enumerate(shards):
             if not chunks:
                 continue
-            outs = KR.scan_shard(
-                [c.words for c in chunks], reqs, revision=self.revision,
-                block_rows=block_rows, interpret=self.interpret,
-            )
+            outs = self._shard_pass(table, s, chunks, reqs, block_rows)
             per_shard.append((chunks, outs))
             for c in chunks:
                 self.stats.bytes_from_dram += self.scan_bytes(
@@ -641,7 +669,9 @@ class ShardedEngine(RelationalMemoryEngine):
                 if active > 1:
                     self.stats.bytes_collective += (active - 1) * reduced
                     self.stats.collective_ops += 1
-                results.append(KR.combine_chunk_outputs(req, partials))
+                    results.append(self._combine_collective(req, partials))
+                else:
+                    results.append(KR.combine_chunk_outputs(req, partials))
             else:
                 # blocked output: reassemble global row order from the
                 # ownership segments (finalize gather, not a collective)
@@ -662,6 +692,99 @@ class ShardedEngine(RelationalMemoryEngine):
                 parts = [self._to_root(p) for _, p in pieces]
                 results.append(KR.combine_chunk_outputs(req, parts))
         return results
+
+    # -------------------------------------------------- failover machinery
+    def _shard_pass(self, table: RelationalTable, shard: int, chunks,
+                    reqs: tuple["KR.ScanRequest", ...],
+                    block_rows: int) -> list[list]:
+        """One shard's fused pass with bounded retry, failover, quarantine.
+
+        A transient fault retries up to ``shard_retries`` times with
+        ``retry_backoff_s * 2**attempt`` backoff; a permanent fault — or
+        retry exhaustion — re-executes this shard's chunks on the root
+        device via :meth:`_failover_pass` (byte-identical results; the tick
+        completes without the shard).  ``quarantine_after`` consecutive
+        failed passes quarantine the shard: subsequent passes go straight
+        to failover, with every ``quarantine_probe_every``-th pass probing
+        the shard half-open.  A successful pass restores full health.
+        """
+        health = self._health[shard]
+        if health["state"] == "quarantined":
+            health["skips"] += 1
+            if health["skips"] % self.quarantine_probe_every != 0:
+                return self._failover_pass(shard, chunks, reqs)
+        attempt = 0
+        while True:
+            try:
+                faults.maybe_fault("shard_pass", shard=shard,
+                                   table=table.uid)
+                outs = KR.scan_shard(
+                    [c.words for c in chunks], reqs,
+                    revision=self.revision, block_rows=block_rows,
+                    interpret=self.interpret,
+                )
+            except Exception as err:
+                permanent = isinstance(err, faults.PermanentFault)
+                if not permanent and attempt < self.shard_retries:
+                    self.stats.retries += 1
+                    if self.retry_backoff_s:
+                        time.sleep(self.retry_backoff_s * (2 ** attempt))
+                    attempt += 1
+                    continue
+                health["failures"] += 1
+                if health["failures"] >= self.quarantine_after:
+                    health["state"] = "quarantined"
+                return self._failover_pass(shard, chunks, reqs)
+            health["state"] = "healthy"
+            health["failures"] = 0
+            health["skips"] = 0
+            return outs
+
+    def _failover_pass(self, shard: int, chunks,
+                       reqs: tuple["KR.ScanRequest", ...]) -> list[list]:
+        """Re-execute a failed shard's chunks on the root device.
+
+        The fused-gather XLA path serves the same request tuple over the
+        same chunk rows, so the per-chunk outputs — and everything combined
+        from them — are byte-identical to the healthy shard pass (the
+        xla-revision equality suite is the standing proof).  Charged as one
+        ``failovers`` event plus the shard's row bytes re-shipped across
+        the interconnect (``bytes_failover``).
+        """
+        outs = []
+        moved = 0
+        for c in chunks:
+            words = self._to_root(c.words)
+            outs.append(KR.scan_multi_xla(words, tuple(reqs)))
+            moved += c.words.size * c.words.dtype.itemsize
+        self.stats.failovers += 1
+        self.stats.bytes_failover += moved
+        return outs
+
+    def _combine_collective(self, req: "KR.ScanRequest", partials):
+        """The cross-shard combine with bounded transient retry.
+
+        The partials are already materialized on the root device, so a
+        retry just re-runs the O(result)-sized combine.  A permanent fault
+        (or retry exhaustion) propagates typed — the serving layer turns it
+        into a per-ticket error.
+        """
+        attempt = 0
+        while True:
+            try:
+                faults.maybe_fault("collective_combine")
+                return KR.combine_chunk_outputs(req, partials)
+            except faults.TransientFault:
+                if attempt >= self.shard_retries:
+                    raise
+                self.stats.retries += 1
+                if self.retry_backoff_s:
+                    time.sleep(self.retry_backoff_s * (2 ** attempt))
+                attempt += 1
+
+    def shard_health(self) -> list[str]:
+        """Per-shard health states (``"healthy"`` / ``"quarantined"``)."""
+        return [h["state"] for h in self._health]
 
     # ------------------------------------------------------- the join hook
     def _shard_partitions(self, right_table: RelationalTable, parts):
@@ -707,6 +830,7 @@ class ShardedEngine(RelationalMemoryEngine):
                 out = self._probe_join(
                     chunk.words, replicas[s], key_word, val_word, ts_word,
                     op.snapshot_ts or 0, snap,
+                    route=(table.uid, "join"),
                 )
                 self.stats.bytes_from_dram += self.scan_bytes(
                     table, (acc_req,), row_count=chunk.rows

@@ -83,6 +83,7 @@ from repro.kernels import ops as K
 from repro.kernels import rme_scan_multi as KR
 from repro.kernels.rme_project import vmem_footprint_bytes
 
+from . import faults
 from .descriptor import bytes_moved
 from .ephemeral import EphemeralView
 from .requests import AggregateOp, JoinOp, JoinResult, ProjectOp, ScanOp
@@ -127,6 +128,13 @@ class EngineStats:
       join build-partition broadcasts.  Always O(result/build) bytes, never
       O(rows) — blocked outputs gather through ``bytes_to_cpu`` like any
       packed view.  Zero on the single-device backend.
+    * ``retries`` / ``failovers`` / ``bytes_failover`` — the reliability
+      layer's recovery work (``docs/reliability.md``): transient-fault
+      retries of a shard pass or collective combine, shard passes
+      re-executed on the root device after retries were exhausted (or the
+      shard was quarantined), and the row bytes those failover passes
+      re-scanned.  All zero in a fault-free run — the ≤5% overhead gate in
+      ``fig_fault_recovery`` relies on that.
     """
 
     hot_hits: int = 0
@@ -145,6 +153,9 @@ class EngineStats:
     bytes_join_build: int = 0  # of bytes_uploaded: partition-array uploads
     bytes_collective: int = 0  # interconnect bytes (sharded reductions/broadcasts)
     collective_ops: int = 0  # cross-shard combine/broadcast events
+    retries: int = 0  # transient-fault retries (shard passes, combines)
+    failovers: int = 0  # shard passes re-executed on the root device
+    bytes_failover: int = 0  # row bytes re-scanned by failover passes
 
     def reset(self) -> None:
         self.hot_hits = 0
@@ -163,6 +174,9 @@ class EngineStats:
         self.bytes_join_build = 0
         self.bytes_collective = 0
         self.collective_ops = 0
+        self.retries = 0
+        self.failovers = 0
+        self.bytes_failover = 0
 
 
 @dataclasses.dataclass
@@ -335,6 +349,7 @@ class DeviceRowStore:
             self.stats.bytes_uploaded_delta += nbytes
 
     def _full_upload(self, table: RelationalTable) -> _StoreEntry:
+        faults.maybe_fault("upload", table=table.uid, delta=False)
         host = table.words()
         ent = _StoreEntry([jnp.asarray(host)], table.row_count,
                           table.mutation_version)
@@ -389,6 +404,10 @@ class DeviceRowStore:
                    if ent.patch_seq != table.mutation_version else [])
         if patches is None:  # lagged past the trimmed patch log: full re-sync
             return self._full_upload(table)
+        if patches or table.row_count > ent.rows:
+            # before any entry mutation: a fault here leaves the resident
+            # copy at its pre-sync state, so a bare retry re-syncs cleanly
+            faults.maybe_fault("upload", table=table.uid, delta=True)
         moved = self._apply_patches(ent, table, patches)
         ent.patch_seq = table.mutation_version
         if table.row_count > ent.rows:
@@ -472,6 +491,8 @@ class RelationalMemoryEngine:
         interpret: bool = True,
         vmem_bytes: int = 2 << 20,  # paper: 2 MB data SPM
         delta_uploads: bool = True,
+        breaker_threshold: int = 3,
+        breaker_cooldown: int = 4,
     ):
         if revision not in K.REVISIONS:
             raise ValueError(f"unknown revision {revision!r}; want one of {K.REVISIONS}")
@@ -483,6 +504,11 @@ class RelationalMemoryEngine:
         self.cache = ReorgCache(cache_bytes)
         self.stats = EngineStats()
         self.rowstore = DeviceRowStore(self.stats, delta=delta_uploads)
+        # lowering circuit breaker: flips a repeatedly-failing (table,
+        # request-shape) route to the XLA fallback (docs/reliability.md)
+        self.breaker = faults.CircuitBreaker(
+            threshold=breaker_threshold, cooldown=breaker_cooldown
+        )
 
     @property
     def backend(self) -> str:
@@ -708,6 +734,8 @@ class RelationalMemoryEngine:
         for chunk in chunks:
             start = 0
             while start < chunk.shape[0]:
+                faults.maybe_fault("stream_chunk", table=table.uid,
+                                   index=len(parts))
                 stop = (chunk.shape[0] if chunk_rows is None
                         else min(start + chunk_rows, chunk.shape[0]))
                 piece = chunk[start:stop]
@@ -831,15 +859,19 @@ class RelationalMemoryEngine:
         requests are chunk-agnostic (word offsets, row-position-local), so
         the same lowered tuple serves both backends unchanged.
         """
+        faults.maybe_fault("scan_launch", table=table.uid)
         if len(reqs) == 1:
             words = self.device_words(table)
             return [self._execute_solo(words, table, reqs[0])]
         chunks = self.device_chunks(table)
         block_rows = self._fused_block_rows(reqs, table.row_words)
-        outs = K.scan_multi_chunked(
-            chunks, reqs, revision=self.revision,
-            block_rows=block_rows, interpret=self.interpret,
-        )
+        route = (table.uid, tuple(KR._strip_dynamic(r) for r in reqs))
+        per_chunk = [self._scan_chunk(chunk, reqs, block_rows, route)
+                     for chunk in chunks]
+        outs = (per_chunk[0] if len(per_chunk) == 1 else [
+            KR.combine_chunk_outputs(req, [o[r] for o in per_chunk])
+            for r, req in enumerate(reqs)
+        ])
         self.stats.shared_scans += 1
         self.stats.rows_projected += table.row_count
         for chunk in chunks:
@@ -848,19 +880,71 @@ class RelationalMemoryEngine:
             )
         return outs
 
+    def _scan_chunk(self, chunk: jax.Array,
+                    reqs: tuple["KR.ScanRequest", ...], block_rows: int,
+                    route) -> list:
+        """One chunk's fused pass behind the lowering circuit breaker.
+
+        A ``closed`` route attempts the Pallas pass; a failure (a real
+        lowering error or an injected ``lowering`` fault) records against
+        the route and this chunk is served by the fused-gather XLA fallback
+        — same results, per the xla-revision equality suite.  An ``open``
+        route skips the attempt entirely for the cooldown.  Injected faults
+        belonging to *other* sites propagate untouched: the breaker guards
+        kernel dispatch, not the pass as a whole.
+        """
+        if self.revision == "xla":
+            return KR.scan_multi_xla(chunk, tuple(reqs))
+        if not self.breaker.allow(route):
+            return KR.scan_multi_xla(chunk, tuple(reqs))
+        try:
+            faults.maybe_fault("lowering", op="scan")
+            outs = KR.scan_multi(
+                chunk, reqs, revision=self.revision,
+                block_rows=block_rows, interpret=self.interpret,
+            )
+        except Exception as err:
+            if isinstance(err, faults.FaultError) and err.site != "lowering":
+                raise
+            self.breaker.record_failure(route)
+            return KR.scan_multi_xla(chunk, tuple(reqs))
+        self.breaker.record_success(route)
+        return outs
+
     def _execute_solo(self, words: jax.Array, table: RelationalTable,
                       req: "KR.ScanRequest"):
-        """One request, today's single-op kernel, engine-side accounting."""
+        """One request: accounting here, kernel dispatch behind the breaker
+        in :meth:`_solo_kernel` (failures fall back to ``scan_multi_xla``,
+        which honors every single-op contract)."""
         if isinstance(req, KR.ProjectRequest):
-            out = K.project_any(
+            self.stats.rows_projected += req.geom.row_count
+            self.stats.bytes_from_dram += bytes_moved(req.geom)["rme"]
+        else:
+            self.stats.rows_projected += table.row_count
+            self.stats.bytes_from_dram += self.scan_bytes(table, (req,))
+        if self.revision == "xla":
+            return self._solo_kernel(words, req)
+        route = (table.uid, (KR._strip_dynamic(req),))
+        if not self.breaker.allow(route):
+            return KR.scan_multi_xla(words, (req,))[0]
+        try:
+            faults.maybe_fault("lowering", op="scan")
+            out = self._solo_kernel(words, req)
+        except Exception as err:
+            if isinstance(err, faults.FaultError) and err.site != "lowering":
+                raise
+            self.breaker.record_failure(route)
+            return KR.scan_multi_xla(words, (req,))[0]
+        self.breaker.record_success(route)
+        return out
+
+    def _solo_kernel(self, words: jax.Array, req: "KR.ScanRequest"):
+        """Single-op kernel dispatch (bsl/pck revisions stay exercised)."""
+        if isinstance(req, KR.ProjectRequest):
+            return K.project_any(
                 words, req.geom, revision=self.revision,
                 block_rows=self.block_rows, interpret=self.interpret,
             )
-            self.stats.rows_projected += req.geom.row_count
-            self.stats.bytes_from_dram += bytes_moved(req.geom)["rme"]
-            return out
-        self.stats.rows_projected += table.row_count
-        self.stats.bytes_from_dram += self.scan_bytes(table, (req,))
         if isinstance(req, KR.FilterRequest):
             return K.filter_project(
                 words, req.geom, pred_word=req.pred_word,
@@ -900,6 +984,7 @@ class RelationalMemoryEngine:
         """
         from .planner import DEVICE_JOIN_PATH, _insert_build_index
 
+        faults.maybe_fault("join_build", table=table.uid)
         words = table.words()
         parts = K.build_partitions(
             words[:, table.schema.word_offset(key)],
@@ -925,13 +1010,16 @@ class RelationalMemoryEngine:
                                            op.right_proj)
 
     def _probe_join(self, words: jax.Array, partitions, key_word: int,
-                    val_word: int, ts_word: int, ts: int, build_ts: bool):
+                    val_word: int, ts_word: int, ts: int, build_ts: bool,
+                    route=None):
         """One probe pass with the per-query lowering-failure fallback: the
         Pallas grid pass when the revision supports it, else — or on any
         lowering error — the fused-gather XLA probe (same results).  The
         probe honors the same SPM budget as the fused scan: the row tile is
         halved until the modeled working set (row tile + resident bucket
-        arrays) fits ``vmem_bytes``."""
+        arrays) fits ``vmem_bytes``.  ``route`` threads the caller's
+        circuit-breaker key so repeated lowering failures flip the route
+        ``open`` and skip the doomed attempt during the cooldown."""
         if self.revision == "xla":
             return K.hash_join_xla(words, partitions, key_word, val_word,
                                    ts_word=ts_word, ts=ts, build_ts=build_ts)
@@ -941,17 +1029,28 @@ class RelationalMemoryEngine:
                    partitions, words.shape[1], block_rows) > self.vmem_bytes):
             block_rows //= 2
         self.stats.last_block_rows = block_rows
-        try:
-            return K.hash_join(words, partitions, key_word, val_word,
-                               ts_word=ts_word, ts=ts, build_ts=build_ts,
-                               revision=self.revision,
-                               block_rows=block_rows,
-                               interpret=self.interpret)
-        except Exception:
-            # mirror the PR 3 hardening: one query's lowering failure falls
-            # back to the XLA probe instead of poisoning the batch
+        if route is not None and not self.breaker.allow(route):
             return K.hash_join_xla(words, partitions, key_word, val_word,
                                    ts_word=ts_word, ts=ts, build_ts=build_ts)
+        try:
+            faults.maybe_fault("lowering", op="join")
+            out = K.hash_join(words, partitions, key_word, val_word,
+                              ts_word=ts_word, ts=ts, build_ts=build_ts,
+                              revision=self.revision,
+                              block_rows=block_rows,
+                              interpret=self.interpret)
+        except Exception as err:
+            if isinstance(err, faults.FaultError) and err.site != "lowering":
+                raise
+            # mirror the PR 3 hardening: one query's lowering failure falls
+            # back to the XLA probe instead of poisoning the batch
+            if route is not None:
+                self.breaker.record_failure(route)
+            return K.hash_join_xla(words, partitions, key_word, val_word,
+                                   ts_word=ts_word, ts=ts, build_ts=build_ts)
+        if route is not None:
+            self.breaker.record_success(route)
+        return out
 
     def _join_direct(self, op: JoinOp) -> JoinResult:
         """Solo join: stream the probe kernel over the device row-store
@@ -967,7 +1066,8 @@ class RelationalMemoryEngine:
         ts_word = table.ts_begin_word if snap else -1
         outs = [
             self._probe_join(chunk, parts, key_word, val_word, ts_word,
-                             op.snapshot_ts or 0, snap)
+                             op.snapshot_ts or 0, snap,
+                             route=(table.uid, "join"))
             for chunk in chunks
         ]
         acc_req = op.lower()  # its intervals are exactly the probe footprint
@@ -991,6 +1091,7 @@ class RelationalMemoryEngine:
         s, r, m = self._probe_join(
             packed, parts, key_word, val_word, ts_word=-1,
             ts=op.snapshot_ts or 0, build_ts=op.snapshot_ts is not None,
+            route=(op.table.uid, "join"),
         )
         if mask is not None:  # packed blocks carry no ts words: mask outside
             s = jnp.where(mask, s, 0)

@@ -86,6 +86,25 @@ appended rows ship as tail chunks, deletes and updates ship only patched
 timestamp words, and hot views survive appends via incremental tail scans
 instead of cold rebuilds.
 
+Fault tolerance (``docs/reliability.md``)
+-----------------------------------------
+The tick executor degrades gracefully instead of failing wholesale.  A
+transient fault (:class:`repro.core.faults.TransientFault` — an injected
+or real spurious failure of an upload, scan, or stream) retries the
+affected ticket up to ``max_retries`` times on its individual fallback
+path; a ticket that *keeps* failing resolves typed and its plan signature
+enters **poison quarantine** — re-submissions of the same shape fail
+immediately with :class:`PoisonedPlanError` for ``poison_cooldown_ticks``
+ticks instead of burning retry budget, and the rest of the tick is never
+poisoned (extending PR 3's per-query fallback).  Repeated Pallas lowering
+failures flip the (table, request-shape) route to the XLA fallback via the
+engine's circuit breaker (cooldown + half-open probes —
+``breaker_*`` in :meth:`snapshot`).  Built with ``wal=`` (a
+:class:`repro.core.wal.WriteAheadLog`), every applied write appends a
+checksummed record *before* the host store mutates, so
+:meth:`repro.core.table.RelationalTable.recover` replays a byte-identical
+table after a crash at any record boundary.
+
 Threading model: ``submit*`` is thread-safe and non-blocking (clients get a
 :class:`QueryTicket` and block on ``result()`` — or iterate ``chunks()`` —
 at their leisure); all engine *and table* work happens on whichever single
@@ -118,6 +137,7 @@ from typing import Any, Iterator, Mapping
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults
 from repro.core.engine import RelationalMemoryEngine
 from repro.core.plan import Join, PlanBuilder, PlanNode, Scan, decompose
 from repro.core.planner import (
@@ -142,7 +162,17 @@ class DeadlineExceeded(TimeoutError):
 class ServerOverloaded(RuntimeError):
     """Admission refused: the queue is at ``max_queue`` under the ``"shed"``
     policy (or at twice the bound under ``"degrade"`` — the hard limit that
-    keeps a degrading server memory-bounded)."""
+    keeps a degrading server memory-bounded).  The message names the lane
+    that shed and both lanes' queue depths; per-lane shed counts live in
+    ``LaneStats.shed``."""
+
+
+class PoisonedPlanError(RuntimeError):
+    """The plan's signature is in poison quarantine: an identically-shaped
+    query exhausted its transient-fault retries within the last
+    ``poison_cooldown_ticks`` ticks, so the server fails this one
+    immediately — typed, at compile time — instead of burning another
+    tick's retry budget on a deterministically failing plan."""
 
 
 class LatencyReservoir:
@@ -322,6 +352,7 @@ class LaneStats:
     served: int = 0
     failed: int = 0
     deadline_misses: int = 0
+    shed: int = 0  # admissions this lane refused with ServerOverloaded
     result_bytes: int = 0
     latency: LatencyReservoir = dataclasses.field(default_factory=_reservoir)
     queue_wait: LatencyReservoir = dataclasses.field(default_factory=_reservoir)
@@ -350,6 +381,9 @@ class ServerStats:
     deadline_misses: int = 0  # tickets resolved with DeadlineExceeded
     shed: int = 0  # admissions refused with ServerOverloaded
     degraded: int = 0  # admissions demoted to the bulk lane at the bound
+    # fault-tolerance counters (docs/reliability.md)
+    retries: int = 0  # per-ticket transient-fault retry attempts
+    poisoned: int = 0  # tickets that exhausted retries -> quarantined plans
     streams: int = 0  # streaming tickets served
     stream_chunks: int = 0  # chunks pushed across all streams
     # write-path counters
@@ -456,6 +490,15 @@ class QueryServer:
       unbounded); ``overload`` — ``"shed"`` (refuse with
       :class:`ServerOverloaded`) or ``"degrade"`` (demote to bulk, strip the
       deadline; hard-sheds at ``2 * max_queue``).
+
+    Reliability knobs (see ``docs/reliability.md``):
+
+    * ``wal`` — a :class:`repro.core.wal.WriteAheadLog`; when set, every
+      applied write appends a checksummed record (after an automatic
+      per-table checkpoint record) *before* the host store mutates.
+    * ``max_retries`` — per-ticket bound on transient-fault retries.
+    * ``poison_cooldown_ticks`` — how many ticks a retry-exhausted plan
+      signature stays quarantined (:class:`PoisonedPlanError`).
     """
 
     def __init__(
@@ -470,6 +513,9 @@ class QueryServer:
         express_result_bytes: int = 4096,
         max_queue: int | None = None,
         overload: str = "shed",
+        wal=None,
+        max_retries: int = 2,
+        poison_cooldown_ticks: int = 8,
     ):
         if engine is not None and (mesh is not None or num_shards is not None):
             raise ValueError(
@@ -490,6 +536,14 @@ class QueryServer:
         self.express_result_bytes = express_result_bytes
         self.max_queue = max_queue
         self.overload = overload
+        self.wal = wal
+        self.max_retries = max_retries
+        self.poison_cooldown_ticks = poison_cooldown_ticks
+        # tables with a checkpoint record already in the WAL (the first
+        # logged write per table writes one); touched only on the tick thread
+        self._wal_checkpointed: set[int] = set()
+        # poison quarantine: plan signature -> remaining cooldown ticks
+        self._poisoned: dict[Any, int] = {}
         self.stats = ServerStats()
         self._lock = threading.Lock()
         self._express: deque[_Admitted] = deque()
@@ -627,9 +681,13 @@ class QueryServer:
                     if (self.overload == "shed" or adm.write is not None
                             or depth >= 2 * self.max_queue):
                         self.stats.shed += 1
+                        self.stats.lanes[adm.lane].shed += 1
                         raise ServerOverloaded(
                             f"admission queue at {depth} >= bound "
-                            f"{self.max_queue} (policy: {self.overload})"
+                            f"{self.max_queue} (policy: {self.overload}; "
+                            f"shed lane: {adm.lane}; depths: "
+                            f"express={len(self._express)} "
+                            f"bulk={len(self._bulk)})"
                         )
                     adm.lane = "bulk"
                     adm.ticket.lane = "bulk"
@@ -652,7 +710,28 @@ class QueryServer:
             return len(self._express) + len(self._bulk)
 
     # --------------------------------------------------------------- writes
+    def _log_write(self, w: _WritePayload) -> None:
+        """Write-ahead: append the write's record — after an automatic
+        checkpoint record on the table's first logged write — *before* the
+        host store mutates.  A crash between append and apply replays one
+        extra (idempotent-by-replay) record; an acknowledged write is never
+        lost."""
+        if self.wal is None:
+            return
+        if w.table.uid not in self._wal_checkpointed:
+            self.wal.append(w.table.uid, "checkpoint",
+                            w.table.checkpoint_payload())
+            self._wal_checkpointed.add(w.table.uid)
+        if w.kind == "insert":
+            payload = {"columns": dict(w.columns)}
+        elif w.kind == "update":
+            payload = {"rows": w.rows, "values": dict(w.values)}
+        else:
+            payload = {"rows": w.rows}
+        self.wal.append(w.table.uid, w.kind, payload)
+
     def _apply_write(self, w: _WritePayload) -> Any:
+        self._log_write(w)
         if w.kind == "insert":
             rows = w.table.append(w.columns)
             self.stats.inserts += 1
@@ -770,6 +849,75 @@ class QueryServer:
             req.ticket.queue_wait_s = now - req.ticket.submitted_at
         return batch
 
+    # ------------------------------------------------- fault recovery layer
+    @staticmethod
+    def _plan_sig(req: _Admitted, pq: PhysicalQuery | None):
+        """A stable signature of the plan's physical shape — what poison
+        quarantine keys on.  Lowered requests hash structurally (frozen
+        dataclasses), so two submissions of the same query shape collide
+        here even from different clients.  ``None`` (unkeyable) disables
+        quarantine for this plan."""
+        if pq is None:
+            return None
+        try:
+            return (req.path, tuple(
+                (op.table.uid, op.lower()) for op in pq.ops
+            ))
+        except Exception:
+            return None
+
+    def _poison(self, req: _Admitted, pq: PhysicalQuery | None) -> None:
+        """Quarantine a retry-exhausted plan signature for the cooldown."""
+        self.stats.poisoned += 1
+        sig = self._plan_sig(req, pq)
+        if sig is not None:
+            self._poisoned[sig] = self.poison_cooldown_ticks
+
+    def _retry_read(self, req: _Admitted, pq: PhysicalQuery,
+                    err: BaseException) -> tuple[bool, Any]:
+        """Bounded retry of one query's individual execution after a
+        transient fault.  Success returns ``(True, result)``; a permanent
+        or persistent failure resolves the ticket typed (quarantining the
+        plan when retries were exhausted) and returns ``(False, None)``."""
+        for _ in range(self.max_retries):
+            self.stats.retries += 1
+            try:
+                return True, pq.run()
+            except faults.TransientFault as e:
+                err = e
+            except Exception as e:
+                self._fail(req, e)
+                return False, None
+        self._poison(req, pq)
+        self._fail(req, err)
+        return False, None
+
+    def _retry_stream(self, req: _Admitted, pq: PhysicalQuery,
+                      err: BaseException) -> tuple[bool, Any]:
+        """Stream retry: only safe while *no* chunk reached the client —
+        each attempt drains a fresh ``pq.stream()`` iterator.  Once a
+        prefix is out, a restart would duplicate it, so the ticket resolves
+        typed instead (``chunks()`` documents yielded chunks as a byte-
+        exact prefix of the result)."""
+        for _ in range(self.max_retries):
+            if req.ticket._chunks:
+                # a prefix reached the client: fail typed, don't poison —
+                # the fault was positional, not necessarily deterministic
+                self._fail(req, err)
+                return False, None
+            self.stats.retries += 1
+            try:
+                return True, self._serve_stream(req, pq.stream())
+            except faults.TransientFault as e:
+                err = e
+            except Exception as e:
+                self._fail(req, e)
+                return False, None
+        if not req.ticket._chunks:
+            self._poison(req, pq)
+        self._fail(req, err)
+        return False, None
+
     def _compile_reads(self, reads: list[_Admitted]) -> list[PhysicalQuery | None]:
         compiled: list[PhysicalQuery | None] = []
         for req in reads:
@@ -790,12 +938,22 @@ class QueryServer:
                     snapshot_ts = max(
                         t.now() for t in _plan_tables(req.node)
                     )
-                compiled.append(compile_plan(
+                pq = compile_plan(
                     self.engine, req.node, path=req.path,
                     colstore=req.colstore, right_colstore=req.right_colstore,
                     snapshot_ts=snapshot_ts, stream=req.stream,
                     stream_chunk_rows=req.stream_chunk_rows,
-                ))
+                )
+                sig = self._plan_sig(req, pq)
+                if sig is not None and sig in self._poisoned:
+                    compiled.append(None)
+                    self._fail(req, PoisonedPlanError(
+                        f"plan shape quarantined for "
+                        f"{self._poisoned[sig]} more tick(s) after "
+                        f"exhausting {self.max_retries} retries"
+                    ))
+                    continue
+                compiled.append(pq)
             except Exception as e:  # compile errors belong to the client
                 compiled.append(None)
                 self._fail(req, e)
@@ -831,6 +989,10 @@ class QueryServer:
                     continue
                 try:
                     result = pq.run()
+                except faults.TransientFault as e:
+                    ok, result = self._retry_read(req, pq, e)
+                    if not ok:
+                        continue
                 except Exception as e:
                     self._fail(req, e)
                     continue
@@ -853,6 +1015,19 @@ class QueryServer:
                     tokens.append(pq.stream())
                 else:
                     tokens.append(pq.launch(packed[off: off + k]))
+            except faults.TransientFault as e:
+                # a launch-time transient (e.g. a faulted upload): retry the
+                # query individually; either way it is settled here, so
+                # finalize must skip it
+                tokens.append(None)
+                compiled[i] = None
+                if pq.stream is not None:
+                    ok, result = self._retry_stream(req, pq, e)
+                else:
+                    ok, result = self._retry_read(req, pq, e)
+                if ok:
+                    self._note_result_bytes(req, pq)
+                    self._serve(req, result, route=pq.route)
             except Exception as e:
                 tokens.append(None)
                 compiled[i] = None
@@ -878,6 +1053,16 @@ class QueryServer:
                     result = self._serve_stream(req, token)
                 else:
                     result = pq.finalize(token)
+            except faults.TransientFault as e:
+                if pq.stream is not None:
+                    ok, result = self._retry_stream(req, pq, e)
+                else:
+                    # re-run the whole query individually: the launched
+                    # pass's tokens are tainted by the fault, a fresh
+                    # pq.run() is the clean per-query fallback path
+                    ok, result = self._retry_read(req, pq, e)
+                if not ok:
+                    continue
             except Exception as e:
                 self._fail(req, e)
                 continue
@@ -923,6 +1108,10 @@ class QueryServer:
         self.stats.ticks += 1
         if self._open_ticks > 0:
             self.stats.ticks_overlapped += 1
+        if self._poisoned:  # quarantine cooldowns tick down per served tick
+            self._poisoned = {sig: left - 1
+                              for sig, left in self._poisoned.items()
+                              if left > 1}
 
         self._run_writes(batch)
         live = [req for req in batch
@@ -961,6 +1150,14 @@ class QueryServer:
         tick.finished = True
         self._open_ticks -= 1
         if tick.reads:
+            # sweep deadlines BEFORE any O(rows) bulk transfer: a ticket
+            # that expired while its pass was in flight is resolved typed
+            # here and its finalize/transfer work is skipped entirely —
+            # the result is dropped, not pulled then discarded
+            for i, req in enumerate(tick.reads):
+                if (tick.compiled[i] is not None
+                        and self._expire(req, "finish_tick")):
+                    tick.compiled[i] = None
             self._finalize_reads(tick.reads, tick.compiled, tick.tokens)
         return tick.processed
 
@@ -1089,6 +1286,9 @@ class QueryServer:
             "deadline_misses": self.stats.deadline_misses,
             "shed": self.stats.shed,
             "degraded": self.stats.degraded,
+            "retries": self.stats.retries,
+            "poisoned": self.stats.poisoned,
+            "poison_quarantined": len(self._poisoned),
             "streams": self.stats.streams,
             "stream_chunks": self.stats.stream_chunks,
             "writes_applied": self.stats.writes_applied,
@@ -1098,6 +1298,7 @@ class QueryServer:
             out[f"{name}_served"] = lane.served
             out[f"{name}_failed"] = lane.failed
             out[f"{name}_deadline_misses"] = lane.deadline_misses
+            out[f"{name}_shed"] = lane.shed
             out[f"{name}_result_bytes"] = lane.result_bytes
             out[f"{name}_p50_ms"] = lane.latency.percentile(50) * 1e3
             out[f"{name}_p95_ms"] = lane.latency.percentile(95) * 1e3
@@ -1116,7 +1317,18 @@ class QueryServer:
             "engine_delta_uploads": e.delta_uploads,
             "engine_bytes_collective": e.bytes_collective,
             "engine_collective_ops": e.collective_ops,
+            "engine_retries": e.retries,
+            "engine_failovers": e.failovers,
+            "engine_bytes_failover": e.bytes_failover,
         })
+        out.update(self.engine.breaker.snapshot())
+        if hasattr(self.engine, "shard_health"):
+            out["engine_shards_quarantined"] = sum(
+                1 for s in self.engine.shard_health() if s != "healthy"
+            )
+        if self.wal is not None:
+            out["wal_records"] = self.wal.record_count
+            out["wal_bytes"] = self.wal.nbytes
         return out
 
 

@@ -1,0 +1,510 @@
+"""Chaos suite: every named fault site recovers byte-identical or fails typed.
+
+The acceptance bar of the reliability layer (docs/reliability.md): under a
+scripted :class:`~repro.core.faults.FaultPlan`, each injection site either
+(a) recovers to a result byte-identical to the fault-free run — transient
+retries, shard failover, circuit-breaker fallback — or (b) resolves with a
+*typed* error (permanent faults, poison quarantine).  Never a hang, never a
+silently wrong answer.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CircuitBreaker,
+    FaultPlan,
+    PermanentFault,
+    RelationalMemoryEngine,
+    RelationalTable,
+    TransientFault,
+    fault_plan,
+    faults,
+    plan,
+)
+from repro.core.distributed import ShardedEngine
+from repro.core.requests import AggregateOp, GroupByOp
+from repro.core.schema import Column, TableSchema
+from repro.serve.query_server import PoisonedPlanError, QueryServer
+
+SCHEMA = TableSchema((Column("a", "int32"), Column("b", "int32"),
+                      Column("g", "int32")))
+
+
+def make_table(n=200, seed=0):
+    rng = np.random.default_rng(seed)
+    return RelationalTable.from_columns(SCHEMA, {
+        "a": rng.integers(-100, 100, n).astype(np.int32),
+        "b": rng.integers(0, 1000, n).astype(np.int32),
+        "g": rng.integers(0, 8, n).astype(np.int32),
+    })
+
+
+def as_np(result):
+    parts = result if isinstance(result, tuple) else (result,)
+    return [np.asarray(p) for p in parts]
+
+
+def assert_same(a, b):
+    for x, y in zip(as_np(a), as_np(b)):
+        np.testing.assert_array_equal(x, y)
+
+
+# --------------------------------------------------------------- FaultPlan
+class TestFaultPlan:
+    def test_fires_on_nth_hit_for_times_hits(self):
+        p = FaultPlan().inject("upload", at=2, times=2)
+        outcomes = []
+        for _ in range(5):
+            try:
+                p.hit("upload")
+                outcomes.append("ok")
+            except TransientFault:
+                outcomes.append("fault")
+        assert outcomes == ["ok", "fault", "fault", "ok", "ok"]
+        assert p.fired("upload") == 2
+
+    def test_match_context_restricts_hits(self):
+        p = FaultPlan().inject("shard_pass", shard=1)
+        p.hit("shard_pass", shard=0)  # does not match, does not count
+        with pytest.raises(TransientFault):
+            p.hit("shard_pass", shard=1)
+        assert p.hits_at("shard_pass") == 1
+
+    def test_permanent_kind_and_typed_attributes(self):
+        p = FaultPlan().inject("lowering", kind="permanent")
+        with pytest.raises(PermanentFault) as exc:
+            p.hit("lowering")
+        assert exc.value.site == "lowering"
+        assert exc.value.hit == 1
+        assert isinstance(exc.value, faults.FaultError)
+        assert not isinstance(exc.value, TransientFault)
+
+    def test_times_none_fires_forever(self):
+        p = FaultPlan().inject("upload", times=None)
+        for _ in range(4):
+            with pytest.raises(TransientFault):
+                p.hit("upload")
+
+    def test_seeded_random_schedule_is_reproducible(self):
+        def schedule(seed):
+            p = FaultPlan(seed=seed).inject_random("upload", p=0.5)
+            out = []
+            for _ in range(32):
+                try:
+                    p.hit("upload")
+                    out.append(0)
+                except TransientFault:
+                    out.append(1)
+            return out
+
+        assert schedule(7) == schedule(7)
+        assert schedule(7) != schedule(8)
+        assert sum(schedule(7)) > 0
+
+    def test_unknown_site_and_kind_rejected(self):
+        with pytest.raises(ValueError):
+            FaultPlan().inject("nonsense")
+        with pytest.raises(ValueError):
+            FaultPlan().inject("upload", kind="flaky")
+
+    def test_context_manager_restores_previous_plan(self):
+        assert faults.active_plan() is None
+        outer = FaultPlan()
+        with fault_plan(outer):
+            with fault_plan(FaultPlan()) as inner:
+                assert faults.active_plan() is inner
+            assert faults.active_plan() is outer
+        assert faults.active_plan() is None
+
+    def test_maybe_fault_is_noop_without_plan(self):
+        faults.maybe_fault("upload")  # must not raise
+
+
+# ---------------------------------------------------------- CircuitBreaker
+class TestCircuitBreaker:
+    def test_trips_after_threshold_then_cooldown_then_half_open(self):
+        br = CircuitBreaker(threshold=2, cooldown=2)
+        key = ("t", "r")
+        assert br.allow(key)
+        br.record_failure(key)
+        assert br.allow(key)
+        br.record_failure(key)  # second consecutive failure: trips
+        assert br.state(key) == "open"
+        assert br.trips == 1
+        assert not br.allow(key)  # cooldown serve 1 -> fallback
+        assert not br.allow(key)  # cooldown serve 2 -> half_open next
+        assert br.state(key) == "half_open"
+        assert br.allow(key)  # the probe
+        assert br.probes == 1
+        br.record_success(key)
+        assert br.state(key) == "closed"
+        assert br.fallbacks == 2
+
+    def test_failed_probe_reopens(self):
+        br = CircuitBreaker(threshold=1, cooldown=1)
+        br.record_failure("k")
+        assert not br.allow("k")
+        assert br.allow("k")  # half-open probe
+        br.record_failure("k")  # probe failed: re-trip
+        assert br.state("k") == "open"
+        assert br.trips == 2
+
+    def test_success_resets_streak(self):
+        br = CircuitBreaker(threshold=2, cooldown=1)
+        br.record_failure("k")
+        br.record_success("k")
+        br.record_failure("k")
+        assert br.state("k") == "closed"  # never two consecutive
+
+
+# ----------------------------------------------- engine sites (single dev)
+class TestEngineSites:
+    def test_upload_fault_recovers_via_server_retry(self):
+        ref_t = make_table()
+        srv0 = QueryServer(RelationalMemoryEngine(revision="xla"))
+        tk = srv0.submit(plan(ref_t).project("a", "b"))
+        srv0.drain()
+        ref = tk.result()
+
+        t = make_table()
+        srv = QueryServer(RelationalMemoryEngine(revision="xla"))
+        with fault_plan(FaultPlan().inject("upload")) as p:
+            tk = srv.submit(plan(t).project("a", "b"))
+            srv.drain()
+        assert_same(tk.result(), ref)
+        assert p.fired("upload") == 1
+        assert srv.snapshot()["retries"] >= 0  # recovered without poisoning
+        assert srv.snapshot()["served"] == 1
+
+    def test_delta_upload_fault_leaves_store_consistent(self):
+        t = make_table()
+        srv = QueryServer(RelationalMemoryEngine(revision="xla"))
+        tk = srv.submit(plan(t).aggregate("b"))
+        srv.drain()
+        tk.result()  # table resident
+        new = {"a": np.array([1], np.int32), "b": np.array([50], np.int32),
+               "g": np.array([0], np.int32)}
+        with fault_plan(FaultPlan().inject("upload", delta=True)):
+            srv.submit_insert(t, new)
+            rd = srv.submit(plan(t).aggregate("b"))
+            srv.drain()
+        total = float(np.asarray(rd.result()))
+        expect = float(np.sum(np.asarray(t.read_column("b"), dtype=np.float64)))
+        assert total == expect  # retry re-synced the delta exactly once
+
+    def test_scan_launch_permanent_fault_fails_typed_no_retry(self):
+        t = make_table()
+        srv = QueryServer(RelationalMemoryEngine(revision="xla"))
+        with fault_plan(FaultPlan().inject(
+                "scan_launch", kind="permanent", times=None)):
+            tk = srv.submit(plan(t).aggregate("b"))
+            srv.drain()
+        with pytest.raises(PermanentFault):
+            tk.result()
+        assert srv.snapshot()["retries"] == 0  # permanents skip the retry loop
+
+    def test_join_build_fault_recovers(self):
+        left, right = make_table(150, seed=1), make_table(40, seed=2)
+        q = (plan(left).join(right, key="a", left_proj="b", right_proj="b")
+             .build())
+        srv0 = QueryServer(RelationalMemoryEngine(revision="xla"))
+        tk = srv0.submit(q)
+        srv0.drain()
+        ref = tk.result()
+
+        from repro.core import operators as ops
+
+        ops.clear_join_build_cache()  # module-global: drop the ref's build
+        srv = QueryServer(RelationalMemoryEngine(revision="xla"))
+        with fault_plan(FaultPlan().inject("join_build")) as p:
+            tk = srv.submit(q)
+            srv.drain()
+        out = tk.result()
+        assert p.fired("join_build") == 1
+        np.testing.assert_array_equal(np.asarray(out.s_proj),
+                                      np.asarray(ref.s_proj))
+        np.testing.assert_array_equal(np.asarray(out.matched),
+                                      np.asarray(ref.matched))
+
+    def test_stream_chunk_fault_before_first_chunk_retries_clean(self):
+        t = make_table(300)
+        srv0 = QueryServer(RelationalMemoryEngine(revision="xla"))
+        tk = srv0.submit(plan(t).project("a", "b"))
+        srv0.drain()
+        ref = tk.result()
+
+        srv = QueryServer(RelationalMemoryEngine(revision="xla"))
+        with fault_plan(FaultPlan().inject("stream_chunk", at=1)) as p:
+            tk = srv.submit(plan(t).project("a", "b"), stream=True,
+                            stream_chunk_rows=64)
+            srv.drain()
+        out = tk.result()
+        assert p.fired("stream_chunk") == 1
+        assert srv.snapshot()["retries"] == 1
+        assert_same(out, ref)  # restarted stream is byte-identical
+
+    def test_stream_fault_mid_stream_fails_typed_prefix_intact(self):
+        t = make_table(300)
+        srv = QueryServer(RelationalMemoryEngine(revision="xla"))
+        # chunk index 1: the second chunk faults after the first was pushed
+        with fault_plan(FaultPlan().inject("stream_chunk", index=1,
+                                           times=None)):
+            tk = srv.submit(plan(t).project("a", "b"), stream=True,
+                            stream_chunk_rows=64)
+            srv.drain()
+        with pytest.raises(TransientFault):
+            tk.result()
+        assert len(tk._chunks) == 1  # the yielded prefix stands
+        assert srv.snapshot()["poisoned"] == 0  # positional, not poisoned
+
+
+# ------------------------------------------------- lowering circuit breaker
+class TestLoweringBreaker:
+    def test_lowering_fault_falls_back_byte_identical(self):
+        t = make_table()
+        ops = [AggregateOp(t, "b"), GroupByOp(t, "g", "b", num_groups=8)]
+        ref_eng = RelationalMemoryEngine(revision="xla")
+        ref = ref_eng.execute_many(list(ops))
+
+        eng = RelationalMemoryEngine(revision="mlp", breaker_threshold=2,
+                                     breaker_cooldown=2)
+        with fault_plan(FaultPlan().inject("lowering", times=None, op="scan")):
+            outs = [eng.execute_many(list(ops)) for _ in range(5)]
+        for out in outs:
+            assert_same(out[0], ref[0])
+            assert_same(out[1], ref[1])
+        snap = eng.breaker.snapshot()
+        assert snap["breaker_trips"] >= 1
+        assert snap["breaker_fallbacks"] >= 1
+        assert snap["breaker_open"] == 1
+
+    def test_half_open_probe_recovers_route(self):
+        t = make_table()
+        ops = [AggregateOp(t, "b"), GroupByOp(t, "g", "b", num_groups=8)]
+        eng = RelationalMemoryEngine(revision="mlp", breaker_threshold=1,
+                                     breaker_cooldown=1)
+        with fault_plan(FaultPlan().inject("lowering", op="scan")):
+            eng.execute_many(list(ops))  # fault -> trip open
+        route = next(iter(eng.breaker._routes))
+        assert eng.breaker.state(route) == "open"
+        eng.execute_many(list(ops))  # cooldown serve (fallback)
+        eng.execute_many(list(ops))  # half-open probe succeeds
+        assert eng.breaker.state(route) == "closed"
+        assert eng.breaker.probes == 1
+
+    def test_other_site_faults_pass_through_breaker(self):
+        t = make_table()
+        eng = RelationalMemoryEngine(revision="mlp")
+        ops = [AggregateOp(t, "b"), GroupByOp(t, "g", "b", num_groups=8)]
+        eng.execute_many(list(ops))  # warm: table resident
+        with fault_plan(FaultPlan().inject("scan_launch", times=None)):
+            with pytest.raises(TransientFault):
+                eng.execute_many(list(ops))
+        assert eng.breaker.open_routes == 0  # not misattributed to lowering
+
+
+# -------------------------------------------------- sharded shard failover
+class TestShardFailover:
+    def exec_ops(self, eng, t):
+        return eng.execute_many([AggregateOp(t, "b"),
+                                 GroupByOp(t, "g", "b", num_groups=8)])
+
+    def reference(self):
+        t = make_table()
+        return self.exec_ops(RelationalMemoryEngine(revision="xla"), t)
+
+    def test_transient_shard_fault_retries_byte_identical(self):
+        ref = self.reference()
+        eng = ShardedEngine(num_shards=2, revision="xla")
+        t = make_table()
+        with fault_plan(FaultPlan().inject("shard_pass", shard=1)) as p:
+            out = self.exec_ops(eng, t)
+        assert p.fired("shard_pass") == 1
+        assert eng.stats.retries == 1
+        assert eng.stats.failovers == 0
+        for o, r in zip(out, ref):
+            assert_same(o, r)
+
+    def test_permanent_shard_fault_fails_over_byte_identical(self):
+        ref = self.reference()
+        eng = ShardedEngine(num_shards=2, revision="xla")
+        t = make_table()
+        with fault_plan(FaultPlan().inject(
+                "shard_pass", kind="permanent", times=None, shard=0)):
+            out = self.exec_ops(eng, t)
+        assert eng.stats.failovers == 1
+        assert eng.stats.bytes_failover > 0
+        for o, r in zip(out, ref):
+            assert_same(o, r)
+
+    def test_retry_exhaustion_fails_over(self):
+        ref = self.reference()
+        eng = ShardedEngine(num_shards=2, revision="xla", shard_retries=1)
+        t = make_table()
+        with fault_plan(FaultPlan().inject("shard_pass", times=None,
+                                           shard=1)):
+            out = self.exec_ops(eng, t)
+        assert eng.stats.retries == 1
+        assert eng.stats.failovers == 1
+        for o, r in zip(out, ref):
+            assert_same(o, r)
+
+    def test_quarantine_and_probe_recovery(self):
+        ref = self.reference()
+        eng = ShardedEngine(num_shards=2, revision="xla", shard_retries=0,
+                            quarantine_after=2, quarantine_probe_every=2)
+        t = make_table()
+        with fault_plan(FaultPlan().inject("shard_pass", times=None,
+                                           shard=0)):
+            self.exec_ops(eng, t)
+            self.exec_ops(eng, t)  # second failure -> quarantined
+        assert eng.shard_health() == ["quarantined", "healthy"]
+        # quarantined: pass 1 skips (straight to failover, no attempt),
+        # pass 2 probes the now-healthy shard and restores it
+        out = self.exec_ops(eng, t)
+        assert eng.shard_health()[0] == "quarantined"
+        out = self.exec_ops(eng, t)
+        assert eng.shard_health() == ["healthy", "healthy"]
+        for o, r in zip(out, ref):
+            assert_same(o, r)
+
+    def test_collective_combine_transient_retries(self):
+        ref = self.reference()
+        eng = ShardedEngine(num_shards=2, revision="xla")
+        t = make_table()
+        with fault_plan(FaultPlan().inject("collective_combine")):
+            out = self.exec_ops(eng, t)
+        assert eng.stats.retries == 1
+        for o, r in zip(out, ref):
+            assert_same(o, r)
+
+    def test_collective_combine_permanent_propagates_typed(self):
+        eng = ShardedEngine(num_shards=2, revision="xla")
+        t = make_table()
+        with fault_plan(FaultPlan().inject(
+                "collective_combine", kind="permanent", times=None)):
+            with pytest.raises(PermanentFault):
+                self.exec_ops(eng, t)
+
+    def test_sharded_server_recovers_through_failover(self):
+        ref_srv = QueryServer(RelationalMemoryEngine(revision="xla"))
+        t0 = make_table()
+        tk = ref_srv.submit(plan(t0).aggregate("b"))
+        ref_srv.drain()
+        ref = tk.result()
+
+        srv = QueryServer(ShardedEngine(num_shards=2, revision="xla"))
+        t = make_table()
+        with fault_plan(FaultPlan().inject(
+                "shard_pass", kind="permanent", times=None, shard=1)):
+            tk = srv.submit(plan(t).aggregate("b"))
+            srv.drain()
+        assert_same(tk.result(), ref)
+        snap = srv.snapshot()
+        assert snap["engine_failovers"] >= 1
+        assert snap["engine_bytes_failover"] > 0
+
+
+# ------------------------------------------------ server-level degradation
+class TestServerDegradation:
+    def test_transient_fault_retried_and_tick_mates_unaffected(self):
+        t = make_table()
+        srv = QueryServer(RelationalMemoryEngine(revision="xla"))
+        with fault_plan(FaultPlan().inject("scan_launch", at=1, times=2)):
+            a = srv.submit(plan(t).aggregate("b"))
+            b = srv.submit(plan(t).project("a"))
+            srv.drain()
+        a.result()
+        b.result()
+        snap = srv.snapshot()
+        assert snap["served"] == 2
+        assert snap["failed"] == 0
+        assert snap["retries"] >= 1
+
+    def test_poison_quarantine_resolves_typed_and_blocks_resubmits(self):
+        t = make_table()
+        srv = QueryServer(RelationalMemoryEngine(revision="xla"),
+                          max_retries=2, poison_cooldown_ticks=2)
+        q_bad = plan(t).aggregate("b").build()
+        with fault_plan(FaultPlan().inject("scan_launch", times=None,
+                                           table=t.uid)):
+            bad = srv.submit(q_bad)
+            srv.drain()
+            with pytest.raises(TransientFault):
+                bad.result()
+            assert srv.snapshot()["poisoned"] == 1
+            assert srv.snapshot()["poison_quarantined"] == 1
+            again = srv.submit(q_bad)
+            srv.drain()
+            with pytest.raises(PoisonedPlanError):
+                again.result()
+        # retries were bounded: initial attempt burns no retry, then
+        # max_retries individual re-runs for the first ticket only
+        assert srv.snapshot()["retries"] == 2
+
+    def test_quarantine_expires_after_cooldown(self):
+        t = make_table()
+        srv = QueryServer(RelationalMemoryEngine(revision="xla"),
+                          max_retries=1, poison_cooldown_ticks=1)
+        q = plan(t).aggregate("b").build()
+        with fault_plan(FaultPlan().inject("scan_launch", times=None,
+                                           table=t.uid)):
+            bad = srv.submit(q)
+            srv.drain()
+            with pytest.raises(TransientFault):
+                bad.result()
+        srv.submit(plan(t).aggregate("a"))
+        srv.drain()  # one tick: the cooldown lapses
+        ok = srv.submit(q)
+        srv.drain()
+        expect = float(np.sum(np.asarray(t.read_column("b"),
+                                         dtype=np.float64)))
+        assert float(np.asarray(ok.result())) == expect
+
+    def test_poison_does_not_starve_other_plans(self):
+        t = make_table()
+        srv = QueryServer(RelationalMemoryEngine(revision="xla"),
+                          max_retries=1)
+        q_bad = plan(t).aggregate("b").build()
+        q_good = plan(t).project("a").build()
+        with fault_plan(FaultPlan().inject("scan_launch", times=None,
+                                           table=t.uid)):
+            bad = srv.submit(q_bad)
+            srv.drain()
+            with pytest.raises(TransientFault):
+                bad.result()
+        good = srv.submit(q_good)
+        srv.drain()
+        assert np.asarray(good.result()).shape[0] == t.row_count
+
+    def test_per_lane_shed_counts_and_depths_in_message(self):
+        t = make_table()
+        srv = QueryServer(RelationalMemoryEngine(revision="xla"),
+                          max_queue=1, overload="degrade")
+        srv.submit(plan(t).project("a"))  # fills the queue (bulk)
+        srv.submit(plan(t).project("b"))  # degraded to bulk
+        with pytest.raises(Exception) as exc:  # hard shed at 2x the bound
+            srv.submit(plan(t).project("g"))
+        msg = str(exc.value)
+        assert "shed lane: bulk" in msg
+        assert "express=0" in msg and "bulk=2" in msg
+        assert srv.stats.lanes["bulk"].shed == 1
+        assert srv.stats.lanes["express"].shed == 0
+        srv.drain()
+
+    def test_expired_inflight_ticket_dropped_before_transfer(self):
+        t = make_table(2000)
+        srv = QueryServer(RelationalMemoryEngine(revision="xla"),
+                          pipeline=True)
+        tk = srv.submit(plan(t).project("a", "b"), deadline_s=0.0)
+        import time as _time
+
+        tick = srv.begin_tick()
+        _time.sleep(0.01)  # the deadline lapses while the pass is in flight
+        srv.finish_tick(tick)
+        with pytest.raises(TimeoutError):
+            tk.result()
+        snap = srv.snapshot()
+        assert snap["deadline_misses"] == 1
+        assert snap["bulk_deadline_misses"] == 1
