@@ -1,0 +1,129 @@
+"""Compressed execution (§4): dict/FOR/string codecs vs the plain row store.
+
+Three fused shapes, each run twice over byte-identical word layouts — once
+with codecs attached (kernels on raw code words, predicate constants
+translated at compile time, zero in-scan decodes) and once plain:
+
+* a low-projectivity FOR aggregate (``SUM(F) WHERE K > k``),
+* a high-projectivity filter+project over four columns (one a string),
+* a string-keyed group-by.
+
+Every row reports the Eq.(3) bus-beat bytes both ways; the encoded pass
+must move **strictly fewer** row-store bytes than the plain pass (asserted
+in-module and gated by ``perf_gate`` via the ``*_bytes`` and ``saving``
+keys), and the results must be identical (the differential harness in
+``tests/test_compressed_execution.py`` pins this at scale — here we spot
+check the figure's own query set).
+"""
+
+import numpy as np
+
+from repro.core.compression import DictCodec
+from repro.core.requests import AggregateOp, FilterOp, GroupByOp
+from repro.core.schema import Column, TableSchema
+from repro.core.table import RelationalTable
+
+from .common import bench_rows, emit, fresh_engine, timeit
+
+N_ROWS = 40_000
+
+STRINGS = np.array(
+    ["amber", "basil", "cedar", "ember", "fig", "grove", "holly", "iris"]
+)
+
+ENC_SCHEMA = TableSchema((
+    Column("K", "int32", codec="dict"),
+    Column("F", "int32", codec="for"),
+    Column("S", "str"),
+    Column("V", "int32"),
+    Column("P", "int32"),
+))
+
+# the plain twin: identical five-word layout, strings as raw codes
+PLAIN_SCHEMA = TableSchema((
+    Column("K", "int32"),
+    Column("F", "int32"),
+    Column("S", "int32"),
+    Column("V", "int32"),
+    Column("P", "int32"),
+))
+
+
+def _tables(n: int) -> tuple[RelationalTable, RelationalTable]:
+    rng = np.random.default_rng(7)
+    cols = {
+        "K": rng.integers(0, 64, n).astype(np.int32),     # 64-entry dict
+        "F": (500 + rng.integers(0, 128, n)).astype(np.int32),  # 7-bit deltas
+        "S": rng.choice(STRINGS, n),
+        "V": rng.integers(-1000, 1000, n).astype(np.int32),
+        "P": rng.integers(-1000, 1000, n).astype(np.int32),
+    }
+    enc = RelationalTable.from_columns(ENC_SCHEMA, cols)
+    plain = RelationalTable.from_columns(
+        PLAIN_SCHEMA, dict(cols, S=DictCodec.fit(cols["S"]).encode(cols["S"]))
+    )
+    return enc, plain
+
+
+def _measure(build_op, table):
+    """(bytes_from_dram, bytes_saved, decodes, result, median us) of one
+    fused op on a fresh engine — cold bytes, then resident-repeat timing."""
+    eng = fresh_engine()
+    res = eng.execute_many([build_op(eng, table)])[0]
+    moved = eng.stats.bytes_from_dram
+    saved = eng.stats.bytes_saved_compression
+    decodes = eng.stats.decodes
+    us = timeit(lambda: eng.execute_many([build_op(eng, table)]), iters=5)
+    return moved, saved, decodes, res, us
+
+
+def _pair(name: str, build_op, enc, plain, compare) -> None:
+    e_bytes, e_saved, e_decodes, e_res, e_us = _measure(build_op, enc)
+    p_bytes, _, _, p_res, p_us = _measure(build_op, plain)
+    # the compressed pass must move strictly fewer row-store bytes and
+    # never decode in-scan; and the two passes must agree
+    assert e_bytes < p_bytes, (name, e_bytes, p_bytes)
+    assert e_decodes == 0, (name, e_decodes)
+    assert e_saved == p_bytes - e_bytes, (name, e_saved, p_bytes - e_bytes)
+    compare(e_res, p_res)
+    emit(
+        f"fig_compression/{name}", e_us,
+        f"encoded_bytes={e_bytes},plain_bytes={p_bytes},"
+        f"saving={p_bytes / max(e_bytes, 1):.2f},"
+        f"bytes_saved={e_saved},plain_us={p_us:.1f},"
+        f"speedup={p_us / max(e_us, 1e-9):.2f}x",
+    )
+
+
+def run() -> None:
+    n = bench_rows(N_ROWS)
+    enc, plain = _tables(n)
+
+    def agg(eng, t):
+        return AggregateOp(t, "F", pred_col="K", pred_op="gt", pred_k=20)
+
+    def agg_eq(a, b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    _pair("aggregate_for", agg, enc, plain, agg_eq)
+
+    def filt(eng, t):
+        return FilterOp(eng.register(t, ("K", "F", "S", "V")), "P", "lt", 0)
+
+    def filt_eq(a, b):
+        # plain columns and masks are byte-equal; K/F/S carry raw codes on
+        # the encoded side, whose decode-equality the tier-1 harness owns
+        np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+        np.testing.assert_array_equal(np.asarray(a[0])[:, 3],
+                                      np.asarray(b[0])[:, 3])
+
+    _pair("filter_project", filt, enc, plain, filt_eq)
+
+    def gbs(eng, t):
+        return GroupByOp(t, "S", "V", len(STRINGS))
+
+    def gbs_eq(a, b):
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    _pair("groupby_string", gbs, enc, plain, gbs_eq)

@@ -33,6 +33,7 @@ from . import (
     fig11_queries_rowsize,
     fig12_join,
     fig13_scaling,
+    fig_compression,
     fig_concurrent_queries,
     fig_dist_scaling,
     fig_fault_recovery,
@@ -56,6 +57,7 @@ MODULES = [
     fig11_queries_rowsize,
     fig12_join,
     fig13_scaling,
+    fig_compression,
     fig_concurrent_queries,
     fig_dist_scaling,
     fig_fault_recovery,

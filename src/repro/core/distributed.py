@@ -532,6 +532,20 @@ class ShardedRowStore(DeviceRowStore):
         )
 
 
+def _empty_scan_result(req: "KR.ScanRequest"):
+    """The canonical output of a fused request over zero rows — what a
+    0-row table (no chunks on any shard) must still answer with."""
+    if isinstance(req, KR.ProjectRequest):
+        return jnp.zeros((0, req.geom.out_words_per_row), jnp.int32)
+    if isinstance(req, KR.FilterRequest):
+        return (jnp.zeros((0, req.geom.out_words_per_row), jnp.int32),
+                jnp.zeros((0,), bool))
+    if isinstance(req, KR.AggregateRequest):
+        return jnp.zeros(2, jnp.float32)
+    return (jnp.zeros(req.num_groups, jnp.float32),
+            jnp.zeros(req.num_groups, jnp.float32))
+
+
 class ShardedEngine(RelationalMemoryEngine):
     """The mesh-sharded execution backend — same results, per-bank datapath.
 
@@ -648,14 +662,17 @@ class ShardedEngine(RelationalMemoryEngine):
             outs = self._shard_pass(table, s, chunks, reqs, block_rows)
             per_shard.append((chunks, outs))
             for c in chunks:
-                self.stats.bytes_from_dram += self.scan_bytes(
-                    table, reqs, row_count=c.rows
-                )
+                self.charge_scan(table, reqs, row_count=c.rows)
         self.stats.shared_scans += 1
         self.stats.rows_projected += table.row_count
         active = len(per_shard)
         results = []
         for r, req in enumerate(reqs):
+            if not per_shard:
+                # a 0-row table owns no chunks on any shard: emit the same
+                # canonical empty/zero outputs the single-device pass yields
+                results.append(self._to_root(_empty_scan_result(req)))
+                continue
             reduced = KR.reduced_result_bytes(req)
             if reduced is not None:
                 # shard-local combine first, then one cross-shard combine of
@@ -832,14 +849,18 @@ class ShardedEngine(RelationalMemoryEngine):
                     op.snapshot_ts or 0, snap,
                     route=(table.uid, "join"),
                 )
-                self.stats.bytes_from_dram += self.scan_bytes(
-                    table, (acc_req,), row_count=chunk.rows
-                )
+                self.charge_scan(table, (acc_req,), row_count=chunk.rows)
                 off = 0
                 for start, n in chunk.segments:
                     pieces.append((start, tuple(o[off:off + n] for o in out)))
                     off += n
         pieces.sort(key=lambda p: p[0])
+        if not pieces:  # a 0-row probe table owns no chunks on any shard
+            return JoinResult(
+                s_proj=jnp.zeros(0, jnp.int32),
+                r_proj=jnp.zeros(0, jnp.int32),
+                matched=jnp.zeros(0, bool),
+            )
         return JoinResult.concat(
             [JoinResult(*self._to_root(t)) for _, t in pieces]
         )

@@ -86,7 +86,8 @@ from repro.kernels.rme_project import vmem_footprint_bytes
 from . import faults
 from .descriptor import bytes_moved
 from .ephemeral import EphemeralView
-from .requests import AggregateOp, JoinOp, JoinResult, ProjectOp, ScanOp
+from .requests import (AggregateOp, JoinOp, JoinResult, ProjectOp, ScanOp,
+                       finalize_scan_result)
 from .schema import WORD, TableGeometry
 from .table import RelationalTable
 
@@ -128,6 +129,15 @@ class EngineStats:
       join build-partition broadcasts.  Always O(result/build) bytes, never
       O(rows) — blocked outputs gather through ``bytes_to_cpu`` like any
       packed view.  Zero on the single-device backend.
+    * ``bytes_saved_compression`` — bytes the §4 codecs kept *off* the bus:
+      for every charged pass whose union geometry touches encoded columns,
+      the plain-width Eq.(3) cost minus the narrow cost actually booked to
+      ``bytes_from_dram`` (``charge_scan`` is the single charge point).
+    * ``decodes`` / ``decode_cache_hits`` — client-visible decode events on
+      packed results (``EphemeralView.column`` → :meth:`RelationalMemoryEngine.
+      decode_column``): real dictionary/FOR decodes vs per-table-version
+      cache hits.  The fused pass itself never decodes — these counters stay
+      0 until someone *reads* an encoded packed output.
     * ``retries`` / ``failovers`` / ``bytes_failover`` — the reliability
       layer's recovery work (``docs/reliability.md``): transient-fault
       retries of a shard pass or collective combine, shard passes
@@ -156,6 +166,9 @@ class EngineStats:
     retries: int = 0  # transient-fault retries (shard passes, combines)
     failovers: int = 0  # shard passes re-executed on the root device
     bytes_failover: int = 0  # row bytes re-scanned by failover passes
+    bytes_saved_compression: int = 0  # plain-minus-narrow bytes codecs kept off the bus
+    decodes: int = 0  # client-read decodes of encoded packed results
+    decode_cache_hits: int = 0  # decode results served from the per-version cache
 
     def reset(self) -> None:
         self.hot_hits = 0
@@ -177,6 +190,9 @@ class EngineStats:
         self.retries = 0
         self.failovers = 0
         self.bytes_failover = 0
+        self.bytes_saved_compression = 0
+        self.decodes = 0
+        self.decode_cache_hits = 0
 
 
 @dataclasses.dataclass
@@ -504,6 +520,9 @@ class RelationalMemoryEngine:
         self.cache = ReorgCache(cache_bytes)
         self.stats = EngineStats()
         self.rowstore = DeviceRowStore(self.stats, delta=delta_uploads)
+        # decode-on-finalize cache: decoded client reads of encoded packed
+        # outputs, keyed per table version/storage epoch (FIFO-capped)
+        self._decode_cache: dict[tuple, object] = {}
         # lowering circuit breaker: flips a repeatedly-failing (table,
         # request-shape) route to the XLA fallback (docs/reliability.md)
         self.breaker = faults.CircuitBreaker(
@@ -566,8 +585,11 @@ class RelationalMemoryEngine:
         classification) must agree on.  Keyed by the column *layout* only
         (row count excluded): a view over a grown table shares its slot with
         the pre-growth entry, which is what makes delta serving possible —
-        the entry's stored version records the rows it covers."""
-        return (table.uid, geom.layout_key(), self.revision)
+        the entry's stored version records the rows it covers.  The table's
+        ``storage_epoch`` is folded in: a codec re-fit rewrites stored code
+        words in place, so every pre-refit packed block is garbage."""
+        return (table.uid, geom.layout_key(), self.revision,
+                getattr(table, "storage_epoch", 0))
 
     def peek_project(self, table: RelationalTable,
                      geom: TableGeometry) -> jax.Array | None:
@@ -819,7 +841,8 @@ class RelationalMemoryEngine:
             for i, req in entries:
                 out = by_req[req]
                 results[i] = (self._finish_join(ops[i], out)
-                              if isinstance(ops[i], JoinOp) else out)
+                              if isinstance(ops[i], JoinOp)
+                              else finalize_scan_result(ops[i], out))
         return results
 
     def execute_many_async(self, ops: Sequence[ScanOp]) -> PassHandle:
@@ -875,9 +898,7 @@ class RelationalMemoryEngine:
         self.stats.shared_scans += 1
         self.stats.rows_projected += table.row_count
         for chunk in chunks:
-            self.stats.bytes_from_dram += self.scan_bytes(
-                table, reqs, row_count=chunk.shape[0]
-            )
+            self.charge_scan(table, reqs, row_count=chunk.shape[0])
         return outs
 
     def _scan_chunk(self, chunk: jax.Array,
@@ -921,7 +942,7 @@ class RelationalMemoryEngine:
             self.stats.bytes_from_dram += bytes_moved(req.geom)["rme"]
         else:
             self.stats.rows_projected += table.row_count
-            self.stats.bytes_from_dram += self.scan_bytes(table, (req,))
+            self.charge_scan(table, (req,))
         if self.revision == "xla":
             return self._solo_kernel(words, req)
         route = (table.uid, (KR._strip_dynamic(req),))
@@ -1073,9 +1094,7 @@ class RelationalMemoryEngine:
         acc_req = op.lower()  # its intervals are exactly the probe footprint
         self.stats.rows_projected += table.row_count
         for chunk in chunks:
-            self.stats.bytes_from_dram += self.scan_bytes(
-                table, (acc_req,), row_count=chunk.shape[0]
-            )
+            self.charge_scan(table, (acc_req,), row_count=chunk.shape[0])
         return JoinResult.concat([JoinResult(*o) for o in outs])
 
     def _finish_join(self, op: JoinOp, out) -> JoinResult:
@@ -1107,16 +1126,86 @@ class RelationalMemoryEngine:
         pass over one chunk (default: the whole table).  The row stride is
         the schema's — unless a fused MVCC snapshot enables the hidden
         timestamp words, in which case the storage stride (what the stream
-        walks) is the honest model."""
+        walks) is the honest model.
+
+        When the union touches encoded columns (paper §4), the pass is
+        priced at the codecs' *narrow* word budget instead — each encoded
+        word contributes ``codec.code_bytes`` per row rather than its full
+        4-byte slot — capped by the plain Eq.(3) cost.  Pure: callers that
+        estimate (serving-layer scan-sharing stats) and callers that charge
+        (:meth:`charge_scan`) see the same number.
+        """
+        narrow, _ = self._scan_bytes_pair(table, reqs, row_count)
+        return narrow
+
+    def charge_scan(self, table: RelationalTable,
+                    reqs: Sequence["KR.ScanRequest"],
+                    row_count: int | None = None) -> int:
+        """Book one pass's bus-beat bytes — the single charge point.
+
+        ``bytes_from_dram`` takes the (possibly codec-narrowed) cost;
+        ``bytes_saved_compression`` takes the plain-minus-narrow remainder,
+        so ``bytes_from_dram + bytes_saved_compression`` is always the
+        uncompressed Eq.(3) cost of the same passes."""
+        narrow, plain = self._scan_bytes_pair(table, reqs, row_count)
+        self.stats.bytes_from_dram += narrow
+        self.stats.bytes_saved_compression += plain - narrow
+        return narrow
+
+    def _scan_bytes_pair(self, table: RelationalTable,
+                         reqs: Sequence["KR.ScanRequest"],
+                         row_count: int | None = None) -> tuple[int, int]:
+        """(narrow, plain) Eq.(3) bytes of one pass; equal when no enabled
+        word is codec-backed."""
         max_end = max(o + w for r in reqs for o, w in K.request_intervals(r))
         row_bytes = table.schema.row_bytes
         if max_end > row_bytes:
             row_bytes = table.row_words * WORD
-        union = K.union_geometry(
-            reqs, row_bytes=row_bytes,
-            row_count=table.row_count if row_count is None else row_count,
+        rows = table.row_count if row_count is None else row_count
+        union = K.union_geometry(reqs, row_bytes=row_bytes, row_count=rows)
+        plain = bytes_moved(union)["rme"]
+        codecs = getattr(table, "codecs", None)
+        if not codecs:
+            return plain, plain
+        enabled: set[int] = set()
+        for r in reqs:
+            for o, w in K.request_intervals(r):
+                enabled.update(range(o // WORD, -(-(o + w) // WORD)))
+        by_word = {table.schema.word_offset(n): c for n, c in codecs.items()}
+        if not any(w in enabled for w in by_word):
+            return plain, plain
+        per_row = sum(
+            by_word[w].code_bytes if w in by_word else WORD for w in enabled
         )
-        return bytes_moved(union)["rme"]
+        return min(plain, rows * per_row), plain
+
+    # FIFO cap on cached decoded client reads — decoded string columns can be
+    # large, and one live (table-version, result) pair per view is the norm
+    DECODE_CACHE_MAX = 64
+
+    def decode_column(self, table: RelationalTable, name: str, codes,
+                      token: tuple = ()):
+        """Decode-on-finalize: map a packed result's raw code words for
+        column ``name`` back to values, cached per table version.
+
+        This is the *only* place the engine decodes — the fused pass
+        operates on raw codes end to end.  ``token`` distinguishes reads of
+        the same column under different result shapes (e.g. a snapshot
+        view's visible-row slice).  The cache key folds in ``version`` and
+        ``storage_epoch`` so any append/update/refit invalidates naturally.
+        """
+        codec = table.codecs[name]
+        key = (table.uid, name, table.version,
+               getattr(table, "storage_epoch", 0), token)
+        if key in self._decode_cache:
+            self.stats.decode_cache_hits += 1
+            return self._decode_cache[key]
+        self.stats.decodes += 1
+        out = codec.decode(codes)
+        while len(self._decode_cache) >= self.DECODE_CACHE_MAX:
+            self._decode_cache.pop(next(iter(self._decode_cache)))
+        self._decode_cache[key] = out
+        return out
 
     def _fused_block_rows(self, reqs: Sequence["KR.ScanRequest"],
                           row_words: int) -> int:

@@ -81,6 +81,15 @@ class EphemeralView:
         raw = packed[:, off : off + w]
         mask = np.asarray(self.valid_mask())
         live = np.asarray(raw)[mask]
+        codec = self.table.codecs.get(name)
+        if codec is not None:
+            # decode-on-finalize: the packed block carries raw code words;
+            # the engine decodes (and caches per table version) only here,
+            # when a client actually reads the column
+            token = ("ts", self.snapshot_ts) if self.snapshot_ts is not None else ()
+            return self.engine.decode_column(
+                self.table, name, live.reshape(-1), token=token
+            )
         if col.dtype == "char":
             return live.view(np.uint8).reshape(-1, col.width)
         if col.dtype == "int32":

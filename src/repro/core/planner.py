@@ -202,7 +202,9 @@ def execute_sum(
     """Plan + execute a Q0/Q3-shaped query through the chosen path."""
     cols = [agg_col] + ([pred_col] if pred_col else [])
     plan = plan_query(engine, table, cols, aggregate_only=True)
-    if plan.path == "fused":
+    # encoded columns must ride the fused path: the packed-view reduction
+    # below reads raw words, which for a codec column are code words
+    if plan.path == "fused" or any(c in table.codecs for c in cols):
         s, _ = engine.aggregate(table, agg_col, pred_col, pred_op, pred_k)
         return s, plan
     view = engine.register(table, tuple(cols))
@@ -232,9 +234,19 @@ def _pred_mask(vals: jax.Array, op: str, k) -> jax.Array:
 
 def _col_from_rows(table: RelationalTable, name: str) -> jax.Array:
     """Direct row-wise column read: ships every row word, slices one column."""
+    col = table.schema.column(name)
+    codec = table.codecs.get(name)
+    if codec is not None:
+        if col.dtype == "str":
+            raise PlanError(
+                f"string column {name!r} has no host-baseline spelling — "
+                "strings execute on their codes through the rme path"
+            )
+        # host baselines reason in value space: decode the stored codes
+        raw = table.words()[:, table.schema.word_offset(name)]
+        return jnp.asarray(codec.decode_np(raw, np.arange(table.row_count)))
     words = jnp.asarray(table.words())  # the whole row store moves
     off = table.schema.word_offset(name)
-    col = table.schema.column(name)
     return _decode_i32(words[:, off], col.dtype)
 
 
@@ -267,6 +279,11 @@ def _host_words(
         off = table.schema.word_offset(name)
         return words[:, off : off + col.words]
     arr = np.asarray(colstore[name])
+    if arr.dtype.kind in ("U", "O"):
+        raise PlanError(
+            f"string column {name!r} has no raw-words host spelling — "
+            "strings pack as dictionary codes on the rme path only"
+        )
     if arr.dtype.kind == "S":  # char columns travel as raw words
         arr = np.ascontiguousarray(arr).view(np.uint8).reshape(
             table.row_count, -1
@@ -465,6 +482,11 @@ def _check_fused_dtypes(table: RelationalTable, *cols: str | None) -> None:
     for name in cols:
         if name is None:
             continue
+        if name in table.codecs:
+            # codec-backed columns store raw int32 code words — exactly what
+            # the fused kernels read; predicate constants are code-translated
+            # at lowering and results fixed up op-level, never decoded in-scan
+            continue
         dtype = table.schema.column(name).dtype
         if dtype not in ("int32", "float32"):
             raise ValueError(
@@ -517,7 +539,9 @@ def _compile_aggregate(
         )
 
     cost = plan_query(engine, shape.table, list(shape.columns), aggregate_only=True)
-    if cost.path == "fused" or snapshot_ts is not None:
+    encoded = any(c is not None and c in shape.table.codecs
+                  for c in (agg.col, pred_col))
+    if cost.path == "fused" or snapshot_ts is not None or encoded:
         # the aggregate is a scan op: compiled into a tick's batch it rides
         # the shared heterogeneous pass; compiled alone, execute_many routes
         # it to the single-op rme_aggregate kernel.  A snapshot-pinned
@@ -675,11 +699,19 @@ def _compile_project(
                 # engine-side — same (packed, mask) contract as the kernel
                 def launch(_):
                     words = engine.device_words(table)
+                    codec = table.codecs.get(pred_col)
+                    # beyond-Q-cap fallback matches the fused contract: the
+                    # predicate compares raw code words against the
+                    # code-translated constant (packed rows stay encoded)
+                    op_, k_ = (codec.translate_pred(pred_op, pred_k)
+                               if codec is not None else (pred_op, pred_k))
                     p = _decode_i32(
                         words[:, table.schema.word_offset(pred_col)],
-                        table.schema.column(pred_col).dtype,
+                        "int32" if codec is not None
+                        else table.schema.column(pred_col).dtype,
                     )
-                    mask = _pred_mask(p, pred_op, pred_k)
+                    mask = (_pred_mask(p, op_, k_) if op_ != "none"
+                            else jnp.ones(p.shape, dtype=bool))
                     if snapshot_ts is not None:
                         mask = mask & engine.valid_mask(table, snapshot_ts)
                     packed = _resident_full_rows(engine, table, cols)
@@ -727,7 +759,8 @@ def _compile_project(
             # (or beyond the Q cap) takes the resident-row fallback below.
             pred_anchor = next(
                 (n for n in cols
-                 if table.schema.column(n).dtype in ("int32", "float32")),
+                 if n in table.codecs  # code words are int32, inert op never decodes
+                 or table.schema.column(n).dtype in ("int32", "float32")),
                 None,
             )
             if len(cols) <= MAX_ENABLED_COLUMNS and pred_anchor is not None:
@@ -809,14 +842,27 @@ def _sort_probe(
 def _device_join_expressible(shape: QueryShape) -> bool:
     """Can the device hash route serve this join?  The probe kernel reads raw
     single-word columns and hashes the key with integer modulo, so both key
-    columns must be int32 and both payloads 4-byte numeric."""
+    columns must be int32 (or dict-encoded — raw codes are int32 and equal
+    codes mean equal values iff both sides share one table-level dictionary)
+    and both payloads plain 4-byte numeric (the probe emits 0 for unmatched
+    rows, and 0 is a valid code word, so encoded payloads are out)."""
     j = shape.join
-    for table, names in ((shape.table, (j.key, j.left_proj)),
-                         (j.right_table, (j.key, j.right_proj))):
-        for name in names:
-            col = table.schema.column(name)
-            if col.words != 1 or col.dtype not in ("int32", "float32"):
-                return False
+    for table, name in ((shape.table, j.left_proj),
+                        (j.right_table, j.right_proj)):
+        col = table.schema.column(name)
+        if (col.words != 1 or col.dtype not in ("int32", "float32")
+                or name in table.codecs):
+            return False
+    for table in (shape.table, j.right_table):
+        if table.schema.column(j.key).words != 1:
+            return False
+    a = shape.table.codecs.get(j.key)
+    b = j.right_table.codecs.get(j.key)
+    if a is not None or b is not None:
+        from .compression import DictCodec
+        if not (isinstance(a, DictCodec) and isinstance(b, DictCodec)):
+            return False
+        return a is b or bool(np.array_equal(a.dictionary, b.dictionary))
     return (shape.table.schema.column(j.key).dtype == "int32"
             and j.right_table.schema.column(j.key).dtype == "int32")
 
@@ -923,6 +969,25 @@ def _compile_join(
     cached = _probe_build_index(r_table, j.key, j.right_proj, path)
 
     if path == "rme":
+        # a string key reaching this route means the device route was not
+        # expressible — i.e. the two dictionaries differ — and string codes
+        # cannot decode into the sort-probe's numeric key space
+        if any(t.schema.column(j.key).dtype == "str"
+               for t in (s_table, r_table)):
+            raise PlanError(
+                f"string join key {j.key!r} needs one shared table-level "
+                "dictionary on both tables (device hash route)"
+            )
+
+        def _probe_key(t: RelationalTable, codes: jax.Array) -> jax.Array:
+            # mismatched per-table dictionaries: codes are not comparable
+            # across tables, so the sort-probe decodes them first — the one
+            # honest decode in the join stack, and only on this route
+            codec = t.codecs.get(j.key)
+            if codec is None:
+                return codes
+            return jnp.asarray(codec.decode(codes))
+
         sv = engine.register(s_table, (j.left_proj, j.key))
         rv = None if cached is not None else engine.register(
             r_table, (j.key, j.right_proj)
@@ -932,12 +997,13 @@ def _compile_join(
         def launch(packed):
             def read_build():
                 r_packed = packed[1]
-                return (r_packed[:, rv.column_words(j.key)[0]],
+                return (_probe_key(r_table,
+                                   r_packed[:, rv.column_words(j.key)[0]]),
                         r_packed[:, rv.column_words(j.right_proj)[0]])
 
             s_packed = packed[0]
             return _sort_probe(
-                s_packed[:, sv.column_words(j.key)[0]],
+                _probe_key(s_table, s_packed[:, sv.column_words(j.key)[0]]),
                 s_packed[:, sv.column_words(j.left_proj)[0]],
                 cached, read_build, r_table, j.key, j.right_proj, path,
             )

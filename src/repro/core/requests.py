@@ -41,9 +41,12 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import rme_scan_multi as KR
+from repro.kernels.common import group_ids
 
+from .compression import DeltaCodec, DictCodec
 from .ephemeral import EphemeralView
 from .table import RelationalTable
 
@@ -104,6 +107,15 @@ def _pred_fields(table: RelationalTable, pred_col: str | None, pred_op: str,
     else:
         pred_word = schema.word_offset(pred_col)
         pred_dtype = schema.column(pred_col).dtype
+        codec = table.codecs.get(pred_col)
+        if codec is not None:
+            # compile-time predicate translation (paper §4): the stored words
+            # are raw int32 codes, and the codec's order structure maps the
+            # value-space constant to the equivalent code-space constant —
+            # the kernel compares codes, zero decode in-scan
+            pred_dtype = "int32"
+            if pred_op != "none":
+                pred_op, pred_k = codec.translate_pred(pred_op, pred_k)
     return dict(
         pred_word=pred_word,
         pred_dtype=pred_dtype,
@@ -161,7 +173,7 @@ class AggregateOp:
     def lower(self) -> KR.AggregateRequest:
         schema = self.table.schema
         agg_word = schema.word_offset(self.agg_col)
-        agg_dtype = schema.column(self.agg_col).dtype
+        agg_dtype = _agg_lower_dtype(self.table, self.agg_col)
         return KR.AggregateRequest(
             agg_word=agg_word,
             agg_dtype=agg_dtype,
@@ -189,11 +201,31 @@ class GroupByOp:
     def lower(self) -> KR.GroupByRequest:
         schema = self.table.schema
         agg_word = schema.word_offset(self.agg_col)
-        agg_dtype = schema.column(self.agg_col).dtype
+        agg_dtype = _agg_lower_dtype(self.table, self.agg_col)
+        group_codec = self.table.codecs.get(self.group_col)
+        num_groups = self.num_groups
+        if group_codec is not None:
+            # group on raw codes: dictionary codes are dense [0, n), so the
+            # kernel's modulo grouping is the identity over the code domain
+            # and the op-level finalize remaps the per-code partials into the
+            # caller's value groups from the dictionary alone
+            if not isinstance(group_codec, DictCodec):
+                raise ValueError(
+                    "group-by keys need a dict codec (FOR codes are not "
+                    "group identities)"
+                )
+            n = int(group_codec.dictionary.size)
+            if (group_codec.dictionary.dtype.kind in ("U", "S", "O")
+                    and self.num_groups < n):
+                raise ValueError(
+                    f"num_groups={self.num_groups} cannot cover the "
+                    f"{n}-entry string dictionary"
+                )
+            num_groups = max(n, 1)
         return KR.GroupByRequest(
             group_word=schema.word_offset(self.group_col),
             agg_word=agg_word,
-            num_groups=self.num_groups,
+            num_groups=num_groups,
             agg_dtype=agg_dtype,
             **_pred_fields(self.table, self.pred_col, self.pred_op,
                            self.pred_k, self.snapshot_ts, agg_word, agg_dtype),
@@ -236,6 +268,8 @@ class JoinOp:
         return self.view.table
 
     def lower(self) -> KR.ProjectRequest | KR.FilterRequest:
+        check_join_encoding(self.table, self.right_table, self.key,
+                            self.left_proj, self.right_proj)
         if self.snapshot_ts is None:
             return KR.ProjectRequest(self.view.geometry)
         # inert predicate over the (int32) key column: the request's mask is
@@ -252,3 +286,112 @@ class JoinOp:
 
 
 ScanOp = ProjectOp | FilterOp | AggregateOp | GroupByOp | JoinOp
+
+
+def _agg_lower_dtype(table: RelationalTable, agg_col: str) -> str:
+    """The kernel-visible dtype of an aggregate column, codec-aware.
+
+    A FOR-encoded column sums on its raw int32 deltas (the affine fix-up is
+    applied by :func:`finalize_scan_result`); dictionary codes carry no
+    additive structure, so summing them would be silent garbage — reject."""
+    codec = table.codecs.get(agg_col)
+    if codec is None:
+        return table.schema.column(agg_col).dtype
+    if isinstance(codec, DictCodec):
+        raise ValueError(
+            f"column {agg_col!r} is dict-encoded: codes are ranks, not "
+            "addends — aggregate a FOR-encoded or plain column instead"
+        )
+    return "int32"  # FOR deltas are plain int32 words
+
+
+def check_join_encoding(left: RelationalTable, right: RelationalTable,
+                        key: str, left_proj: str, right_proj: str) -> None:
+    """Execute-time guard for the device join route on encoded tables.
+
+    Raw code words are join identities only when *both* key columns encode
+    through one table-level dictionary (equal codes ⟺ equal values) — a
+    re-fit on either side between compile and execute breaks that, which is
+    why :meth:`JoinOp.lower` re-checks on every execution.  Projected
+    payloads must be plain numeric: the probe emits zeros for unmatched
+    rows, and zero is a valid code word."""
+    for table, col in ((left, left_proj), (right, right_proj)):
+        if col in table.codecs:
+            raise ValueError(
+                f"join payload column {col!r} must be plain numeric "
+                "(unmatched rows emit 0, which is a valid code word)"
+            )
+    a, b = left.codecs.get(key), right.codecs.get(key)
+    if a is None and b is None:
+        return
+    if a is None or b is None:
+        raise ValueError(
+            f"join key {key!r} is encoded on one side only — codes cannot "
+            "compare against plain values"
+        )
+    if not (isinstance(a, DictCodec) and isinstance(b, DictCodec)):
+        raise ValueError("join keys need dict codecs (FOR deltas are not "
+                         "join identities)")
+    if a is not b and not np.array_equal(a.dictionary, b.dictionary):
+        raise ValueError(
+            f"join key {key!r} needs one shared table-level dictionary "
+            "(fit both tables with the same DictCodec)"
+        )
+
+
+def _remap_group_partials(codec: DictCodec, num_groups: int, sums, counts):
+    """Per-code group-by partials -> the caller's value-group domain.
+
+    The kernel grouped on raw codes (dense ``[0, n_dict)``); the dictionary
+    alone determines where each code's partial lands, so this touches no row
+    data and never decodes.  Integer dictionaries re-bucket by the shared
+    ``group_ids`` lowering over the *values*; string dictionaries have no
+    modulo semantics — each distinct string is its own group, zero-padded up
+    to the caller's ``num_groups`` (coverage checked at lowering)."""
+    d = codec.dictionary
+    if d.size == 0:
+        zeros = jnp.zeros(num_groups, jnp.float32)
+        return zeros, zeros
+    if d.dtype.kind in ("U", "S", "O"):
+        pad = num_groups - int(d.size)
+        if pad > 0:
+            sums = jnp.concatenate([sums, jnp.zeros(pad, sums.dtype)])
+            counts = jnp.concatenate([counts, jnp.zeros(pad, counts.dtype)])
+        return sums, counts
+    g = group_ids(jnp.asarray(d.astype(np.int32)), num_groups)
+    return (jax.ops.segment_sum(sums, g, num_segments=num_groups),
+            jax.ops.segment_sum(counts, g, num_segments=num_groups))
+
+
+def finalize_scan_result(op: ScanOp, out):
+    """Op-level fix-ups after a raw-code fused pass — the only post-scan
+    work compressed execution needs, all O(result) and decode-free.
+
+    * ``AggregateOp`` over a FOR column: the kernel summed raw deltas, so
+      ``sum = base * count + sum(deltas)`` (paper §4's aggregation identity).
+    * ``GroupByOp``: the same affine fix-up per group, then per-code
+      partials remap to the caller's group domain via the dictionary.
+    * Everything else (including packed filter/project outputs, which carry
+      raw codes until a client *reads* them) passes through untouched.
+
+    Applied by ``execute_many`` on both backends — on the sharded engine the
+    cross-shard combine happens first, so the remap runs once on the reduced
+    partials, never per shard.
+    """
+    if isinstance(op, AggregateOp):
+        codec = op.table.codecs.get(op.agg_col)
+        if isinstance(codec, DeltaCodec):
+            return jnp.stack([out[0] + codec.base * out[1], out[1]])
+        return out
+    if isinstance(op, GroupByOp):
+        sums, counts = out
+        agg_codec = op.table.codecs.get(op.agg_col)
+        if isinstance(agg_codec, DeltaCodec):
+            sums = sums + agg_codec.base * counts
+        group_codec = op.table.codecs.get(op.group_col)
+        if isinstance(group_codec, DictCodec):
+            sums, counts = _remap_group_partials(
+                group_codec, op.num_groups, sums, counts
+            )
+        return sums, counts
+    return out

@@ -41,13 +41,24 @@ _SUPPORTED = {
 class Column:
     """One attribute of a relation.
 
-    ``dtype`` is one of the supported scalar names or ``"char"``; for ``"char"``
-    ``width`` gives the field size in bytes (word aligned).
+    ``dtype`` is one of the supported scalar names, ``"char"`` (fixed-width
+    byte string; ``width`` gives the field size in bytes, word aligned), or
+    ``"str"`` — a variable-length string column stored as one int32
+    dictionary-code word (paper §4: encoded columns live in the row store as
+    narrow code words; decoding happens on result materialization).
+
+    ``codec`` optionally declares table-level compression for the stored
+    words: ``"dict"`` (order-preserving dictionary, int32 or str values) or
+    ``"for"`` (global frame-of-reference, int32 only).  ``"str"`` columns are
+    dictionary-coded by construction, so their ``codec`` is forced to
+    ``"dict"``.  The codec itself (dictionary / reference) is fitted and
+    owned by the :class:`~repro.core.table.RelationalTable` at ingest.
     """
 
     name: str
     dtype: str = "int32"
     width: int | None = None  # bytes; inferred for scalar dtypes
+    codec: str | None = None  # "dict" | "for" | None
 
     def __post_init__(self):
         if self.dtype == "char":
@@ -56,6 +67,19 @@ class Column:
                     f"char column {self.name!r} needs a positive word-aligned width,"
                     f" got {self.width}"
                 )
+        elif self.dtype == "str":
+            if self.width not in (None, WORD):
+                raise ValueError(
+                    f"str column {self.name!r} is one code word ({WORD}B), got"
+                    f" width {self.width}"
+                )
+            object.__setattr__(self, "width", WORD)
+            if self.codec not in (None, "dict"):
+                raise ValueError(
+                    f"str column {self.name!r} is dictionary-coded; codec"
+                    f" {self.codec!r} is not expressible"
+                )
+            object.__setattr__(self, "codec", "dict")
         elif self.dtype in _SUPPORTED:
             expect = _SUPPORTED[self.dtype][1]
             if self.width is None:
@@ -67,6 +91,21 @@ class Column:
                 )
         else:
             raise ValueError(f"unsupported dtype {self.dtype!r} for column {self.name!r}")
+        if self.codec is not None:
+            if self.codec not in ("dict", "for"):
+                raise ValueError(
+                    f"column {self.name!r}: unknown codec {self.codec!r};"
+                    " want 'dict' or 'for'"
+                )
+            if self.dtype not in ("int32", "str"):
+                raise ValueError(
+                    f"column {self.name!r}: codec {self.codec!r} needs an"
+                    f" int32 or str column, not {self.dtype}"
+                )
+            if self.codec == "for" and self.dtype != "int32":
+                raise ValueError(
+                    f"column {self.name!r}: FOR encoding needs int32 values"
+                )
 
     @property
     def words(self) -> int:
@@ -76,6 +115,8 @@ class Column:
     def np_dtype(self) -> np.dtype:
         if self.dtype == "char":
             return np.dtype((np.bytes_, self.width))
+        if self.dtype == "str":
+            return np.dtype(object)  # decoded values are numpy str arrays
         return np.dtype(_SUPPORTED[self.dtype][0])
 
 

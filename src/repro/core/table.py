@@ -42,6 +42,7 @@ from typing import Mapping, Sequence
 
 import numpy as np
 
+from .compression import Codec, DeltaCodec, DictCodec, fit_codec
 from .schema import Column, TableSchema
 
 # process-unique table identities for engine-side caches: id() values are
@@ -96,7 +97,8 @@ class RelationalTable:
     forcing full re-materialization on O(1) writes.
     """
 
-    def __init__(self, schema: TableSchema, capacity: int = 1024):
+    def __init__(self, schema: TableSchema, capacity: int = 1024,
+                 codecs: Mapping[str, Codec] | None = None):
         self.schema = schema
         self.storage_schema = _storage_schema(schema)
         self._words = np.zeros(
@@ -109,6 +111,29 @@ class RelationalTable:
         # physical rows) per delete event; the base index supports trimming
         self._patch_log: list[np.ndarray] = []
         self._patch_base = 0
+        # table-level codecs (paper §4): encoded columns store int32 code
+        # words; ``codecs`` pre-seeds fitted codecs (e.g. one dictionary
+        # shared by two tables' join keys), and columns *declaring* a codec
+        # in the schema get an empty fit here that the first append re-fits.
+        # ``storage_epoch`` counts in-place re-encodes of stored words — the
+        # one mutation appends/patches can't describe — so any device copy
+        # or derived cache must treat an epoch bump as a full re-sync.
+        self.codecs: dict[str, Codec] = {}
+        self.storage_epoch = 0
+        for name, codec in (codecs or {}).items():
+            col = schema.column(name)  # raises KeyError for unknown names
+            if col.dtype not in ("int32", "str"):
+                raise ValueError(
+                    f"column {name!r}: codecs need int32 or str storage,"
+                    f" not {col.dtype}"
+                )
+            self.codecs[name] = codec
+        for col in schema.columns:
+            if col.codec is not None and col.name not in self.codecs:
+                empty = np.array(
+                    [], dtype=np.str_ if col.dtype == "str" else np.int32
+                )
+                self.codecs[col.name] = fit_codec(col.codec, empty)
 
     # ------------------------------------------------------------------ time
     def now(self) -> int:
@@ -207,6 +232,81 @@ class RelationalTable:
         self._words[at : at + n, self.ts_end_word] = TS_INF
         return at
 
+    # ------------------------------------------------------------ compression
+    def _value_dtype(self, col: Column) -> np.dtype:
+        return np.dtype(np.str_ if col.dtype == "str" else np.int32)
+
+    def _encode_stored(self, col: Column, values: np.ndarray, n: int) -> np.ndarray:
+        """``values`` -> the (n, col.words) int32 words the row store keeps:
+        codec code words for encoded columns, plain words otherwise.  New
+        values outside the fitted codec trigger an honest re-fit (never a
+        silent corruption): see :meth:`_refit_codec`."""
+        codec = self.codecs.get(col.name)
+        if codec is None:
+            return _encode_column(col, values, n)
+        values = np.asarray(values, dtype=self._value_dtype(col))
+        try:
+            codes = codec.encode(values)
+        except ValueError:
+            codes = self._refit_codec(col, values)
+        return codes.reshape(n, 1)
+
+    def _refit_codec(self, col: Column, values: np.ndarray) -> np.ndarray:
+        """Re-fit ``col``'s codec over old ∪ new values and re-encode the
+        stored code words in place.
+
+        This is the honest answer to an append/update outside the fitted
+        dictionary (or FOR delta range): the alternative — encoding to a
+        clipped or aliased code — would silently corrupt.  An in-place
+        re-encode is the one storage mutation the append-watermark/patch-log
+        contract cannot express, so it bumps ``storage_epoch``, advances the
+        patch base past every handed-out sequence (``patches_since`` returns
+        ``None`` → device copies fully re-sync), and thereby also bumps
+        ``mutation_version`` (join-build and broadcast caches invalidate).
+        A FOR column whose value range stops fitting 32-bit deltas falls
+        back to plain int32 storage — the codec is dropped, not fudged.
+        Returns the new code words for ``values``.
+        """
+        old = self.codecs[col.name]
+        woff = self.schema.word_offset(col.name)
+        stored = self._words[: self.row_count, woff]
+        if isinstance(old, DictCodec):
+            old_values = old.decode_np(stored)
+            pool = (np.concatenate([old.dictionary, values])
+                    if old.dictionary.size else values)
+            merged = DictCodec.fit(pool)
+            if self.row_count:
+                self._words[: self.row_count, woff] = merged.encode(old_values)
+            self.codecs[col.name] = merged
+            self._bump_storage_epoch()
+            return merged.encode(values)
+        assert isinstance(old, DeltaCodec)
+        old_values = old.decode_np(stored).astype(np.int64)
+        merged_vals = np.concatenate([old_values,
+                                      np.asarray(values, dtype=np.int64)])
+        new = DeltaCodec.fit_global(merged_vals)
+        try:
+            restored = new.encode(old_values) if self.row_count else None
+            codes = new.encode(np.asarray(values, dtype=np.int64))
+        except ValueError:
+            # the value range exceeds 32-bit deltas: drop to plain storage
+            if self.row_count:
+                self._words[: self.row_count, woff] = old_values.astype(np.int32)
+            del self.codecs[col.name]
+            self._bump_storage_epoch()
+            return np.asarray(values, dtype=np.int32)
+        if restored is not None:
+            self._words[: self.row_count, woff] = restored
+        self.codecs[col.name] = new
+        self._bump_storage_epoch()
+        return codes
+
+    def _bump_storage_epoch(self) -> None:
+        mv = self.mutation_version
+        self._patch_log.clear()
+        self._patch_base = mv + 1  # every older sync token re-syncs in full
+        self.storage_epoch += 1
+
     # ------------------------------------------------------------------ OLTP
     def append(self, columns: Mapping[str, Sequence | np.ndarray]) -> np.ndarray:
         """Append new rows (insert); returns the new physical row indices.
@@ -222,7 +322,7 @@ class RelationalTable:
         at = self._append_rows(n, ts)
         woff = 0
         for col in self.schema.columns:
-            enc = _encode_column(col, np.asarray(columns[col.name]), n)
+            enc = self._encode_stored(col, np.asarray(columns[col.name]), n)
             self._words[at : at + n, woff : woff + col.words] = enc
             woff += col.words
         self.row_count += n
@@ -260,13 +360,17 @@ class RelationalTable:
         rows = np.asarray(rows)
         n = len(rows)
         user_words = self.schema.row_words
-        raw = self._words[rows, :user_words].copy()  # before delete patches ts
+        # encode the touched columns *before* snapshotting raw words: an
+        # out-of-codec value re-fits the codec and rewrites stored code words
+        # in place, and the raw copy must see the re-encoded state
+        enc = {}
         for name, vals in values.items():
             col = self.schema.column(name)  # raises KeyError for unknown names
+            enc[name] = self._encode_stored(col, np.asarray(vals), n)
+        raw = self._words[rows, :user_words].copy()  # before delete patches ts
+        for name, e in enc.items():
             woff = self.schema.word_offset(name)
-            raw[:, woff : woff + col.words] = _encode_column(
-                col, np.asarray(vals), n
-            )
+            raw[:, woff : woff + self.schema.column(name).words] = e
         self.delete(rows)
         ts = self.tick()
         at = self._append_rows(n, ts)
@@ -285,7 +389,11 @@ class RelationalTable:
     def read_column_at(self, name: str, rows: np.ndarray) -> np.ndarray:
         col = self.schema.column(name)
         woff = self.schema.word_offset(name)
-        return _decode_column(col, self._words[rows, woff : woff + col.words])
+        words = self._words[rows, woff : woff + col.words]
+        codec = self.codecs.get(name)
+        if codec is not None:  # code words -> values (host-side, no device)
+            return codec.decode_np(words.reshape(-1), np.asarray(rows))
+        return _decode_column(col, words)
 
     def read_column(self, name: str, ts: int | None = None) -> np.ndarray:
         """Direct row-wise read of one column (the slow path the paper beats)."""
@@ -300,10 +408,15 @@ class RelationalTable:
     # ------------------------------------------------------------- factories
     @staticmethod
     def from_columns(
-        schema: TableSchema, columns: Mapping[str, np.ndarray]
+        schema: TableSchema, columns: Mapping[str, np.ndarray],
+        codecs: Mapping[str, Codec] | None = None,
     ) -> "RelationalTable":
+        """``codecs`` pre-seeds fitted codecs — the spelling for a dictionary
+        *shared* across tables (encoded join keys must agree on one
+        table-level dictionary, so both tables are built from the same
+        fitted :class:`~repro.core.compression.DictCodec`)."""
         n = len(next(iter(columns.values())))
-        t = RelationalTable(schema, capacity=n)
+        t = RelationalTable(schema, capacity=n, codecs=codecs)
         t.append(columns)
         return t
 
@@ -316,6 +429,11 @@ class RelationalTable:
             "words": self._words[: self.row_count].copy(),
             "row_count": self.row_count,
             "clock": self._clock,
+            # stored words of encoded columns are code words: the fitted
+            # codecs (and the epoch of their last in-place re-encode) are
+            # part of the byte-identical reconstruction contract
+            "codecs": dict(self.codecs),
+            "storage_epoch": self.storage_epoch,
         }
 
     @staticmethod
@@ -344,6 +462,10 @@ class RelationalTable:
                 table._words[: p["row_count"]] = p["words"]
                 table.row_count = p["row_count"]
                 table._clock = p["clock"]
+                # restore the codecs the checkpointed code words were
+                # encoded with (records from before codec support lack them)
+                table.codecs = dict(p.get("codecs", table.codecs))
+                table.storage_epoch = p.get("storage_epoch", 0)
             elif table is None:
                 continue  # write before any surviving checkpoint: unanchored
             elif rec.kind == "insert":

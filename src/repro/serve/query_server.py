@@ -1320,6 +1320,9 @@ class QueryServer:
             "engine_retries": e.retries,
             "engine_failovers": e.failovers,
             "engine_bytes_failover": e.bytes_failover,
+            "engine_bytes_saved_compression": e.bytes_saved_compression,
+            "engine_decodes": e.decodes,
+            "engine_decode_cache_hits": e.decode_cache_hits,
         })
         out.update(self.engine.breaker.snapshot())
         if hasattr(self.engine, "shard_health"):

@@ -1,0 +1,194 @@
+"""Deterministic case generators for the compressed-execution harness.
+
+``hypothesis`` is a CI-only extra (requirements-dev.txt), but the tier-1
+suite must run the differential property harness everywhere — so cases are
+plain seeded-numpy generators: every (table, plan) case is a pure function
+of its integer seed, reproducible by seed alone.
+
+A *case* is an encoded table, a byte-aligned plain twin, and the logical
+column values:
+
+* ``K``  — int32, dict-encoded; hostile distributions (value skew, INT32
+  extremes, duplicate-heavy, all-distinct) keyed off the seed.
+* ``F``  — int32, FOR-encoded; values in a small offset range so every
+  float32 partial sum is integer-exact and the ``base * count +
+  sum(deltas)`` identity is bit-equal to the plain sum.
+* ``S``  — str, dictionary-coded by construction.  The plain twin stores
+  the same column as its raw int32 dictionary codes, which keeps the twin
+  byte-aligned word-for-word (bytes comparisons are apples-to-apples) and
+  makes plain group-bys over it match the encoded remap exactly whenever
+  ``num_groups`` covers the dictionary.
+* ``V``/``P`` — plain int32 payload/predicate columns in [-50, 50).
+
+Empty tables (n=0) are generated too — dictionary fits on nothing must
+still serve every plan shape.
+"""
+
+import numpy as np
+
+from repro.core.compression import DictCodec
+from repro.core.schema import Column, TableSchema
+from repro.core.table import RelationalTable
+
+I32 = np.iinfo(np.int32)
+
+STRING_POOL = np.array(
+    ["amber", "basil", "cedar", "ember", "fig", "grove", "holly", "iris"],
+    dtype=np.str_,
+)
+
+KEY_STYLES = ("skew", "extremes", "dupes", "distinct")
+
+ROW_COUNTS = (0, 1, 7, 64, 257, 600)
+
+ENC_SCHEMA = TableSchema((
+    Column("K", "int32", codec="dict"),
+    Column("F", "int32", codec="for"),
+    Column("S", "str"),
+    Column("V", "int32"),
+    Column("P", "int32"),
+))
+
+PLAIN_SCHEMA = TableSchema((
+    Column("K", "int32"),
+    Column("F", "int32"),
+    Column("S", "int32"),  # the raw dictionary codes, same word slot
+    Column("V", "int32"),
+    Column("P", "int32"),
+))
+
+
+def key_column(rng: np.random.Generator, style: str, n: int) -> np.ndarray:
+    """One hostile dict-key distribution."""
+    if n == 0:
+        return np.zeros(0, np.int32)
+    if style == "skew":
+        pool = np.array([-7, 0, 3, 1 << 20], np.int64)
+        p = np.array([0.85, 0.05, 0.05, 0.05])
+        return rng.choice(pool, n, p=p).astype(np.int32)
+    if style == "extremes":
+        pool = np.array(
+            [I32.min, I32.min + 1, -1, 0, I32.max - 1, I32.max], np.int64
+        )
+        return rng.choice(pool, n).astype(np.int32)
+    if style == "dupes":
+        return rng.integers(-3, 3, n).astype(np.int32)
+    # all-distinct, including negatives
+    return rng.permutation(np.arange(n, dtype=np.int32) - n // 2)
+
+
+def logical_columns(seed: int) -> dict[str, np.ndarray]:
+    """The logical column values of case ``seed`` (style follows the seed)."""
+    rng = np.random.default_rng(seed)
+    n = ROW_COUNTS[seed % len(ROW_COUNTS)]
+    style = KEY_STYLES[(seed // len(ROW_COUNTS)) % len(KEY_STYLES)]
+    base = int(rng.integers(-60, 60))
+    return {
+        "K": key_column(rng, style, n),
+        "F": (base + rng.integers(0, 100, n)).astype(np.int32),
+        "S": (rng.choice(STRING_POOL, n) if n
+              else np.zeros(0, STRING_POOL.dtype)),
+        "V": rng.integers(-50, 50, n).astype(np.int32),
+        "P": rng.integers(-50, 50, n).astype(np.int32),
+    }
+
+
+def str_codes(strs: np.ndarray) -> np.ndarray:
+    """The dictionary codes the encoded table stores for ``strs`` — what the
+    plain twin's int32 ``S`` column carries."""
+    if strs.size == 0:
+        return np.zeros(0, np.int32)
+    return DictCodec.fit(strs).encode(strs)
+
+
+def case_tables(seed: int):
+    """(encoded table, plain twin, logical values) for case ``seed``."""
+    logical = logical_columns(seed)
+    enc = RelationalTable.from_columns(ENC_SCHEMA, logical)
+    plain_cols = dict(logical, S=str_codes(logical["S"]))
+    plain = RelationalTable.from_columns(PLAIN_SCHEMA, plain_cols)
+    return enc, plain, logical
+
+
+def build_tables(seed: int, n_build: int = 41):
+    """A build-side pair for join cases: unique keys drawn to overlap the
+    probe table's ``K`` domain, both sides sharing one table-level
+    dictionary (the encoded-join contract)."""
+    rng = np.random.default_rng(seed + 10_000)
+    logical = logical_columns(seed)
+    probe_keys = logical["K"]
+    pool = np.unique(np.concatenate([
+        probe_keys.astype(np.int64),
+        rng.integers(-100, 100, n_build).astype(np.int64),
+    ])).astype(np.int32)
+    build_keys = rng.permutation(pool)[: min(n_build, pool.size)]
+    if build_keys.size == 0:
+        build_keys = np.array([0], np.int32)
+    build_vals = rng.integers(-50, 50, build_keys.size).astype(np.int32)
+
+    shared = DictCodec.fit(
+        np.concatenate([probe_keys, build_keys]).astype(np.int32)
+    )
+    enc_probe = RelationalTable.from_columns(
+        ENC_SCHEMA, logical, codecs={"K": shared}
+    )
+    build_schema = TableSchema((Column("K", "int32"), Column("B", "int32")))
+    enc_build = RelationalTable.from_columns(
+        build_schema, {"K": build_keys, "B": build_vals},
+        codecs={"K": shared},
+    )
+    plain_probe = RelationalTable.from_columns(
+        PLAIN_SCHEMA, dict(logical, S=str_codes(logical["S"]))
+    )
+    plain_build = RelationalTable.from_columns(
+        build_schema, {"K": build_keys, "B": build_vals}
+    )
+    return (enc_probe, enc_build), (plain_probe, plain_build), (
+        logical, {"K": build_keys, "B": build_vals}
+    )
+
+
+def pred_constant(rng: np.random.Generator, values: np.ndarray) -> int:
+    """A predicate constant: usually inside the value range, sometimes a
+    never-pass / all-pass extreme (exercises the translated collapses)."""
+    roll = rng.integers(0, 8)
+    if roll == 0:
+        return int(I32.min)
+    if roll == 1:
+        return int(I32.max)
+    if values.size == 0:
+        return int(rng.integers(-50, 50))
+    return int(rng.choice(values.astype(np.int64)))
+
+
+PLAN_KINDS = ("project", "filter", "aggregate", "groupby", "groupby_str")
+
+
+def plan_params(seed: int, kind: str) -> dict:
+    """Parameters of the ``kind`` plan for case ``seed`` — predicate column,
+    op, constant, group domain, snapshot choice — all seed-derived."""
+    rng = np.random.default_rng(seed * 7 + PLAN_KINDS.index(kind))
+    logical = logical_columns(seed)
+    p: dict = {"snapshot": bool(rng.integers(0, 2))}
+    if kind == "project":
+        p["cols"] = ("K", "F", "S", "V")
+    elif kind == "filter":
+        p["cols"] = ("K", "V")
+        p["pred_col"] = str(rng.choice(["K", "P"]))
+        p["pred_op"] = str(rng.choice(["gt", "lt"]))
+        p["pred_k"] = pred_constant(rng, logical[p["pred_col"]])
+    elif kind == "aggregate":
+        p["agg_col"] = str(rng.choice(["F", "V"]))
+        p["pred_col"] = str(rng.choice(["K", "P"]))
+        p["pred_op"] = str(rng.choice(["gt", "lt"]))
+        p["pred_k"] = pred_constant(rng, logical[p["pred_col"]])
+    elif kind == "groupby":
+        p["group_col"] = "K"
+        p["agg_col"] = str(rng.choice(["F", "V"]))
+        p["num_groups"] = int(rng.choice([8, 16]))
+    elif kind == "groupby_str":
+        p["group_col"] = "S"
+        p["agg_col"] = str(rng.choice(["F", "V"]))
+        # must cover the string dictionary (checked at lowering)
+        p["num_groups"] = len(STRING_POOL) + int(rng.integers(0, 3))
+    return p

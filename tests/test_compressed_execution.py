@@ -1,0 +1,669 @@
+"""Differential property harness for compressed execution (paper §4).
+
+Every generated case runs the same logical plans three ways —
+
+* **encoded**: dict/FOR/string codecs attached, kernels on raw code words,
+  predicate constants translated at compile time, decode only on finalize;
+* **plain twin**: the identical word layout with no codecs (strings stored
+  as their raw dictionary codes, so the twin is byte-aligned word-for-word);
+* **oracle**: :mod:`repro.kernels.ref` over the plain twin's storage words —
+
+and asserts the three agree byte-for-byte, across {xla, mlp} × {single,
+sharded} backends, with and without MVCC snapshots, through dictionary
+re-fits forced by out-of-dictionary appends.  Encoded ``bytes_from_dram``
+must never exceed the plain twin's for the same tick.
+
+Cases are deterministic seeded-numpy generators (``tests/strategies.py``) —
+``hypothesis`` is a CI-only extra, and the tier-1 suite must carry the full
+harness everywhere.  ``test_case_count_floor`` pins the generated-case
+census at >= 200.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import strategies
+from repro.core import RelationalMemoryEngine, RelationalTable
+from repro.core.compression import DeltaCodec, DictCodec
+from repro.core.distributed import ShardedEngine
+from repro.core.plan import plan
+from repro.core.requests import (
+    AggregateOp,
+    FilterOp,
+    GroupByOp,
+    JoinOp,
+    ProjectOp,
+)
+from repro.core.schema import TableGeometry
+from repro.kernels import ref
+from repro.serve.query_server import QueryServer
+
+I32 = np.iinfo(np.int32)
+
+
+# --------------------------------------------------------------------------
+# case construction: encoded table + byte-aligned plain twin + churn
+# --------------------------------------------------------------------------
+
+def _churn_columns(rng: np.random.Generator) -> dict[str, np.ndarray]:
+    """Post-build writes, hostile on purpose: ``K`` mixes novel values (dict
+    re-fit), ``F`` can dip below the fitted base (FOR re-fit), ``S`` draws
+    from the full pool (string-dict re-fit)."""
+    m = int(rng.integers(1, 33))
+    return {
+        "K": rng.integers(-2000, 2000, m).astype(np.int32),
+        "F": rng.integers(-200, 200, m).astype(np.int32),
+        "S": rng.choice(strategies.STRING_POOL, m),
+        "V": rng.integers(-50, 50, m).astype(np.int32),
+        "P": rng.integers(-50, 50, m).astype(np.int32),
+    }
+
+
+def _with_str_codes(cols: dict, sdict: DictCodec) -> dict:
+    """The plain twin's spelling of ``cols``: ``S`` as final-dictionary codes.
+
+    The encoded table's own codes always land on the *final* (post-churn)
+    dictionary too — any novel string raises at encode and forces the merge
+    re-fit, and the merged dictionary is exactly the union fit — so the two
+    tables stay code-identical without the twin ever seeing a codec."""
+    s = cols["S"]
+    codes = sdict.encode(s) if s.size else np.zeros(0, np.int32)
+    return dict(cols, S=codes)
+
+
+def _build_twins(seed: int):
+    """(encoded, plain twin, snapshot_ts-or-None).
+
+    Odd seeds churn: append (re-fitting all three codecs), delete, capture
+    the snapshot time, then append more — so snapshot plans must mask the
+    late rows and no-snapshot plans must see every physical version."""
+    init = strategies.logical_columns(seed)
+    with_churn = seed % 2 == 1
+    rng = np.random.default_rng(seed + 999)
+    churn_a = _churn_columns(rng) if with_churn else None
+    churn_b = _churn_columns(rng) if with_churn else None
+    all_s = np.concatenate(
+        [c["S"] for c in (init, churn_a, churn_b) if c is not None]
+    )
+    sdict = DictCodec.fit(all_s)
+
+    enc = RelationalTable.from_columns(strategies.ENC_SCHEMA, init)
+    plain = RelationalTable.from_columns(
+        strategies.PLAIN_SCHEMA, _with_str_codes(init, sdict)
+    )
+    if not with_churn:
+        return enc, plain, enc.now()
+
+    enc.append(churn_a)
+    plain.append(_with_str_codes(churn_a, sdict))
+    if enc.row_count > 2:
+        dead = np.unique(rng.integers(0, enc.row_count, 3))
+        enc.delete(dead)
+        plain.delete(dead)
+    ts = enc.now()
+    assert plain.now() == ts, "twin MVCC clocks diverged"
+    enc.append(churn_b)
+    plain.append(_with_str_codes(churn_b, sdict))
+    return enc, plain, ts
+
+
+def _make_ops(engine, t: RelationalTable, kind: str, params: dict, ts):
+    ts = ts if params["snapshot"] else None
+    if kind == "project":
+        view = engine.register(t, params["cols"], snapshot_ts=ts)
+        if ts is None:
+            return ProjectOp(view)
+        # snapshot projection = the planner's inert-predicate filter spelling
+        return FilterOp(view, params["cols"][0], "none", 0, snapshot_ts=ts)
+    if kind == "filter":
+        view = engine.register(t, params["cols"], snapshot_ts=ts)
+        return FilterOp(view, params["pred_col"], params["pred_op"],
+                        params["pred_k"], snapshot_ts=ts)
+    if kind == "aggregate":
+        return AggregateOp(t, params["agg_col"], pred_col=params["pred_col"],
+                           pred_op=params["pred_op"], pred_k=params["pred_k"],
+                           snapshot_ts=ts)
+    # groupby / groupby_str
+    return GroupByOp(t, params["group_col"], params["agg_col"],
+                     params["num_groups"], snapshot_ts=ts)
+
+
+# --------------------------------------------------------------------------
+# oracle + three-way comparison
+# --------------------------------------------------------------------------
+
+def _oracle(plain: RelationalTable, kind: str, params: dict, ts):
+    """The :mod:`repro.kernels.ref` ground truth over the twin's storage."""
+    words = jnp.asarray(plain.words())
+    schema = plain.schema
+    valid = (ref.mvcc_mask_ref(words, plain.ts_begin_word, ts)
+             if params["snapshot"] else None)
+    if kind == "project":
+        geom = TableGeometry.from_schema(schema, params["cols"],
+                                         row_count=plain.row_count)
+        if not params["snapshot"]:
+            return ref.project_ref(words, geom)
+        return ref.filter_project_ref(
+            words, geom, schema.word_offset(params["cols"][0]), "int32",
+            "none", 0, valid=valid)
+    if kind == "filter":
+        geom = TableGeometry.from_schema(schema, params["cols"],
+                                         row_count=plain.row_count)
+        return ref.filter_project_ref(
+            words, geom, schema.word_offset(params["pred_col"]), "int32",
+            params["pred_op"], params["pred_k"], valid=valid)
+    if kind == "aggregate":
+        s = ref.aggregate_ref(
+            words, schema.word_offset(params["agg_col"]), "int32",
+            schema.word_offset(params["pred_col"]), "int32",
+            params["pred_op"], params["pred_k"], valid=valid)
+        # count via a 1-group group-by (group_ids(x, 1) == 0 everywhere)
+        _, counts = ref.groupby_sum_ref(
+            words, schema.word_offset(params["pred_col"]),
+            schema.word_offset(params["agg_col"]), "int32", 1,
+            pred_word=schema.word_offset(params["pred_col"]),
+            pred_op=params["pred_op"], pred_k=params["pred_k"], valid=valid)
+        return jnp.stack([s, counts[0]])
+    return ref.groupby_sum_ref(
+        words, schema.word_offset(params["group_col"]),
+        schema.word_offset(params["agg_col"]), "int32",
+        params["num_groups"], valid=valid)
+
+
+def _compare_packed(enc_t, cols, enc_packed, plain_packed, mask=None):
+    """Encoded packed blocks carry raw code words; failing/invisible rows are
+    zeroed with code 0, which *decodes* to a real value — so codec columns
+    compare decoded on mask-true rows and as literal zeros elsewhere, while
+    plain columns compare byte-for-byte."""
+    ep, pp = np.asarray(enc_packed), np.asarray(plain_packed)
+    assert ep.shape == pp.shape
+    sel = (np.ones(len(ep), bool) if mask is None
+           else np.asarray(mask).astype(bool))
+    ordered = sorted(cols, key=enc_t.schema.byte_offset)
+    for j, name in enumerate(ordered):
+        e_col, p_col = ep[:, j], pp[:, j]
+        codec = enc_t.codecs.get(name)
+        if codec is None:
+            np.testing.assert_array_equal(e_col, p_col, err_msg=name)
+            continue
+        np.testing.assert_array_equal(e_col[~sel], 0, err_msg=name)
+        if isinstance(codec, DictCodec) and codec.dictionary.dtype.kind in (
+                "U", "S", "O"):
+            # the twin stores the same final-dictionary codes (see
+            # _with_str_codes): code equality == decoded equality
+            np.testing.assert_array_equal(e_col[sel], p_col[sel],
+                                          err_msg=name)
+            continue
+        dec = codec.decode_np(e_col[sel], np.flatnonzero(sel))
+        np.testing.assert_array_equal(dec, p_col[sel], err_msg=name)
+
+
+def _check_case(enc_t, kind, params, enc_res, plain_res, oracle_res):
+    if kind in ("project", "filter"):
+        if isinstance(plain_res, tuple):  # filter contract: (packed, mask)
+            e_pack, e_mask = enc_res
+            p_pack, p_mask = plain_res
+            o_pack, o_mask = oracle_res
+            np.testing.assert_array_equal(np.asarray(e_mask),
+                                          np.asarray(o_mask))
+            np.testing.assert_array_equal(np.asarray(p_mask),
+                                          np.asarray(o_mask))
+            np.testing.assert_array_equal(np.asarray(p_pack),
+                                          np.asarray(o_pack))
+            _compare_packed(enc_t, params["cols"], e_pack, p_pack,
+                            mask=o_mask)
+        else:
+            np.testing.assert_array_equal(np.asarray(plain_res),
+                                          np.asarray(oracle_res))
+            _compare_packed(enc_t, params["cols"], enc_res, plain_res)
+        return
+    if kind == "aggregate":
+        np.testing.assert_array_equal(np.asarray(enc_res),
+                                      np.asarray(oracle_res))
+        np.testing.assert_array_equal(np.asarray(plain_res),
+                                      np.asarray(oracle_res))
+        return
+    # group-by: (sums, counts) on every path, byte-equal across all three
+    for got in (enc_res, plain_res):
+        for g, o in zip(got, oracle_res):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(o))
+
+
+# --------------------------------------------------------------------------
+# the differential suite
+# --------------------------------------------------------------------------
+
+def _engine(revision, shards):
+    if shards is None:
+        return RelationalMemoryEngine(revision=revision)
+    return ShardedEngine(num_shards=shards, revision=revision)
+
+
+SINGLE_XLA_SEEDS = tuple(range(24))
+SINGLE_MLP_SEEDS = tuple(range(6))
+SHARDED_SEEDS = tuple(range(12))
+
+CASES = (
+    [("xla", None, s) for s in SINGLE_XLA_SEEDS]
+    + [("mlp", None, s) for s in SINGLE_MLP_SEEDS]
+    + [("xla", 3 + s % 2, s) for s in SHARDED_SEEDS]
+)
+
+JOIN_CASES = (
+    [("xla", None, s) for s in range(12)]
+    + [("mlp", None, s) for s in range(4)]
+    + [("xla", 3 + s % 2, s) for s in range(6)]
+)
+
+
+def test_case_count_floor():
+    """The CI contract: >= 200 generated (table, plan) cases."""
+    n = len(CASES) * len(strategies.PLAN_KINDS) + len(JOIN_CASES)
+    assert n >= 200, n
+
+
+@pytest.mark.parametrize("revision,shards,seed", CASES)
+def test_differential_mixed_tick(revision, shards, seed):
+    """One coalesced tick of all plan kinds: encoded == plain twin ==
+    ref oracle, and encoded DRAM traffic never exceeds the twin's."""
+    kinds = strategies.PLAN_KINDS
+    all_params = {k: strategies.plan_params(seed, k) for k in kinds}
+
+    enc_eng, plain_eng = _engine(revision, shards), _engine(revision, shards)
+    enc_t, plain_t, ts = _build_twins(seed)
+    enc_res = enc_eng.execute_many(
+        [_make_ops(enc_eng, enc_t, k, all_params[k], ts) for k in kinds])
+    plain_res = plain_eng.execute_many(
+        [_make_ops(plain_eng, plain_t, k, all_params[k], ts) for k in kinds])
+
+    for i, kind in enumerate(kinds):
+        oracle_res = _oracle(plain_t, kind, all_params[kind], ts)
+        _check_case(enc_t, kind, all_params[kind], enc_res[i], plain_res[i],
+                    oracle_res)
+
+    assert enc_eng.stats.bytes_from_dram <= plain_eng.stats.bytes_from_dram
+    assert enc_eng.stats.bytes_saved_compression >= 0
+
+
+@pytest.mark.parametrize("revision,shards,seed", JOIN_CASES)
+def test_differential_join(revision, shards, seed):
+    """Encoded equi-joins on one shared table-level dictionary: raw-code
+    probe == plain-value probe == sort-probe oracle, snapshot included."""
+    (enc_p, enc_b), (plain_p, plain_b), _ = strategies.build_tables(seed)
+    snapshot = seed % 2 == 1
+    ts = None
+    if snapshot:
+        ts = enc_p.now()
+        assert plain_p.now() == ts
+        # post-snapshot probe rows use in-dictionary keys only (an encoded
+        # join key may not re-fit away from its shared dictionary)
+        rng = np.random.default_rng(seed + 777)
+        pool = enc_p.codecs["K"].dictionary.astype(np.int32)
+        extra = {
+            "K": rng.choice(pool, 9),
+            "F": rng.integers(0, 100, 9).astype(np.int32),
+            "S": rng.choice(strategies.STRING_POOL, 9),
+            "V": rng.integers(-50, 50, 9).astype(np.int32),
+            "P": rng.integers(-50, 50, 9).astype(np.int32),
+        }
+        enc_p.append(extra)
+        plain_p.append(dict(extra, S=strategies.str_codes(extra["S"])))
+
+    def run(eng, probe, build):
+        op = JoinOp(eng.register(probe, ("V", "K"), snapshot_ts=ts),
+                    "V", "K", build, "B", snapshot_ts=ts)
+        return eng.execute_many([op])[0]
+
+    enc_eng, plain_eng = _engine(revision, shards), _engine(revision, shards)
+    enc_res = run(enc_eng, enc_p, enc_b)
+    plain_res = run(plain_eng, plain_p, plain_b)
+
+    pw = jnp.asarray(plain_p.words())
+    s_valid = (ref.mvcc_mask_ref(pw, plain_p.ts_begin_word, ts)
+               if ts is not None else None)
+    kw = plain_p.schema.word_offset("K")
+    vw = plain_p.schema.word_offset("V")
+    bw = jnp.asarray(plain_b.words())
+    o_s, o_r, o_m = ref.hash_join_ref(
+        pw[:, kw], pw[:, vw],
+        bw[:, plain_b.schema.word_offset("K")],
+        bw[:, plain_b.schema.word_offset("B")],
+        s_valid=s_valid)
+
+    for got in (enc_res, plain_res):
+        np.testing.assert_array_equal(np.asarray(got.s_proj), np.asarray(o_s))
+        np.testing.assert_array_equal(np.asarray(got.r_proj), np.asarray(o_r))
+        np.testing.assert_array_equal(np.asarray(got.matched),
+                                      np.asarray(o_m))
+    assert enc_eng.stats.bytes_from_dram <= plain_eng.stats.bytes_from_dram
+
+
+# --------------------------------------------------------------------------
+# zero decode in the fused pass
+# --------------------------------------------------------------------------
+
+def test_zero_decodes_in_fused_pass(monkeypatch):
+    """A mixed tick over encoded columns — filter, group-by (int and string
+    keys), FOR aggregate, shared-dictionary join — never calls a codec
+    decode; the first client *read* does."""
+    (enc_p, enc_b), _, _ = strategies.build_tables(9)
+    eng = RelationalMemoryEngine(revision="xla")
+
+    # patch only after ingest: the declared-codec first-append re-fit is
+    # allowed to decode (it rewrites stored words); the *scan* is not
+    calls = {"n": 0}
+    for cls, name in ((DictCodec, "decode"), (DictCodec, "decode_np"),
+                      (DeltaCodec, "decode"), (DeltaCodec, "decode_np")):
+        orig = getattr(cls, name)
+
+        def counting(self, *a, _orig=orig, **kw):
+            calls["n"] += 1
+            return _orig(self, *a, **kw)
+
+        monkeypatch.setattr(cls, name, counting)
+
+    view = eng.register(enc_p, ("K", "V"))
+    ops = [
+        FilterOp(view, "K", "gt", 0),
+        AggregateOp(enc_p, "F", pred_col="K", pred_op="lt", pred_k=3),
+        GroupByOp(enc_p, "K", "V", 16),
+        GroupByOp(enc_p, "S", "V", len(strategies.STRING_POOL)),
+        JoinOp(eng.register(enc_p, ("V", "K")), "V", "K", enc_b, "B"),
+    ]
+    results = eng.execute_many(ops)
+    for r in results:
+        for part in (r if isinstance(r, tuple) else (r,)):
+            np.asarray(getattr(part, "s_proj", part))
+    assert calls["n"] == 0, "fused pass decoded an encoded column"
+
+    # ...and decode-on-finalize fires exactly when a client reads back
+    _ = view.column("K")
+    assert calls["n"] == 1
+    assert eng.stats.decodes == 1
+    _ = view.column("K")
+    assert calls["n"] == 1, "second read must hit the decode cache"
+    assert eng.stats.decode_cache_hits == 1
+
+
+# --------------------------------------------------------------------------
+# strings end-to-end through the QueryServer
+# --------------------------------------------------------------------------
+
+def test_string_column_through_query_server_mixed_tick():
+    """A string column flows through a QueryServer mixed tick — filter on a
+    string predicate, string group-by, shared-dict join — in exactly one
+    shared scan, byte-identical to the host oracle."""
+    (enc_p, enc_b), _, (logical, build) = strategies.build_tables(21)
+    eng = RelationalMemoryEngine(revision="xla")
+    server = QueryServer(eng)
+
+    n_groups = len(strategies.STRING_POOL)
+    t_filter = server.submit(plan(enc_p).filter("S", "gt", "cedar")
+                             .project("S", "V"))
+    t_gb = server.submit(plan(enc_p).groupby("S", "V", "sum", n_groups))
+    t_join = server.submit(plan(enc_p).join(enc_b, "K", "V", "B"))
+    server.run_tick()
+    scans = eng.stats.shared_scans
+    assert scans == 1, f"mixed tick took {scans} scans, want 1"
+
+    s, v, k = logical["S"], logical["V"], logical["K"]
+    sdict = enc_p.codecs["S"]
+
+    packed, mask = t_filter.result(timeout=5)
+    np.testing.assert_array_equal(np.asarray(mask), s > "cedar")
+    live = np.asarray(mask).astype(bool)
+    codes = np.asarray(packed)[:, 0]
+    np.testing.assert_array_equal(sdict.decode_np(codes[live]), s[live])
+    np.testing.assert_array_equal(np.asarray(packed)[live, 1], v[live])
+
+    sums = np.asarray(t_gb.result(timeout=5))
+    want = np.zeros(n_groups, np.float32)
+    for code, val in zip(sdict.encode(s), v):
+        want[code] += val
+    np.testing.assert_array_equal(sums, want)
+
+    jr = t_join.result(timeout=5)
+    bk, bv = build["K"], build["B"]
+    o_s, o_r, o_m = ref.hash_join_ref(
+        jnp.asarray(k), jnp.asarray(v), jnp.asarray(bk), jnp.asarray(bv))
+    np.testing.assert_array_equal(np.asarray(jr.s_proj), np.asarray(o_s))
+    np.testing.assert_array_equal(np.asarray(jr.r_proj), np.asarray(o_r))
+    np.testing.assert_array_equal(np.asarray(jr.matched), np.asarray(o_m))
+
+    snap = server.snapshot()
+    assert snap["engine_bytes_saved_compression"] > 0
+    assert "engine_decodes" in snap and "engine_decode_cache_hits" in snap
+
+
+# --------------------------------------------------------------------------
+# codec edge-case regressions
+# --------------------------------------------------------------------------
+
+class TestDictCodecEdges:
+    def test_empty_fit_serves_empty_and_rejects_values(self):
+        c = DictCodec.fit(np.zeros(0, np.int32))
+        assert c.code_bits == 0 and c.code_bytes == 0
+        assert c.encode(np.zeros(0, np.int32)).size == 0
+        with pytest.raises(ValueError, match="outside the fitted dictionary"):
+            c.encode(np.array([1], np.int32))
+
+    def test_single_value_dictionary_is_zero_bits(self):
+        c = DictCodec.fit(np.array([42, 42, 42], np.int32))
+        assert c.code_bits == 0 and c.code_bytes == 0
+        np.testing.assert_array_equal(
+            c.encode(np.array([42, 42], np.int32)), [0, 0])
+        # translated predicates still classify correctly on the 0-bit domain
+        assert c.translate_pred("gt", 41) == ("gt", -1)  # every code passes
+        assert c.translate_pred("gt", 42) == ("gt", 0)  # none pass
+        assert c.translate_pred("lt", 42) == ("lt", 0)  # none pass
+        assert c.translate_pred("lt", 43) == ("lt", 1)  # every code passes
+
+    def test_int32_extreme_values_roundtrip(self):
+        vals = np.array([I32.min, -1, 0, I32.max], np.int32)
+        c = DictCodec.fit(vals)
+        np.testing.assert_array_equal(c.decode_np(c.encode(vals)), vals)
+        assert c.translate_pred("gt", I32.max)[1] == c.dictionary.size - 1
+        assert c.translate_pred("lt", I32.min)[1] == 0
+
+    def test_out_of_dictionary_encode_raises(self):
+        c = DictCodec.fit(np.array([1, 5, 9], np.int32))
+        with pytest.raises(ValueError, match="outside the fitted dictionary"):
+            c.encode(np.array([1, 7], np.int32))
+
+
+class TestDeltaCodecEdges:
+    def test_int32_min_reference(self):
+        vals = np.array([I32.min, I32.min + 5, I32.min + 1], np.int32)
+        c = DeltaCodec.fit_global(vals)
+        assert c.base == I32.min
+        np.testing.assert_array_equal(c.encode(vals), [0, 5, 1])
+        np.testing.assert_array_equal(c.decode_np(c.encode(vals)), vals)
+        # bound arithmetic is int64: k - base overflows int32 but collapses
+        assert c.translate_pred("gt", 0) == ("gt", I32.max)  # never pass
+        # k == base: no delta is negative, so ("lt", 0) never passes
+        assert c.translate_pred("lt", I32.min) == ("lt", 0)
+
+    def test_full_range_delta_overflows_honestly(self):
+        c = DeltaCodec.fit_global(np.array([I32.min], np.int32))
+        with pytest.raises(ValueError, match="delta overflows int32"):
+            c.encode(np.array([I32.max], np.int32))
+
+    def test_fitted_width_claim_enforced_on_encode(self):
+        c = DeltaCodec.fit_global(np.array([100, 110], np.int32))
+        assert c.code_bits == 4
+        with pytest.raises(ValueError, match="outside the fitted delta"):
+            c.encode(np.array([90], np.int32))  # below the reference
+        with pytest.raises(ValueError, match="outside the fitted delta"):
+            c.encode(np.array([100 + 16], np.int32))  # above the claim
+
+    def test_short_tail_frames_roundtrip(self):
+        rng = np.random.default_rng(5)
+        vals = (rng.integers(-1000, 1000, 37)).astype(np.int32)
+        c = DeltaCodec.fit(vals, frame_rows=16)
+        assert len(c.references) == 3 and not c.single_frame
+        np.testing.assert_array_equal(c.decode_np(c.encode(vals)), vals)
+        rows = np.array([0, 16, 36])
+        np.testing.assert_array_equal(
+            c.decode_np(c.encode(vals)[rows], rows), vals[rows])
+        with pytest.raises(ValueError, match="single-frame"):
+            c.translate_pred("gt", 0)
+
+    def test_empty_fit_global(self):
+        c = DeltaCodec.fit_global(np.zeros(0, np.int32))
+        assert c.base == 0 and c.code_bits == 0 and c.single_frame
+        assert c.encode(np.zeros(0, np.int32)).size == 0
+
+
+class TestTableRefitHonesty:
+    """Out-of-dictionary writes must re-fit (rewriting stored code words and
+    bumping the storage epoch so device mirrors and caches resync) or drop
+    the codec — never serve stale codes."""
+
+    def _dict_table(self):
+        schema = strategies.ENC_SCHEMA
+        cols = {
+            "K": np.array([3, 7, 3], np.int32),
+            "F": np.array([10, 11, 12], np.int32),
+            "S": np.array(["fig", "iris", "fig"]),
+            "V": np.arange(3, dtype=np.int32),
+            "P": np.arange(3, dtype=np.int32),
+        }
+        return RelationalTable.from_columns(schema, cols)
+
+    def test_append_outside_dictionary_refits(self):
+        t = self._dict_table()
+        epoch0 = t.storage_epoch
+        old_codes = t.words()[:, 0].copy()
+        t.append({"K": np.array([5], np.int32),
+                  "F": np.array([13], np.int32),
+                  "S": np.array(["amber"]),
+                  "V": np.array([3], np.int32),
+                  "P": np.array([3], np.int32)})
+        assert t.storage_epoch > epoch0
+        np.testing.assert_array_equal(
+            t.codecs["K"].dictionary.astype(np.int64), [3, 5, 7])
+        # stored code words were rewritten under the merged dictionary
+        assert not np.array_equal(t.words()[:3, 0], old_codes)
+        np.testing.assert_array_equal(
+            t.codecs["K"].decode_np(t.words()[:4, 0]), [3, 7, 3, 5])
+        np.testing.assert_array_equal(
+            t.codecs["S"].decode_np(t.words()[:4, 2]),
+            ["fig", "iris", "fig", "amber"])
+
+    def test_update_outside_dictionary_refits(self):
+        t = self._dict_table()
+        epoch0 = t.storage_epoch
+        t.update(np.array([1]), {"K": np.array([-9], np.int32)})
+        assert t.storage_epoch > epoch0
+        np.testing.assert_array_equal(
+            t.codecs["K"].dictionary.astype(np.int64), [-9, 3, 7])
+        # the MVCC-visible column reads back the merged-dictionary values
+        np.testing.assert_array_equal(np.sort(t.read_column("K")), [-9, 3, 3])
+
+    def test_for_overflow_drops_codec_to_plain(self):
+        schema = strategies.ENC_SCHEMA
+        t = RelationalTable.from_columns(schema, {
+            "K": np.array([1], np.int32),
+            "F": np.array([I32.min], np.int32),
+            "S": np.array(["fig"]),
+            "V": np.array([0], np.int32),
+            "P": np.array([0], np.int32),
+        })
+        assert "F" in t.codecs
+        t.append({"K": np.array([1], np.int32),
+                  "F": np.array([I32.max], np.int32),
+                  "S": np.array(["fig"]),
+                  "V": np.array([0], np.int32),
+                  "P": np.array([0], np.int32)})
+        assert "F" not in t.codecs  # dropped honestly, values stay plain
+        np.testing.assert_array_equal(t.words()[:2, 1],
+                                      [I32.min, I32.max])
+
+    def test_refit_resyncs_device_and_invalidates_caches(self):
+        eng = RelationalMemoryEngine(revision="xla")
+        t = self._dict_table()
+        view = eng.register(t, ("K", "V"))
+        before = np.asarray(view.packed()).copy()
+        k0 = np.asarray(view.column("K"))
+        t.append({"K": np.array([4], np.int32),
+                  "F": np.array([13], np.int32),
+                  "S": np.array(["cedar"]),
+                  "V": np.array([9], np.int32),
+                  "P": np.array([9], np.int32)})
+        view2 = eng.register(t, ("K", "V"))
+        after = np.asarray(view2.packed())
+        # the re-encoded prefix reached the device (full resync, not a
+        # stale-code tail merge)
+        np.testing.assert_array_equal(
+            t.codecs["K"].decode_np(after[:, 0]), [3, 7, 3, 4])
+        assert not np.array_equal(after[:3], before)
+        np.testing.assert_array_equal(np.asarray(view2.column("K")),
+                                      np.concatenate([k0, [4]]))
+
+    def test_mismatched_dictionaries_fall_back_to_decode_join(self):
+        """Independently fitted key dictionaries can't join on raw codes —
+        the shared-scan route decodes the key column (the one honest decode)
+        and must still match the oracle."""
+        rng = np.random.default_rng(3)
+        left_k = rng.integers(-20, 20, 64).astype(np.int32)
+        left_v = rng.integers(-50, 50, 64).astype(np.int32)
+        right_k = np.unique(rng.integers(-20, 20, 30).astype(np.int32))
+        right_b = rng.integers(-50, 50, right_k.size).astype(np.int32)
+        schema = strategies.ENC_SCHEMA
+        left = RelationalTable.from_columns(schema, {
+            "K": left_k, "F": np.zeros(64, np.int32),
+            "S": np.repeat(np.array(["fig"]), 64),
+            "V": left_v, "P": np.zeros(64, np.int32)})
+        from repro.core.schema import Column, TableSchema
+        rschema = TableSchema((Column("K", "int32", codec="dict"),
+                               Column("B", "int32")))
+        right = RelationalTable.from_columns(
+            rschema, {"K": right_k, "B": right_b})
+        assert not np.array_equal(left.codecs["K"].dictionary,
+                                  right.codecs["K"].dictionary)
+        eng = RelationalMemoryEngine(revision="xla")
+        # the device route refuses mismatched dictionaries outright...
+        with pytest.raises(ValueError, match="shared table-level dictionary"):
+            JoinOp(eng.register(left, ("V", "K")), "V", "K",
+                   right, "B").lower()
+        # ...and the planner falls back to the host sort-probe route
+        server = QueryServer(eng)
+        ticket = server.submit(plan(left).join(right, "K", "V", "B"))
+        server.run_tick()
+        assert ticket.route == "shared-scan-join"
+        res = ticket.result(timeout=5)
+        o_s, o_r, o_m = ref.hash_join_ref(
+            jnp.asarray(left_k), jnp.asarray(left_v),
+            jnp.asarray(right_k), jnp.asarray(right_b))
+        np.testing.assert_array_equal(np.asarray(res.s_proj),
+                                      np.asarray(o_s))
+        np.testing.assert_array_equal(np.asarray(res.r_proj),
+                                      np.asarray(o_r))
+        np.testing.assert_array_equal(np.asarray(res.matched),
+                                      np.asarray(o_m))
+
+
+class TestLoweringGuards:
+    def test_dict_encoded_aggregate_rejected(self):
+        t, _, _ = strategies.case_tables(8)
+        with pytest.raises(ValueError, match="ranks, not"):
+            AggregateOp(t, "K").lower()
+
+    def test_string_groupby_needs_dictionary_coverage(self):
+        t, _, _ = strategies.case_tables(9)
+        n = t.codecs["S"].dictionary.size
+        with pytest.raises(ValueError, match="cannot cover"):
+            GroupByOp(t, "S", "V", n - 1).lower()
+
+    def test_for_group_key_rejected(self):
+        t, _, _ = strategies.case_tables(9)
+        with pytest.raises(ValueError, match="dict codec"):
+            GroupByOp(t, "F", "V", 8).lower()
+
+    def test_encoded_join_payload_rejected(self):
+        (enc_p, enc_b), _, _ = strategies.build_tables(9)
+        eng = RelationalMemoryEngine(revision="xla")
+        with pytest.raises(ValueError, match="payload"):
+            JoinOp(eng.register(enc_p, ("F", "K")), "F", "K",
+                   enc_b, "B").lower()
