@@ -23,6 +23,7 @@ version-keyed cache, and ``snapshot`` runs a MVCC-pinned join through the
 import numpy as np
 
 from repro.core import (
+    CompileOptions,
     RelationalTable,
     TableGeometry,
     benchmark_schema,
@@ -61,7 +62,7 @@ def _route_bytes(eng, q, route: str) -> int:
     ops.clear_join_build_cache()
     eng.cache.reset()
     eng.stats.reset()
-    compile_plan(eng, q, join_route=route).run()
+    compile_plan(q, eng, options=CompileOptions(join_route=route)).run()
     st = eng.stats
     return st.bytes_from_dram + st.bytes_to_cpu + st.bytes_uploaded
 

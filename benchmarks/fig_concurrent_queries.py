@@ -69,7 +69,7 @@ def run() -> None:
         # ---- byte accounting (one cold batch each way) --------------------
         solo = fresh_engine()
         for p in plans:
-            compile_plan(solo, p).run()
+            compile_plan(p, solo).run()
         served_eng = fresh_engine()
         server = QueryServer(served_eng, max_batch=n_clients)
         tickets = [
@@ -90,7 +90,7 @@ def run() -> None:
         # ---- throughput (cache cold per measured batch, row store resident)
         def per_query():
             solo.cache.reset()
-            return [compile_plan(solo, p).run() for p in plans]
+            return [compile_plan(p, solo).run() for p in plans]
 
         def served():
             served_eng.cache.reset()

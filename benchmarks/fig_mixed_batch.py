@@ -102,7 +102,7 @@ def run() -> None:
         # ---- byte accounting (one cold batch each way) --------------------
         solo = fresh_engine()
         for p in plans:
-            compile_plan(solo, p).run()
+            compile_plan(p, solo).run()
         served_eng = fresh_engine()
         server = QueryServer(served_eng, max_batch=len(plans))
         tickets = [
@@ -120,7 +120,7 @@ def run() -> None:
         # ---- throughput (cache cold per measured batch, row store resident)
         def per_kind():
             solo.cache.reset()
-            return [compile_plan(solo, p).run() for p in plans]
+            return [compile_plan(p, solo).run() for p in plans]
 
         def fused():
             served_eng.cache.reset()

@@ -1,0 +1,125 @@
+"""Optimizer figure: what the logical rewrite layer buys in moved bytes.
+
+Three rows, one per optimizer capability, each measured with the engine's
+own PMU byte accounting (deterministic — gated exactly by ``perf_gate``):
+
+* ``prune`` — a decorated aggregate (full-schema ``Project`` under ``Sum``)
+  compiled raw materializes the whole projection before reducing; the
+  ``prune-columns`` pass shrinks the scan to the aggregate column and the
+  plan re-routes onto the fused-aggregate kernel.  ``raw_bytes`` vs
+  ``opt_bytes`` is the DRAM traffic either way; the ratio must stay > 1.
+* ``subsume`` — three projection tickets where the first covers the other
+  two (word superset, no predicates).  Solo execution pays three scans;
+  the batch route detects subsumption and serves all three from ONE
+  covering scan (``subsumed=2``, ``shared_scans=1``).
+* ``join_order`` — a two-join chain where the second build side is an
+  order of magnitude smaller.  Cost-based ordering builds the cheap side
+  first; the row reports the chosen order and both cold-build estimates.
+"""
+
+import numpy as np
+
+from repro.core import (
+    CompileOptions, Column, RelationalTable, TableSchema, compile_plan, plan,
+)
+from repro.core import operators as ops
+
+from .common import bench_rows, emit, fresh_engine, make_benchmark_table, timeit
+
+N_ROWS = 44_000
+
+
+def _bytes_for(eng, pq) -> int:
+    eng.cache.reset()
+    eng.stats.reset()
+    pq.run()
+    return eng.stats.bytes_from_dram
+
+
+def _emit_prune() -> None:
+    # 8 columns: wide enough for pruning to matter, narrow enough that the
+    # unoptimized full-schema projection still fits the enable-mask budget
+    t = make_benchmark_table(row_bytes=32, n_rows=bench_rows(N_ROWS))
+    eng = fresh_engine()
+    q = plan(t).project(*t.schema.names).sum("A1")
+    opt = compile_plan(q, eng)
+    raw = compile_plan(q, eng, options=CompileOptions(optimize=False))
+    assert abs(float(opt.run()) - float(raw.run())) < 1e-6
+    opt_b = _bytes_for(eng, opt)
+    raw_b = _bytes_for(eng, raw)
+    us = timeit(opt.run, iters=3)
+    emit("figopt/prune", us,
+         f"raw_bytes={raw_b},opt_bytes={opt_b},"
+         f"bytes_ratio={raw_b / max(opt_b, 1):.2f}")
+
+
+def _emit_subsume() -> None:
+    rng = np.random.default_rng(7)
+    n = bench_rows(N_ROWS)
+    schema = TableSchema(tuple(Column(f"C{i}", "int32") for i in range(24)))
+    t = RelationalTable.from_columns(schema, {
+        f"C{i}": rng.integers(-1000, 1000, n).astype(np.int32)
+        for i in range(24)
+    })
+    eng = fresh_engine()
+    groups = (("C0", "C1", "C2", "C3"),  # covers the other two tickets
+              ("C0", "C2"),
+              ("C1",))
+    pqs = [compile_plan(plan(t).project(*g), eng) for g in groups]
+    batch = [pq.ops[0] for pq in pqs]
+
+    def solo():
+        for op in batch:
+            eng.execute_many([op])
+
+    eng.cache.reset()
+    eng.stats.reset()
+    solo()
+    solo_b = eng.stats.bytes_from_dram
+    eng.cache.reset()
+    eng.stats.reset()
+    eng.execute_many(batch)
+    batch_b = eng.stats.bytes_from_dram
+    subsumed = eng.stats.subsumed_requests
+    scans = eng.stats.shared_scans
+    us = timeit(lambda: eng.execute_many(batch), iters=3)
+    emit("figopt/subsume", us,
+         f"solo_bytes={solo_b},batch_bytes={batch_b},subsumed={subsumed},"
+         f"one_pass_scans={scans},"
+         f"bytes_ratio={solo_b / max(batch_b, 1):.2f}")
+
+
+def _emit_join_order() -> None:
+    rng = np.random.default_rng(3)
+    n = bench_rows(N_ROWS, cap=512)
+
+    def tbl(cols: dict) -> RelationalTable:
+        schema = TableSchema(tuple(Column(c, "int32") for c in cols))
+        return RelationalTable.from_columns(
+            schema, {c: v.astype(np.int32) for c, v in cols.items()})
+
+    probe = tbl({"K1": rng.integers(0, n, n),
+                 "K2": rng.integers(0, max(n // 10, 4), n),
+                 "V": rng.integers(-1000, 1000, n)})
+    big = tbl({"K1": np.arange(n), "B1": rng.integers(-9, 9, n)})
+    small_n = max(n // 10, 4)
+    small = tbl({"K2": np.arange(small_n), "B2": rng.integers(-9, 9, small_n)})
+
+    eng = fresh_engine()
+    ops.clear_join_build_cache()
+    q = plan(probe).join(big, key="K1", left_proj="V", right_proj="B1") \
+                   .join(small, key="K2", left_proj="V", right_proj="B2")
+    pq = compile_plan(q, eng)
+    order = "-".join(key for key, _, _ in pq.join_order)
+    ests = {key: est for key, _, est in pq.join_order}
+    us = timeit(lambda: (ops.clear_join_build_cache(), pq.run())[1], iters=3)
+    emit("figopt/join_order", us,
+         f"order={order},first_build_bytes={pq.join_order[0][2]},"
+         f"second_build_bytes={pq.join_order[1][2]},"
+         f"est_small_bytes={ests['K2']},est_big_bytes={ests['K1']}")
+
+
+def run() -> None:
+    _emit_prune()
+    _emit_subsume()
+    _emit_join_order()

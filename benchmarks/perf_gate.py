@@ -46,6 +46,9 @@ HIGHER_BETTER = {
     # fault scenarios construct an exact ticket count: serving fewer means
     # a recovery path started failing tickets it used to save
     "served",
+    # the optimizer figure's covering batch subsumes an exact request
+    # count: fewer means scan-sharing detection regressed
+    "subsumed",
 }
 LOWER_BETTER = {
     "device_bytes", "host_bytes", "solo_bytes", "served_bytes", "batch_bytes",

@@ -39,6 +39,7 @@ from . import (
     fig_fault_recovery,
     fig_htap_ingest,
     fig_mixed_batch,
+    fig_optimizer,
     fig_scan_sharing,
     fig_selectivity,
     fig_serving_pipeline,
@@ -63,6 +64,7 @@ MODULES = [
     fig_fault_recovery,
     fig_htap_ingest,
     fig_mixed_batch,
+    fig_optimizer,
     fig_scan_sharing,
     fig_selectivity,
     fig_serving_pipeline,

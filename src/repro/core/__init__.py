@@ -9,6 +9,7 @@ Layers (bottom-up):
                 revision datapaths + scan-sharing batch materialization
   executor    — BatchExecutor: coalesce pending views, one shared scan/table
   plan        — logical plan IR (Scan/Filter/Project/Aggregate/GroupBy/Join)
+  optimizer   — logical rewrite passes (pushdown, pruning, pred normalization)
   planner     — byte-cost path selection + compile_plan: plan -> PhysicalQuery
   operators   — Q0-Q5 over interchangeable rme/row/col access paths (thin
                 plan constructors since the plan-IR refactor)
@@ -34,13 +35,14 @@ from .plan import (
     Aggregate, Filter, GroupBy, Join, PlanBuilder, PlanError, PlanNode,
     Project, Scan, decompose, plan,
 )
-from .planner import PhysicalQuery, compile_plan
+from .optimizer import PASSES, Rewrite, optimize, optimize_trace, pred_class
+from .planner import CompileOptions, PhysicalQuery, compile_plan
 from .faults import (
     CircuitBreaker, FaultError, FaultPlan, PermanentFault, TransientFault,
     fault_plan,
 )
 from .wal import WriteAheadLog
-from . import compression, distributed, executor, faults, operators, planner, wal
+from . import compression, distributed, executor, faults, operators, optimizer, planner, wal
 
 __all__ = [
     "BUS_WIDTH", "WORD", "TS_INF",
@@ -54,9 +56,10 @@ __all__ = [
     "ProjectOp", "ScanOp",
     "Aggregate", "Filter", "GroupBy", "Join", "PlanBuilder", "PlanError",
     "PlanNode", "Project", "Scan", "decompose", "plan",
-    "PhysicalQuery", "compile_plan",
+    "PASSES", "Rewrite", "optimize", "optimize_trace", "pred_class",
+    "CompileOptions", "PhysicalQuery", "compile_plan",
     "CircuitBreaker", "FaultError", "FaultPlan", "PermanentFault",
     "TransientFault", "fault_plan", "WriteAheadLog",
     "compression", "distributed", "executor", "faults", "operators",
-    "planner", "wal",
+    "optimizer", "planner", "wal",
 ]

@@ -639,13 +639,17 @@ class ShardedEngine(RelationalMemoryEngine):
 
     # ------------------------------------------------------- the scan hook
     def _serve_scan(self, table: RelationalTable,
-                    reqs: tuple["KR.ScanRequest", ...]) -> list:
+                    reqs: tuple["KR.ScanRequest", ...],
+                    shared: bool = False) -> list:
         """One fused pass per shard; only reduced partials cross shards.
 
         Requests are chunk-agnostic (word offsets, row-position-local), so
         the identical lowered tuple streams over every shard's chunks.  A
         lone request takes the same path — per-bank parallelism applies to
-        solo queries too, and the per-shard pass count stays exactly one.
+        solo queries too, and the per-shard pass count stays exactly one
+        (``shared`` is accepted for the base-class hook contract; the
+        subsumption layer runs in ``execute_many`` before this hook, so
+        both backends see the same covering-collapsed request set).
 
         Every per-shard pass runs through :meth:`_shard_pass` (bounded
         retry → root-device failover → quarantine), and the cross-shard

@@ -79,6 +79,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import common
 from repro.kernels import ops as K
 from repro.kernels import rme_scan_multi as KR
 from repro.kernels.rme_project import vmem_footprint_bytes
@@ -150,6 +151,7 @@ class EngineStats:
     hot_hits: int = 0
     cold_misses: int = 0
     shared_scans: int = 0  # batched multi-view passes over a row store
+    subsumed_requests: int = 0  # requests served by slicing a covering scan
     rows_projected: int = 0
     bytes_from_dram: int = 0  # bus-beat-accurate bytes the engine pulled
     bytes_to_cpu: int = 0  # packed bytes shipped up the hierarchy
@@ -174,6 +176,7 @@ class EngineStats:
         self.hot_hits = 0
         self.cold_misses = 0
         self.shared_scans = 0
+        self.subsumed_requests = 0
         self.rows_projected = 0
         self.bytes_from_dram = 0
         self.bytes_to_cpu = 0
@@ -487,6 +490,74 @@ class DeviceRowStore:
         )
 
 
+# -------------------------------------------------- request subsumption
+def _geom_words(geom) -> tuple[int, ...]:
+    """The absolute row-word indices a geometry enables, packed order."""
+    words: list[int] = []
+    for off, width in zip(geom.abs_offsets, geom.col_widths):
+        words.extend(range(off // WORD, (off + width) // WORD))
+    return tuple(words)
+
+
+def _request_width(req: "KR.ScanRequest") -> int:
+    """Covering-candidate ordering key: widest projections become the
+    representatives, so subset requests fold into them."""
+    if isinstance(req, (KR.ProjectRequest, KR.FilterRequest)):
+        return len(_geom_words(req.geom))
+    return -1  # aggregate/group-by requests never cover packed outputs
+
+
+def _request_covers(a: "KR.ScanRequest", b: "KR.ScanRequest") -> bool:
+    """Does serving ``a`` let the engine derive ``b``'s output exactly?
+
+    The subsumption rule of the tick batcher: ``a``'s enabled words must be
+    a superset of ``b``'s (projection ⊇) and ``a``'s predicate must be
+    weaker-or-equal (predicate ⊆ in selected rows), so every row ``b``
+    keeps is intact in ``a``'s packed output.  Derivation slices ``b``'s
+    words out of ``a``'s packed block and, for filters, re-evaluates ``b``'s
+    predicate on the raw packed words (code space — decode-free).
+    Aggregate/group-by outputs are scalars/partials and take no part.
+    """
+    if not isinstance(a, (KR.ProjectRequest, KR.FilterRequest)):
+        return False
+    if not isinstance(b, (KR.ProjectRequest, KR.FilterRequest)):
+        return False
+    aw = set(_geom_words(a.geom))
+    if isinstance(b, KR.ProjectRequest):
+        # a filter's packed output zeroes failing rows — never a pure project
+        return isinstance(a, KR.ProjectRequest) and aw >= set(_geom_words(b.geom))
+    need = set(_geom_words(b.geom))
+    if b.pred_op != "none":
+        need.add(b.pred_word)
+    if isinstance(a, KR.ProjectRequest):
+        # visibility lives in ts words the packed block does not carry
+        return b.ts_word < 0 and aw >= need
+    if (a.ts_word, a.ts) != (b.ts_word, b.ts):
+        return False
+    weaker = a.pred_op == "none" or (
+        a.pred_word == b.pred_word
+        and a.pred_dtype == b.pred_dtype
+        and a.pred_op == b.pred_op
+        and (a.pred_k <= b.pred_k if a.pred_op == "gt" else a.pred_k >= b.pred_k)
+    )
+    return weaker and aw >= need
+
+
+def _cover_requests(
+    reqs: tuple["KR.ScanRequest", ...],
+) -> tuple[tuple["KR.ScanRequest", ...], dict]:
+    """Greedy covering: (representatives in input order, covered→rep map)."""
+    cover: dict = {}
+    reps: list = []
+    for req in sorted(reqs, key=_request_width, reverse=True):
+        rep = next((r for r in reps if _request_covers(r, req)), None)
+        if rep is not None:
+            cover[req] = rep
+        else:
+            reps.append(req)
+    return tuple(r for r in reqs if r not in cover), cover
+
+
 class RelationalMemoryEngine:
     """Host-side RME: registers ephemeral views and materializes them on access.
 
@@ -509,6 +580,7 @@ class RelationalMemoryEngine:
         delta_uploads: bool = True,
         breaker_threshold: int = 3,
         breaker_cooldown: int = 4,
+        subsume: bool = True,
     ):
         if revision not in K.REVISIONS:
             raise ValueError(f"unknown revision {revision!r}; want one of {K.REVISIONS}")
@@ -517,6 +589,10 @@ class RelationalMemoryEngine:
         self.interpret = interpret
         self.vmem_bytes = vmem_bytes
         self.delta = delta_uploads
+        # subsumption-aware sharing: a batch member whose projection ⊆ and
+        # predicate ⊇ another's is served by slicing/masking the covering
+        # request's output instead of its own slot in the fused pass
+        self.subsume = subsume
         self.cache = ReorgCache(cache_bytes)
         self.stats = EngineStats()
         self.rowstore = DeviceRowStore(self.stats, delta=delta_uploads)
@@ -816,14 +892,25 @@ class RelationalMemoryEngine:
             uniq = dict.fromkeys(req for _, req in entries)
             reqs = tuple(uniq)
             self.stats.cold_misses += len(entries)
-            if len(entries) == 1 and isinstance(ops[entries[0][0]], JoinOp):
+            if (len(entries) == 1 and isinstance(ops[entries[0][0]], JoinOp)
+                    and ops[entries[0][0]].pred_op == "none"):
                 # a join alone on its table skips the packed materialization:
                 # the probe kernel streams the row-store chunks directly, and
-                # nothing crosses toward the CPU but the join result
+                # nothing crosses toward the CPU but the join result (a
+                # probe-side predicate needs the filtered packed route below)
                 results[entries[0][0]] = self._join_direct(ops[entries[0][0]])
                 continue
-            outs = self._serve_scan(table, reqs)
+            cover: dict = {}
+            if self.subsume and len(reqs) > 1:
+                # subsumption-aware sharing: a request whose words ⊆ and
+                # predicate ⊇ a covering request's is served by deriving
+                # from the covering output, not by its own fused slot
+                reqs, cover = _cover_requests(reqs)
+            outs = self._serve_scan(table, reqs, shared=bool(cover))
             by_req = dict(zip(reqs, outs))
+            for req, rep in cover.items():
+                by_req[req] = self._derive_covered(rep, req, by_req[rep])
+            self.stats.subsumed_requests += len(cover)
             # a packed block consumed only by join probes stays on device —
             # bytes_to_cpu is charged only when a non-join consumer ships it
             cpu_reqs = {req for i, req in entries
@@ -871,19 +958,24 @@ class RelationalMemoryEngine:
 
     # -------------------------------------------- fused one-pass internals
     def _serve_scan(self, table: RelationalTable,
-                    reqs: tuple["KR.ScanRequest", ...]) -> list:
+                    reqs: tuple["KR.ScanRequest", ...],
+                    shared: bool = False) -> list:
         """Serve one table's de-duplicated request tuple — the backend hook.
 
         Single-device: a lone request stays on its single-op kernel (keeps
         the bsl/pck revision kernels exercised, doesn't count a shared
         scan); two or more fuse into one heterogeneous pass streamed over
-        the resident chunk list.  The sharded backend overrides this with
-        one fused pass per shard plus reduction-only cross-shard combines —
-        requests are chunk-agnostic (word offsets, row-position-local), so
-        the same lowered tuple serves both backends unchanged.
+        the resident chunk list.  ``shared=True`` forces the fused path for
+        a lone request too — how a subsumption-collapsed batch keeps the
+        union-geometry charging and ``shared_scans`` accounting of the
+        multi-consumer pass it replaces.  The sharded backend overrides this
+        with one fused pass per shard plus reduction-only cross-shard
+        combines — requests are chunk-agnostic (word offsets,
+        row-position-local), so the same lowered tuple serves both backends
+        unchanged.
         """
         faults.maybe_fault("scan_launch", table=table.uid)
-        if len(reqs) == 1:
+        if len(reqs) == 1 and not shared:
             words = self.device_words(table)
             return [self._execute_solo(words, table, reqs[0])]
         chunks = self.device_chunks(table)
@@ -943,6 +1035,10 @@ class RelationalMemoryEngine:
         else:
             self.stats.rows_projected += table.row_count
             self.charge_scan(table, (req,))
+        if words.shape[0] == 0:
+            # the single-op Pallas kernels need at least one row block; an
+            # empty resident store short-circuits to the XLA reference pass
+            return KR.scan_multi_xla(words, (req,))[0]
         if self.revision == "xla":
             return self._solo_kernel(words, req)
         route = (table.uid, (KR._strip_dynamic(req),))
@@ -989,6 +1085,43 @@ class RelationalMemoryEngine:
             ts_word=req.ts_word, block_rows=self.block_rows,
             interpret=self.interpret,
         )
+
+    def _derive_covered(self, covering: "KR.ScanRequest",
+                        covered: "KR.ScanRequest", out):
+        """Finalize a subsumed request from its covering request's output.
+
+        Pure word-slicing on device: the covering packed block holds every
+        word ``covered`` enables, so its output is a static column gather —
+        and a covered filter re-evaluates its (already code-space) predicate
+        on the raw packed words, exactly what the fused kernel would have
+        computed.  No row-store pass, no decode.
+        """
+        geom = covering.geom
+        word_out: dict[int, int] = {}
+        for off, width in zip(geom.abs_offsets, geom.col_widths):
+            for j in range(width // WORD):
+                word_out[off // WORD + j] = len(word_out)
+        packed, mask = (out if isinstance(covering, KR.FilterRequest)
+                        else (out, None))
+        idx = jnp.asarray(
+            [word_out[w] for w in _geom_words(covered.geom)], jnp.int32
+        )
+        sliced = packed[:, idx]
+        if isinstance(covered, KR.ProjectRequest):
+            return sliced
+        if covered.pred_op != "none":
+            vals = common.decode(packed[:, word_out[covered.pred_word]],
+                                 covered.pred_dtype)
+            k = jnp.asarray(
+                covered.pred_k,
+                jnp.float32 if covered.pred_dtype == "float32" else jnp.int32,
+            )
+            m = vals > k if covered.pred_op == "gt" else vals < k
+        else:
+            m = jnp.ones(sliced.shape[0], bool)
+        if mask is not None:
+            m = m & mask
+        return jnp.where(m[:, None], sliced, 0), m
 
     # ---------------------------------------------- device-resident join
     def _build_join_partitions(self, table: RelationalTable, key: str,

@@ -36,6 +36,7 @@ from .plan import plan
 from .planner import (  # noqa: F401  (re-exported operator surface)
     _BUILD_INDEX_CACHE,
     JOIN_BUILD_STATS,
+    CompileOptions,
     JoinResult,
     clear_join_build_cache,
     compile_plan,
@@ -55,7 +56,9 @@ def q0_sum(
 ) -> float:
     """Q0: SELECT SUM(A1) FROM S."""
     q = plan(table).sum(col)
-    return compile_plan(engine, q, path=path, colstore=colstore).run()
+    return compile_plan(
+        q, engine, options=CompileOptions(path=path, colstore=colstore)
+    ).run()
 
 
 def q1_project(
@@ -72,7 +75,9 @@ def q1_project(
     projectivity); ``row`` ships full rows then slices.
     """
     q = plan(table).project(*cols)
-    return compile_plan(engine, q, path=path, colstore=colstore).run()
+    return compile_plan(
+        q, engine, options=CompileOptions(path=path, colstore=colstore)
+    ).run()
 
 
 def q2_select_project(
@@ -92,7 +97,9 @@ def q2_select_project(
     kernel did not, so the paths disagreed for non-int32 columns.
     """
     q = plan(table).filter(pred, "gt", k).project(proj)
-    packed, mask = compile_plan(engine, q, path=path, colstore=colstore).run()
+    packed, mask = compile_plan(
+        q, engine, options=CompileOptions(path=path, colstore=colstore)
+    ).run()
     return packed[:, 0], mask
 
 
@@ -107,7 +114,9 @@ def q3_select_aggregate(
 ) -> float:
     """Q3: SELECT SUM(A2) FROM S WHERE A4 < k."""
     q = plan(table).filter(pred, "lt", k).sum(agg)
-    return compile_plan(engine, q, path=path, colstore=colstore).run()
+    return compile_plan(
+        q, engine, options=CompileOptions(path=path, colstore=colstore)
+    ).run()
 
 
 def q4_groupby_avg(
@@ -123,7 +132,9 @@ def q4_groupby_avg(
 ) -> jax.Array:
     """Q4: SELECT AVG(A1) FROM S WHERE A3 < k GROUP BY A2 (group domain mod G)."""
     q = plan(table).filter(pred, "lt", k).groupby(group, agg, "avg", num_groups)
-    return compile_plan(engine, q, path=path, colstore=colstore).run()
+    return compile_plan(
+        q, engine, options=CompileOptions(path=path, colstore=colstore)
+    ).run()
 
 
 def q5_hash_join(
@@ -147,7 +158,9 @@ def q5_hash_join(
     """
     q = plan(s_table).join(r_table, key=key, left_proj=s_proj, right_proj=r_proj)
     return compile_plan(
-        engine, q, path=path, colstore=s_colstore, right_colstore=r_colstore
+        q, engine, options=CompileOptions(
+            path=path, colstore=s_colstore, right_colstore=r_colstore
+        )
     ).run()
 
 

@@ -44,6 +44,16 @@ class PlanNode:
     def children(self) -> tuple["PlanNode", ...]:
         return ()
 
+    def map_children(self, fn) -> "PlanNode":
+        """Rebuild this node with ``fn`` applied to each child.
+
+        Returns ``self`` unchanged when ``fn`` is the identity on every
+        child — rewrite passes rely on that to detect fixpoints cheaply.
+        This is the single structural hook :mod:`repro.core.optimizer`
+        builds its visitor/rewriter protocol on.
+        """
+        return self
+
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class Scan(PlanNode):
@@ -68,6 +78,10 @@ class Filter(PlanNode):
     def children(self) -> tuple[PlanNode, ...]:
         return (self.child,)
 
+    def map_children(self, fn) -> PlanNode:
+        child = fn(self.child)
+        return self if child is self.child else dataclasses.replace(self, child=child)
+
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class Project(PlanNode):
@@ -85,6 +99,10 @@ class Project(PlanNode):
     def children(self) -> tuple[PlanNode, ...]:
         return (self.child,)
 
+    def map_children(self, fn) -> PlanNode:
+        child = fn(self.child)
+        return self if child is self.child else dataclasses.replace(self, child=child)
+
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class Aggregate(PlanNode):
@@ -100,6 +118,10 @@ class Aggregate(PlanNode):
 
     def children(self) -> tuple[PlanNode, ...]:
         return (self.child,)
+
+    def map_children(self, fn) -> PlanNode:
+        child = fn(self.child)
+        return self if child is self.child else dataclasses.replace(self, child=child)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -121,14 +143,21 @@ class GroupBy(PlanNode):
     def children(self) -> tuple[PlanNode, ...]:
         return (self.child,)
 
+    def map_children(self, fn) -> PlanNode:
+        child = fn(self.child)
+        return self if child is self.child else dataclasses.replace(self, child=child)
+
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class Join(PlanNode):
     """``SELECT L.left_proj, R.right_proj FROM L JOIN R ON L.key = R.key``.
 
     The build side ``right`` is assumed duplicate-free on ``key`` (primary
-    key), as in the paper's setup; both sides must be plain scans — the RME's
-    role is slimming each side to {key, payload} before the CPU joins.
+    key), as in the paper's setup; the build side must be a plain scan — the
+    RME's role is slimming each side to {key, payload} before the CPU joins.
+    The probe side may be another Join (a left-deep chain the planner orders
+    by cost) or a Filter over the probe scan (a probe-side predicate fused
+    into the probe pass).
     """
 
     left: PlanNode
@@ -139,6 +168,12 @@ class Join(PlanNode):
 
     def children(self) -> tuple[PlanNode, ...]:
         return (self.left, self.right)
+
+    def map_children(self, fn) -> PlanNode:
+        left, right = fn(self.left), fn(self.right)
+        if left is self.left and right is self.right:
+            return self
+        return dataclasses.replace(self, left=left, right=right)
 
 
 # ---------------------------------------------------------------- builder
@@ -237,7 +272,10 @@ class QueryShape:
     ``kind`` is one of ``"project"`` (with or without a fused predicate),
     ``"aggregate"``, ``"groupby"``, ``"join"``.  ``columns`` is the column
     group the rme datapath would enable for this query — the planner costs
-    and the server coalesces on exactly this set.
+    and the server coalesces on exactly this set.  ``joins`` carries every
+    spec of a left-deep join chain innermost-first (``join`` aliases the
+    first spec for single-join consumers); for ``kind == "join"`` the
+    optional ``pred`` is a probe-side predicate fused into the probe pass.
     """
 
     kind: str
@@ -247,6 +285,7 @@ class QueryShape:
     agg: Aggregate | None = None
     group: GroupBy | None = None
     join: JoinSpec | None = None
+    joins: tuple[JoinSpec, ...] = ()
 
 
 def _base_scan(node: PlanNode) -> Scan:
@@ -262,27 +301,73 @@ def _ordered(table: RelationalTable, columns) -> tuple[str, ...]:
     return tuple(sorted(set(columns), key=table.schema.byte_offset))
 
 
+def _collapse_filters(table: RelationalTable, filters) -> Predicate | None:
+    """Collapse a stack of Filters into the single fused predicate.
+
+    Identical spellings collapse; two *distinct* predicates still exceed
+    what the fused kernels evaluate and raise :class:`PlanError`.
+    """
+    preds: list[Predicate] = []
+    for f in filters:
+        table.schema.column(f.col)  # admission-time check, like _ordered
+        preds.append(Predicate(f.col, f.op, f.k))
+    uniq = list(dict.fromkeys(preds))
+    if len(uniq) > 1:
+        raise PlanError("at most one distinct Filter per plan (fused predicate)")
+    return uniq[0] if uniq else None
+
+
+def _decompose_join(root: Join, outer_filters: list[Filter]) -> QueryShape:
+    """Flatten a left-deep join chain (plus probe-side Filters) to a shape."""
+    specs: list[JoinSpec] = []
+    filters = list(outer_filters)
+    node: PlanNode = root
+    while True:
+        if isinstance(node, Join):
+            right = _base_scan(node.right)
+            _ordered(right.table, (node.key, node.right_proj))  # validate names
+            specs.append(
+                JoinSpec(right.table, node.key, node.left_proj, node.right_proj)
+            )
+            node = node.left
+        elif isinstance(node, Filter):
+            filters.append(node)
+            node = node.child
+        elif isinstance(node, Scan):
+            break
+        else:
+            raise PlanError(f"expected a plain Scan, got {type(node).__name__}")
+    table = node.table
+    specs.reverse()  # innermost (first-applied) join first
+    for spec in specs:
+        _ordered(table, (spec.left_proj, spec.key))  # probe names, base table
+    pred = _collapse_filters(table, filters)
+    cols = _ordered(
+        table, tuple(c for s in specs for c in (s.left_proj, s.key))
+    )
+    return QueryShape(
+        kind="join", table=table, columns=cols, pred=pred,
+        join=specs[0], joins=tuple(specs),
+    )
+
+
 def decompose(node: PlanNode | PlanBuilder) -> QueryShape:
     """Flatten a plan tree into the canonical :class:`QueryShape`.
 
-    Accepted shapes (exactly the Relational Memory Benchmark queries):
-    ``[Aggregate|GroupBy]? <- Project? <- Filter? <- Scan`` with Project and
-    Filter commuting, or ``Join(Scan, Scan)``.  At most one Filter (the fused
-    kernels evaluate a single predicate) and at most one Project.
+    Accepted shapes (the Relational Memory Benchmark queries, plus the
+    orderings rewrite passes produce):
+    ``[Aggregate|GroupBy]? <- (Project|Filter)* <- Scan`` — Project and
+    Filter commute freely and names always resolve against the base scan's
+    schema, so every reordering of the same operators yields the same shape
+    — or a left-deep Join chain ``Filter* <- Join(... Join(Filter* <- Scan,
+    Scan) ..., Scan)``.  Repeated identical Filters collapse to the single
+    fused predicate (two distinct predicates raise); nested Projects keep
+    the outermost as the output group; Projects under Aggregate/GroupBy
+    widen the scanned column group (the optimizer's pruning pass removes
+    them).
     """
     if isinstance(node, PlanBuilder):
         node = node.node
-    if isinstance(node, Join):
-        left = _base_scan(node.left)
-        right = _base_scan(node.right)
-        cols = _ordered(left.table, (node.left_proj, node.key))
-        _ordered(right.table, (node.key, node.right_proj))  # validate names
-        return QueryShape(
-            kind="join",
-            table=left.table,
-            columns=cols,
-            join=JoinSpec(right.table, node.key, node.left_proj, node.right_proj),
-        )
 
     agg: Aggregate | None = None
     group: GroupBy | None = None
@@ -291,43 +376,50 @@ def decompose(node: PlanNode | PlanBuilder) -> QueryShape:
     elif isinstance(node, GroupBy):
         group, node = node, node.child
 
-    project: Project | None = None
-    pred: Predicate | None = None
-    while not isinstance(node, Scan):
+    projects: list[Project] = []
+    filters: list[Filter] = []
+    while not isinstance(node, (Scan, Join)):
         if isinstance(node, Project):
-            if project is not None:
-                raise PlanError("at most one Project per plan")
-            project, node = node, node.child
+            projects.append(node)
+            node = node.child
         elif isinstance(node, Filter):
-            if pred is not None:
-                raise PlanError("at most one Filter per plan (fused predicate)")
-            pred, node = Predicate(node.col, node.op, node.k), node.child
-        elif isinstance(node, (Aggregate, GroupBy, Join)):
+            filters.append(node)
+            node = node.child
+        elif isinstance(node, (Aggregate, GroupBy)):
             raise PlanError(
                 f"{type(node).__name__} must be the plan root, not an input"
             )
         else:
             raise PlanError(f"unsupported plan node {type(node).__name__}")
+
+    if isinstance(node, Join):
+        if agg is not None or group is not None:
+            raise PlanError(
+                f"{'Aggregate' if agg is not None else 'GroupBy'} over a Join"
+                " is not supported"
+            )
+        if projects:
+            raise PlanError("Project above a Join is not supported")
+        return _decompose_join(node, filters)
     table = node.table
+    pred = _collapse_filters(table, filters)
+    proj_cols = tuple(c for p in projects for c in p.columns)
 
     if agg is not None:
-        cols = _ordered(table, (agg.col,) + ((pred.col,) if pred else ()))
-        if project is not None:
-            raise PlanError("Project under Aggregate is redundant; drop it")
+        cols = _ordered(
+            table, (agg.col,) + ((pred.col,) if pred else ()) + proj_cols
+        )
         return QueryShape("aggregate", table, cols, pred=pred, agg=agg)
     if group is not None:
-        if project is not None:
-            raise PlanError("Project under GroupBy is redundant; drop it")
         cols = _ordered(
             table,
-            (group.group, group.agg) + ((pred.col,) if pred else ()),
+            (group.group, group.agg) + ((pred.col,) if pred else ()) + proj_cols,
         )
         return QueryShape("groupby", table, cols, pred=pred, group=group)
-    out = project.columns if project is not None else table.schema.names
-    if pred is not None:
-        table.schema.column(pred.col)  # admission-time check, like _ordered
     # the scan must also read the predicate column, but the *output* group is
-    # the projection — columns is what the fused filter kernel emits
+    # the (outermost) projection — columns is what the fused filter emits
+    out = projects[0].columns if projects else table.schema.names
+    _ordered(table, proj_cols)  # inner projections: validate, outermost wins
     return QueryShape("project", table, _ordered(table, out), pred=pred)
 
 

@@ -46,6 +46,7 @@ pin device arrays of collected tables.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 import weakref
 from typing import Any, Callable, Mapping, Sequence
 
@@ -59,13 +60,23 @@ from repro.kernels.rme_join import estimated_partition_bytes
 from .descriptor import bytes_moved
 from .engine import RelationalMemoryEngine
 from .ephemeral import EphemeralView
-from .plan import PlanBuilder, PlanError, PlanNode, Predicate, QueryShape, decompose
+from .optimizer import optimize_trace, pred_class
+from .plan import (
+    PlanBuilder,
+    PlanError,
+    PlanNode,
+    Predicate,
+    QueryShape,
+    decompose,
+    describe,
+)
 from .requests import (
     AggregateOp,
     FilterOp,
     GroupByOp,
     JoinOp,
     JoinResult,
+    MultiJoinResult,
     ProjectOp,
     ScanOp,
 )
@@ -324,6 +335,7 @@ def clear_join_build_cache() -> None:
     global _build_index_bytes
     _BUILD_INDEX_CACHE.clear()
     _build_index_bytes = 0
+    _KEY_UNIQUE_CACHE.clear()
     JOIN_BUILD_STATS["hits"] = 0
     JOIN_BUILD_STATS["misses"] = 0
 
@@ -393,6 +405,42 @@ def _insert_build_index(
 
 
 # ------------------------------------------------------------ plan compiler
+@dataclasses.dataclass(frozen=True)
+class CompileOptions:
+    """Everything :func:`compile_plan` needs beyond the plan and the engine.
+
+    The one compile-surface object (replacing the grown keyword sprawl —
+    the old keywords still work for one release, with a
+    ``DeprecationWarning``).  Frozen so a server tick can stamp per-tick
+    state (the snapshot) with ``dataclasses.replace`` without aliasing the
+    client's object.
+
+    * ``path`` — data path of the paper's §6 comparison: ``"rme"`` (the
+      engine; the compiler picks the physical route within it), ``"row"``
+      or ``"col"`` (host baselines; ``col`` reads ``colstore`` /
+      ``right_colstore``).
+    * ``snapshot_ts`` — MVCC visibility pin (rme path only).
+    * ``join_route`` — override the costed join route choice
+      (``"device-hash-join"`` / ``"shared-scan-join"`` /
+      ``"flipped-scan-join"``).
+    * ``backend`` — fail fast if the engine is not this backend.
+    * ``stream`` / ``stream_chunk_rows`` — chunked projection delivery.
+    * ``optimize`` — run the :mod:`repro.core.optimizer` passes before
+      lowering (``False`` is the differential-testing escape hatch: the
+      optimized route must stay byte-identical to this one).
+    """
+
+    path: str = "rme"
+    colstore: Mapping[str, np.ndarray] | None = None
+    right_colstore: Mapping[str, np.ndarray] | None = None
+    snapshot_ts: int | None = None
+    join_route: str | None = None
+    backend: str | None = None
+    stream: bool = False
+    stream_chunk_rows: int | None = None
+    optimize: bool = True
+
+
 @dataclasses.dataclass
 class PhysicalQuery:
     """A logical plan lowered to a physical route.
@@ -436,6 +484,14 @@ class PhysicalQuery:
     _launch: Callable[[Sequence[Any]], Any]
     _finalize: Callable[[Any], Any]
     stream: Callable[[], Any] | None = None  # chunk-generator factory
+    # --- optimizer/compile introspection (stamped by compile_plan) ---
+    options: "CompileOptions | None" = None
+    logical: PlanNode | None = None  # the tree the client submitted
+    optimized: PlanNode | None = None  # the tree that was actually lowered
+    passes: tuple[str, ...] = ()  # optimizer + planner passes that fired
+    # chosen multi-join order: (key, right_proj, est cold build bytes) per
+    # spec, in execution order
+    join_order: tuple[tuple[str, str, int], ...] = ()
 
     @property
     def views(self) -> tuple[EphemeralView, ...]:
@@ -448,6 +504,31 @@ class PhysicalQuery:
         ``"sharded"``) — the engine's identity, since routing is dynamic
         dispatch through the engine's serving hooks."""
         return self.engine.backend
+
+    def explain(self) -> str:
+        """Human-readable compile report: chosen route, the before/after
+        trees, the rewrite passes that fired, the cost-model estimate, and
+        (for join chains) the chosen join order with estimated build bytes.
+        Everything the optimizer decided, in one inspectable string."""
+        lines = [
+            f"route: {self.route} (path={self.path},"
+            f" backend={self.engine.backend})"
+        ]
+        if self.logical is not None:
+            lines.append(f"logical:   {describe(self.logical)}")
+        if self.optimized is not None and self.optimized is not self.logical:
+            lines.append(f"optimized: {describe(self.optimized)}")
+        lines.append(
+            "passes: " + (", ".join(self.passes) if self.passes else "(none)")
+        )
+        if self.cost is not None:
+            lines.append(f"cost: {self.cost}")
+        for i, (key, right_proj, est) in enumerate(self.join_order):
+            lines.append(
+                f"join[{i}]: on {key} -> {right_proj}"
+                f" (est cold build {est:,} B)"
+            )
+        return "\n".join(lines)
 
     def launch(self, results: Sequence[Any]) -> Any:
         return self._launch(results)
@@ -509,9 +590,9 @@ def _check_snapshot_path(path: str, snapshot_ts: int | None) -> None:
 
 
 def _compile_aggregate(
-    engine: RelationalMemoryEngine, shape: QueryShape, path: str, colstore,
-    snapshot_ts: int | None = None,
+    engine: RelationalMemoryEngine, shape: QueryShape, o: CompileOptions
 ) -> PhysicalQuery:
+    path, colstore, snapshot_ts = o.path, o.colstore, o.snapshot_ts
     agg = shape.agg
     pred_col, pred_op, pred_k = _pred_args(shape.pred)
 
@@ -585,9 +666,9 @@ def _compile_aggregate(
 
 
 def _compile_groupby(
-    engine: RelationalMemoryEngine, shape: QueryShape, path: str, colstore,
-    snapshot_ts: int | None = None,
+    engine: RelationalMemoryEngine, shape: QueryShape, o: CompileOptions
 ) -> PhysicalQuery:
+    path, colstore, snapshot_ts = o.path, o.colstore, o.snapshot_ts
     g = shape.group
     pred_col, pred_op, pred_k = _pred_args(shape.pred)
 
@@ -651,13 +732,40 @@ def _resident_full_rows(engine: RelationalMemoryEngine, table, cols) -> jax.Arra
     return jnp.concatenate(parts, axis=1)
 
 
+def _numeric_anchor(table: RelationalTable, cols) -> str | None:
+    """A projection column an inert (``"none"``) predicate can anchor on:
+    its words must be something the filter kernel could decode, i.e. int32
+    code words or a plain 4-byte numeric column."""
+    return next(
+        (n for n in cols
+         if n in table.codecs  # code words are int32, inert op never decodes
+         or table.schema.column(n).dtype in ("int32", "float32")),
+        None,
+    )
+
+
 def _compile_project(
-    engine: RelationalMemoryEngine, shape: QueryShape, path: str, colstore,
-    snapshot_ts: int | None = None, stream: bool = False,
-    stream_chunk_rows: int | None = None,
+    engine: RelationalMemoryEngine, shape: QueryShape, o: CompileOptions,
+    extra_passes: list[str],
 ) -> PhysicalQuery:
+    path, colstore, snapshot_ts = o.path, o.colstore, o.snapshot_ts
+    stream, stream_chunk_rows = o.stream, o.stream_chunk_rows
     table, cols = shape.table, shape.columns
     pred_col, pred_op, pred_k = _pred_args(shape.pred)
+    if (o.optimize and path == "rme" and shape.pred is not None
+            and len(cols) <= MAX_ENABLED_COLUMNS
+            and pred_class(table, shape.pred) == "all"):
+        # a provably all-pass predicate on a (packed, mask) plan: the tree
+        # rewriter must keep the Filter (dropping it would change the result
+        # type), but the *lowering* can go inert — anchor the predicate on a
+        # projection column with op "none", whose mask is all-true (AND the
+        # MVCC visibility under a snapshot, same as snapshot-project).  The
+        # real predicate column leaves the union geometry: strictly fewer
+        # bus-beat bytes whenever it was not already projected.
+        anchor = _numeric_anchor(table, cols)
+        if anchor is not None:
+            pred_col, pred_op, pred_k = anchor, "none", 0
+            extra_passes.append("eliminate-trivial-pred")
 
     if stream:
         # incremental delivery: the packed projection arrives one row-store
@@ -757,12 +865,7 @@ def _compile_project(
             # The inert predicate still names a column whose words the kernel
             # can decode, so it must be 4-byte numeric; a group without one
             # (or beyond the Q cap) takes the resident-row fallback below.
-            pred_anchor = next(
-                (n for n in cols
-                 if n in table.codecs  # code words are int32, inert op never decodes
-                 or table.schema.column(n).dtype in ("int32", "float32")),
-                None,
-            )
+            pred_anchor = _numeric_anchor(table, cols)
             if len(cols) <= MAX_ENABLED_COLUMNS and pred_anchor is not None:
                 view = engine.register(table, cols, snapshot_ts=snapshot_ts)
                 op = FilterOp(view, pred_anchor, "none", 0, snapshot_ts)
@@ -839,96 +942,251 @@ def _sort_probe(
     )
 
 
-def _device_join_expressible(shape: QueryShape) -> bool:
-    """Can the device hash route serve this join?  The probe kernel reads raw
-    single-word columns and hashes the key with integer modulo, so both key
-    columns must be int32 (or dict-encoded — raw codes are int32 and equal
-    codes mean equal values iff both sides share one table-level dictionary)
-    and both payloads plain 4-byte numeric (the probe emits 0 for unmatched
-    rows, and 0 is a valid code word, so encoded payloads are out)."""
-    j = shape.join
-    for table, name in ((shape.table, j.left_proj),
-                        (j.right_table, j.right_proj)):
-        col = table.schema.column(name)
+def _spec_device_expressible(table: RelationalTable, spec) -> bool:
+    """Can the device hash route serve one join spec?  The probe kernel reads
+    raw single-word columns and hashes the key with integer modulo, so both
+    key columns must be int32 (or dict-encoded — raw codes are int32 and
+    equal codes mean equal values iff both sides share one table-level
+    dictionary) and both payloads plain 4-byte numeric (the probe emits 0
+    for unmatched rows, and 0 is a valid code word, so encoded payloads are
+    out)."""
+    for t, name in ((table, spec.left_proj),
+                    (spec.right_table, spec.right_proj)):
+        col = t.schema.column(name)
         if (col.words != 1 or col.dtype not in ("int32", "float32")
-                or name in table.codecs):
+                or name in t.codecs):
             return False
-    for table in (shape.table, j.right_table):
-        if table.schema.column(j.key).words != 1:
+    for t in (table, spec.right_table):
+        if t.schema.column(spec.key).words != 1:
             return False
-    a = shape.table.codecs.get(j.key)
-    b = j.right_table.codecs.get(j.key)
+    a = table.codecs.get(spec.key)
+    b = spec.right_table.codecs.get(spec.key)
     if a is not None or b is not None:
         from .compression import DictCodec
         if not (isinstance(a, DictCodec) and isinstance(b, DictCodec)):
             return False
         return a is b or bool(np.array_equal(a.dictionary, b.dictionary))
-    return (shape.table.schema.column(j.key).dtype == "int32"
-            and j.right_table.schema.column(j.key).dtype == "int32")
+    return (table.schema.column(spec.key).dtype == "int32"
+            and spec.right_table.schema.column(spec.key).dtype == "int32")
+
+
+def _device_join_expressible(shape: QueryShape) -> bool:
+    """Whole-shape device-route check: every spec of the (possibly multi-)
+    join chain must be expressible, and a probe-side predicate must sit on a
+    4-byte numeric column (the fused probe scan evaluates it in-scan)."""
+    if shape.pred is not None:
+        try:
+            _check_fused_dtypes(shape.table, shape.pred.col)
+        except ValueError:
+            return False
+    return all(_spec_device_expressible(shape.table, s) for s in shape.joins)
+
+
+# host check for the flipped route's build-side uniqueness, cached per table
+# version (an append/update bumps version and naturally re-checks)
+_KEY_UNIQUE_CACHE: dict[tuple, bool] = {}
+
+
+def _key_unique(table: RelationalTable, key: str) -> bool:
+    ck = (table.uid, table.version, key)
+    hit = _KEY_UNIQUE_CACHE.get(ck)
+    if hit is None:
+        raw = np.asarray(table.words())[:, table.schema.word_offset(key)]
+        hit = bool(np.unique(raw).size == table.row_count)
+        _KEY_UNIQUE_CACHE[ck] = hit
+    return hit
+
+
+FLIP_JOIN_PATH = "rme-flip"
+
+
+def _flip_applicable(shape: QueryShape, snapshot_ts: int | None) -> bool:
+    """Can the flipped sort-probe serve this join?  Flipping makes the
+    *probe* table the build side, so its key must be duplicate-free (each
+    build-side row lands in at most one probe slot), single-word and
+    non-string on both sides; predicates and snapshots have no flipped
+    spelling (the scatter carries no visibility channel)."""
+    j = shape.join
+    if (len(shape.joins) != 1 or shape.pred is not None
+            or snapshot_ts is not None):
+        return False
+    for t in (shape.table, j.right_table):
+        col = t.schema.column(j.key)
+        if col.words != 1 or col.dtype == "str":
+            return False
+    return _key_unique(shape.table, j.key)
+
+
+def _side_ship_bytes(engine: RelationalMemoryEngine, table: RelationalTable,
+                     cols: list[str]) -> int:
+    """Modeled cost of scanning + shipping one side's {key, payload} packed
+    block to the CPU — zero when the reorg cache already holds it."""
+    geom = TableGeometry.from_schema(table.schema, cols, table.row_count)
+    if engine.peek_project(table, geom) is not None:
+        return 0
+    return bytes_moved(geom)["rme"] + table.row_count * geom.out_bytes_per_row
 
 
 def _join_route(
     engine: RelationalMemoryEngine, shape: QueryShape, snapshot_ts: int | None
 ) -> str:
-    """Choose ``"device-hash-join"`` vs the host ``"shared-scan-join"`` by
-    modeled bytes through the hierarchy, mirroring :func:`plan_query`:
+    """Choose the join's physical route by modeled bytes through the
+    hierarchy, mirroring :func:`plan_query`:
 
-    * device: probe bus beats over the {key, payload} union (the probe's
-      output never crosses toward the CPU) + the partition-array upload when
-      the build cache is cold for this build-table version.
-    * host: the probe-side scan **and** its packed block shipped up the
-      hierarchy for the CPU-side sort-probe, plus the same pair for the
-      build side when the sorted index is cold — each term dropping to zero
-      when the reorg cache / build cache already holds it.
+    * ``device-hash-join``: probe bus beats over the {key, payload} union
+      (the probe's output never crosses toward the CPU) + the
+      partition-array upload when the build cache is cold for this
+      build-table version.
+    * ``shared-scan-join``: the probe-side scan **and** its packed block
+      shipped up the hierarchy for the CPU-side sort-probe, plus the same
+      pair for the build side when the sorted index is cold — each term
+      dropping to zero when the reorg cache / build cache already holds it.
+    * ``flipped-scan-join`` (build/probe sides swapped): ship the *right*
+      table per call and keep the sorted index over the *left* — the win
+      when the probe side is the big stable relation and its flip index is
+      warm.  Only sound when the probe key is duplicate-free
+      (:func:`_flip_applicable`); chosen only when strictly cheaper than
+      the standard orientation.
 
-    A snapshot-pinned join has no host spelling (the sort-probe carries no
-    MVCC channel), so it must take the device route or fail at compile time.
+    A snapshot-pinned or probe-predicated join has no host spelling (the
+    sort-probe carries no MVCC channel; the shared-scan view carries no
+    predicate column), so it must take the device route or fail at compile
+    time.
     """
     j = shape.join
     s_table, r_table = shape.table, j.right_table
     expressible = _device_join_expressible(shape)
-    if snapshot_ts is not None:
+    if snapshot_ts is not None or shape.pred is not None:
         if not expressible:
             raise PlanError(
-                "snapshot_ts join needs device-expressible columns "
+                ("snapshot_ts" if snapshot_ts is not None
+                 else "probe-predicated") +
+                " join needs device-expressible columns "
                 "(int32 keys, 4-byte numeric payloads)"
             )
         return "device-hash-join"
-    if not expressible:
-        return "shared-scan-join"
     s_geom = TableGeometry.from_schema(
         s_table.schema, [j.left_proj, j.key], s_table.row_count
     )
     probe_beats = bytes_moved(s_geom)["rme"]
-    device = probe_beats
-    if _peek_build_entry(r_table, j.key, j.right_proj, DEVICE_JOIN_PATH) is None:
-        device += estimated_partition_bytes(r_table.row_count)
     host = 0
     if engine.peek_project(s_table, s_geom) is None:
         host += probe_beats + s_table.row_count * s_geom.out_bytes_per_row
     if _peek_build_entry(r_table, j.key, j.right_proj, "rme") is None:
-        r_geom = TableGeometry.from_schema(
-            r_table.schema, [j.key, j.right_proj], r_table.row_count
-        )
-        if engine.peek_project(r_table, r_geom) is None:
-            host += (bytes_moved(r_geom)["rme"]
-                     + r_table.row_count * r_geom.out_bytes_per_row)
+        host += _side_ship_bytes(engine, r_table, [j.key, j.right_proj])
+    host_route = "shared-scan-join"
+    if _flip_applicable(shape, snapshot_ts):
+        flipped = _side_ship_bytes(engine, r_table, [j.key, j.right_proj])
+        if _peek_build_entry(s_table, j.key, j.left_proj,
+                             FLIP_JOIN_PATH) is None:
+            flipped += _side_ship_bytes(engine, s_table,
+                                        [j.left_proj, j.key])
+        # strictly cheaper only: at a tie the standard orientation keeps the
+        # build index on the (assumed-stable) dimension side
+        if flipped < host:
+            host, host_route = flipped, "flipped-scan-join"
+    if not expressible:
+        return host_route
+    device = probe_beats
+    if _peek_build_entry(r_table, j.key, j.right_proj, DEVICE_JOIN_PATH) is None:
+        device += estimated_partition_bytes(r_table.row_count)
     # ties resolve toward the device: at equal bytes the offloaded probe
     # additionally leaves the CPU free (the paper's whole argument)
-    return "device-hash-join" if device <= host else "shared-scan-join"
+    return "device-hash-join" if device <= host else host_route
+
+
+def _join_probe_key(table: RelationalTable, key: str,
+                    codes: jax.Array) -> jax.Array:
+    """Sort-probe key spelling: mismatched per-table dictionaries mean codes
+    are not comparable across tables, so the host routes decode them first —
+    the one honest decode in the join stack."""
+    codec = table.codecs.get(key)
+    if codec is None:
+        return codes
+    return jnp.asarray(codec.decode(codes))
+
+
+def _compile_flipped_join(
+    engine: RelationalMemoryEngine, shape: QueryShape, o: CompileOptions
+) -> PhysicalQuery:
+    """Build/probe sides swapped: scan the *right* table per call, keep the
+    sorted index (key, probe slot, probe payload) over the *left*.  Each
+    right row scatters its payload into the probe slot its key owns — sound
+    because the flipped build side (the probe table) is duplicate-free on
+    the key.  Emits the standard per-probe-row :class:`JoinResult`, so the
+    orientations are interchangeable and the differential suite can pin
+    byte equality across them."""
+    j = shape.join
+    s_table, r_table = shape.table, j.right_table
+    if not _flip_applicable(shape, o.snapshot_ts):
+        raise PlanError(
+            "flipped-scan-join needs a duplicate-free single-word non-string "
+            "probe-side key and no predicate/snapshot"
+        )
+    cached = _probe_build_index(s_table, j.key, j.left_proj, FLIP_JOIN_PATH)
+    rv_view = engine.register(r_table, (j.key, j.right_proj))
+    lv = None if cached is not None else engine.register(
+        s_table, (j.left_proj, j.key)
+    )
+    ops = (ProjectOp(rv_view),) if lv is None else (
+        ProjectOp(rv_view), ProjectOp(lv)
+    )
+
+    def launch(packed):
+        r_packed = packed[0]
+        rk = _join_probe_key(r_table, j.key,
+                             r_packed[:, rv_view.column_words(j.key)[0]])
+        rv = r_packed[:, rv_view.column_words(j.right_proj)[0]]
+        if cached is not None:
+            lk_sorted, slot_sorted, s_vals = cached
+        else:
+            l_packed = packed[1]
+            lk = _join_probe_key(s_table, j.key,
+                                 l_packed[:, lv.column_words(j.key)[0]])
+            s_vals = l_packed[:, lv.column_words(j.left_proj)[0]]
+            order = jnp.argsort(lk)
+            lk_sorted, slot_sorted = lk[order], order.astype(jnp.int32)
+            _insert_build_index((lk_sorted, slot_sorted, s_vals),
+                                s_table, j.key, j.left_proj, FLIP_JOIN_PATH)
+        n_left = s_vals.shape[0]
+        if n_left == 0 or rk.shape[0] == 0:
+            return JoinResult(
+                s_proj=s_vals,
+                r_proj=jnp.zeros(n_left, rv.dtype),
+                matched=jnp.zeros(n_left, dtype=bool),
+            )
+        pos = jnp.clip(jnp.searchsorted(lk_sorted, rk), 0, n_left - 1)
+        hit = lk_sorted[pos] == rk
+        slot = jnp.where(hit, slot_sorted[pos], n_left)  # n_left drops
+        r_proj = jnp.zeros(n_left, rv.dtype).at[slot].set(
+            jnp.where(hit, rv, 0), mode="drop"
+        )
+        matched = jnp.zeros(n_left, dtype=bool).at[slot].set(
+            hit, mode="drop"
+        )
+        return JoinResult(s_proj=s_vals, r_proj=r_proj, matched=matched)
+
+    return PhysicalQuery(
+        engine, shape, o.path, route="flipped-scan-join", cost=None,
+        ops=ops, _launch=launch, _finalize=lambda t: t,
+    )
+
+
+def _mask_join_pred(res: JoinResult, mask: jax.Array) -> JoinResult:
+    """Apply a probe-side predicate mask to a finished join result — the
+    same zero-fill contract as the fused route's ``_finish_join``."""
+    return JoinResult(
+        s_proj=jnp.where(mask, res.s_proj, 0),
+        r_proj=jnp.where(mask, res.r_proj, 0),
+        matched=res.matched & mask,
+    )
 
 
 def _compile_join(
-    engine: RelationalMemoryEngine,
-    shape: QueryShape,
-    path: str,
-    colstore,
-    right_colstore,
-    snapshot_ts: int | None = None,
-    join_route: str | None = None,
+    engine: RelationalMemoryEngine, shape: QueryShape, o: CompileOptions
 ) -> PhysicalQuery:
     """Equi-join (paper §6 / §8).  On the rme path the compiler chooses
-    between two physical routes by modeled bytes (:func:`_join_route`, or
+    between three physical routes by modeled bytes (:func:`_join_route`, or
     the caller's ``join_route`` override):
 
     * ``device-hash-join`` — the §8 offload: the build side lives as cached
@@ -937,18 +1195,32 @@ def _compile_join(
       row-store chunks when the join is alone on its table, or fused into
       the tick's shared scan when co-tick ops touch the same table.  MVCC
       visibility tests fuse in on both sides, so this is also the only route
-      that can serve a ``snapshot_ts`` join.
+      that can serve a ``snapshot_ts`` join — and the only one whose probe
+      scan can fuse a probe-side predicate pushed below the join.
     * ``shared-scan-join`` — the paper's §6 sort-probe: RME slims both sides
       to {key, payload}, the CPU joins "once good locality has been
       achieved" (MXU/VPU-friendly static shapes; a TPU adaptation noted in
       DESIGN.md).
+    * ``flipped-scan-join`` — the sort-probe with build/probe sides swapped
+      (:func:`_compile_flipped_join`): the cost model's build-side choice.
     """
     j = shape.join
     s_table, r_table = shape.table, j.right_table
+    path, snapshot_ts = o.path, o.snapshot_ts
+    pred_col, pred_op, pred_k = _pred_args(shape.pred)
 
     if path == "rme":
-        route = join_route or _join_route(engine, shape, snapshot_ts)
+        route = o.join_route or _join_route(engine, shape, snapshot_ts)
+        if shape.pred is not None and route != "device-hash-join":
+            raise PlanError(
+                "a probe-side join predicate fuses into the probe scan — "
+                "device-hash-join only"
+            )
+        if route == "flipped-scan-join":
+            return _compile_flipped_join(engine, shape, o)
         if route == "device-hash-join":
+            if pred_col is not None:
+                _check_fused_dtypes(s_table, pred_col)
             # probe the partition cache before touching the build side at
             # all: a warm hit skips the build-side reads and the build
             partitions = _probe_build_index(
@@ -957,7 +1229,8 @@ def _compile_join(
             sv = engine.register(s_table, (j.left_proj, j.key),
                                  snapshot_ts=snapshot_ts)
             op = JoinOp(sv, j.left_proj, j.key, r_table, j.right_proj,
-                        snapshot_ts=snapshot_ts, partitions=partitions)
+                        snapshot_ts=snapshot_ts, partitions=partitions,
+                        pred_col=pred_col, pred_op=pred_op, pred_k=pred_k)
             return PhysicalQuery(
                 engine, shape, path, route="device-hash-join", cost=None,
                 ops=(op,),
@@ -979,15 +1252,6 @@ def _compile_join(
                 "dictionary on both tables (device hash route)"
             )
 
-        def _probe_key(t: RelationalTable, codes: jax.Array) -> jax.Array:
-            # mismatched per-table dictionaries: codes are not comparable
-            # across tables, so the sort-probe decodes them first — the one
-            # honest decode in the join stack, and only on this route
-            codec = t.codecs.get(j.key)
-            if codec is None:
-                return codes
-            return jnp.asarray(codec.decode(codes))
-
         sv = engine.register(s_table, (j.left_proj, j.key))
         rv = None if cached is not None else engine.register(
             r_table, (j.key, j.right_proj)
@@ -997,13 +1261,15 @@ def _compile_join(
         def launch(packed):
             def read_build():
                 r_packed = packed[1]
-                return (_probe_key(r_table,
-                                   r_packed[:, rv.column_words(j.key)[0]]),
+                return (_join_probe_key(
+                            r_table, j.key,
+                            r_packed[:, rv.column_words(j.key)[0]]),
                         r_packed[:, rv.column_words(j.right_proj)[0]])
 
             s_packed = packed[0]
             return _sort_probe(
-                _probe_key(s_table, s_packed[:, sv.column_words(j.key)[0]]),
+                _join_probe_key(s_table, j.key,
+                                s_packed[:, sv.column_words(j.key)[0]]),
                 s_packed[:, sv.column_words(j.left_proj)[0]],
                 cached, read_build, r_table, j.key, j.right_proj, path,
             )
@@ -1015,14 +1281,20 @@ def _compile_join(
 
     def launch(_):
         def read_build():
-            return (_host_col(r_table, right_colstore, j.key, path),
-                    _host_col(r_table, right_colstore, j.right_proj, path))
+            return (_host_col(r_table, o.right_colstore, j.key, path),
+                    _host_col(r_table, o.right_colstore, j.right_proj, path))
 
-        return _sort_probe(
-            _host_col(s_table, colstore, j.key, path),
-            _host_col(s_table, colstore, j.left_proj, path),
+        res = _sort_probe(
+            _host_col(s_table, o.colstore, j.key, path),
+            _host_col(s_table, o.colstore, j.left_proj, path),
             cached, read_build, r_table, j.key, j.right_proj, path,
         )
+        if pred_col is not None:
+            # host baselines reason in value space: the probe-side predicate
+            # evaluates on the decoded column and masks the finished result
+            p = _host_col(s_table, o.colstore, pred_col, path)
+            res = _mask_join_pred(res, _pred_mask(p, pred_op, pred_k))
+        return res
 
     return PhysicalQuery(
         engine, shape, path, route=f"host-{path}", cost=None, ops=(),
@@ -1030,81 +1302,225 @@ def _compile_join(
     )
 
 
-def compile_plan(
-    engine: RelationalMemoryEngine,
-    node: PlanNode | PlanBuilder,
-    path: str = "rme",
-    colstore: Mapping[str, np.ndarray] | None = None,
-    right_colstore: Mapping[str, np.ndarray] | None = None,
-    snapshot_ts: int | None = None,
-    join_route: str | None = None,
-    backend: str | None = None,
-    stream: bool = False,
-    stream_chunk_rows: int | None = None,
-) -> PhysicalQuery:
-    """Lower a logical plan to a :class:`PhysicalQuery` on ``path``.
+def _compile_multi_join(
+    engine: RelationalMemoryEngine, shape: QueryShape, o: CompileOptions
+) -> tuple[PhysicalQuery, tuple[tuple[str, str, int], ...]]:
+    """A left-deep join chain: cost-ordered device probes over one shared
+    probe view.
 
-    ``path`` selects the data path of the paper's §6 comparison: ``"rme"``
-    (the engine: fused kernels, shared scans, reorg cache — the compiler picks
-    the best physical route within it), ``"row"`` (direct row-wise baseline),
-    or ``"col"`` (direct columnar baseline over a caller-supplied
-    ``colstore``).  Joins read the probe side from ``colstore`` and the build
-    side from ``right_colstore``.
-
-    ``snapshot_ts`` pins the query's MVCC visibility (rme path only): only
-    rows with ``ts_begin <= snapshot_ts < ts_end`` contribute.  Aggregates
-    and group-bys fuse the test in-scan; project-shaped queries return the
-    ``rme_filter`` contract — ``(packed block with invisible rows zeroed,
-    validity mask)`` — since a bare packed block has no visibility channel.
-    Joins take the ``device-hash-join`` route under a snapshot: the probe
-    pass tests the probe rows' timestamps in-scan and the cached build
-    buckets carry the build rows' timestamps, so both sides pin (probe rows
-    invisible at the snapshot emit zeros and ``matched=False``).  This is
-    what the :class:`~repro.serve.query_server.QueryServer` uses to serve
-    every read of a tick — joins included — from the tick's post-write
-    snapshot.
-
-    ``join_route`` overrides the join route choice (``"device-hash-join"``
-    or ``"shared-scan-join"``) — benchmarks use it to measure both routes on
-    one engine; ``None`` lets :func:`_join_route` cost them.
-
-    ``backend`` pins the execution backend the caller compiled for
-    (``"single"`` or ``"sharded"``) and is validated against the engine's
-    own :attr:`~repro.core.engine.RelationalMemoryEngine.backend`; ``None``
-    accepts either.  Routing itself needs no per-backend lowering — a
-    compiled plan's ops are chunk-agnostic and the engine's serving hooks
-    dispatch dynamically — so the parameter exists to fail fast when a plan
-    meant for a sharded deployment is handed a single-device engine (or
-    vice versa), not to produce different plans.
-
-    ``stream=True`` compiles a projection-shaped rme plan to the
-    ``stream-project`` route: the :class:`PhysicalQuery` carries a chunk
-    generator (:meth:`RelationalMemoryEngine.stream_project`) instead of scan
-    ops, and the result arrives one packed chunk per resident row-store
-    chunk (``stream_chunk_rows`` bounds the slice height).  Predicated,
-    snapshot-pinned, or host-path plans cannot stream — the per-chunk
-    contract is the plain packed block only — and raise :class:`PlanError`.
+    The chain's joins are independent per probe row (each spec matches the
+    probe row's key against its own build table), so the compiler turns the
+    chain into N :class:`JoinOp`\\ s over **one** union probe view — their
+    probe-side scan requests are identical, so the whole chain costs a
+    single pass over {every left_proj, every key} — and orders the build
+    sides by estimated cold build bytes (a warm partition cache costs
+    nothing; a cold build is priced by
+    :func:`~repro.kernels.rme_join.estimated_partition_bytes`).  The chosen
+    order and the per-spec estimates are surfaced on
+    ``PhysicalQuery.join_order`` / ``explain()``.
     """
-    if path not in ("rme", "row", "col"):
-        raise ValueError(f"unknown path {path!r}; want rme, row or col")
-    if backend is not None and backend != engine.backend:
+    if o.path != "rme":
         raise PlanError(
-            f"plan compiled for backend {backend!r} but the engine is "
+            f"a {len(shape.joins)}-join chain compiles on the rme path only"
+            " (host baselines serve single joins)"
+        )
+    s_table = shape.table
+    for spec in shape.joins:
+        if not _spec_device_expressible(s_table, spec):
+            raise PlanError(
+                f"join chain spec on key {spec.key!r} is not "
+                "device-expressible (int32/shared-dict single-word keys, "
+                "plain 4-byte payloads)"
+            )
+    pred_col, pred_op, pred_k = _pred_args(shape.pred)
+    if pred_col is not None:
+        _check_fused_dtypes(s_table, pred_col)
+
+    def build_cost(spec) -> int:
+        if _peek_build_entry(spec.right_table, spec.key, spec.right_proj,
+                             DEVICE_JOIN_PATH) is not None:
+            return 0
+        return estimated_partition_bytes(spec.right_table.row_count)
+
+    costs = [build_cost(s) for s in shape.joins]
+    order = sorted(range(len(shape.joins)), key=lambda i: (costs[i], i))
+    sv = engine.register(s_table, shape.columns, snapshot_ts=o.snapshot_ts)
+    ops, slot = [], {}
+    for rank, i in enumerate(order):
+        spec = shape.joins[i]
+        slot[i] = rank
+        partitions = _probe_build_index(
+            spec.right_table, spec.key, spec.right_proj, DEVICE_JOIN_PATH
+        )
+        ops.append(JoinOp(sv, spec.left_proj, spec.key, spec.right_table,
+                          spec.right_proj, snapshot_ts=o.snapshot_ts,
+                          partitions=partitions, pred_col=pred_col,
+                          pred_op=pred_op, pred_k=pred_k))
+    join_order = tuple(
+        (shape.joins[i].key, shape.joins[i].right_proj, costs[i])
+        for i in order
+    )
+
+    def finalize(results):
+        matched = results[0].matched
+        for r in results[1:]:
+            matched = matched & r.matched
+        inner = results[slot[0]]  # the client's first join: the chain's s_proj
+        return MultiJoinResult(
+            s_proj=jnp.where(matched, inner.s_proj, 0),
+            r_projs=tuple(
+                jnp.where(matched, results[slot[i]].r_proj, 0)
+                for i in range(len(shape.joins))
+            ),
+            matched=matched,
+        )
+
+    pq = PhysicalQuery(
+        engine, shape, o.path, route="device-hash-join", cost=None,
+        ops=tuple(ops), _launch=lambda results: results, _finalize=finalize,
+    )
+    return pq, join_order
+
+
+def _compile_const_empty(
+    engine: RelationalMemoryEngine, shape: QueryShape, o: CompileOptions
+) -> PhysicalQuery:
+    """Constant-false elimination: a predicate that provably passes no row
+    (:func:`repro.core.optimizer.pred_class` → ``"never"``) compiles to a
+    zero-op constant result honoring the kind's contract — no scan, no
+    bus-beat bytes.  Reported as the ``eliminate-empty`` pass."""
+    table = shape.table
+    if shape.kind == "aggregate":
+        # sum/count/avg over zero rows are all 0.0 (avg guards count with 1)
+        return PhysicalQuery(
+            engine, shape, o.path, route="const-empty", cost=None, ops=(),
+            _launch=lambda _: None, _finalize=lambda t: 0.0,
+        )
+    if shape.kind == "groupby":
+        g = shape.group
+
+        return PhysicalQuery(
+            engine, shape, o.path, route="const-empty", cost=None, ops=(),
+            _launch=lambda _: None,
+            _finalize=lambda t: jnp.zeros(g.num_groups, jnp.float32),
+        )
+    out_words = sum(table.schema.column(c).words for c in shape.columns)
+
+    def launch(_):
+        rows = table.row_count  # at launch time, like every other route
+        return (jnp.zeros((rows, out_words), jnp.int32),
+                jnp.zeros(rows, dtype=bool))
+
+    return PhysicalQuery(
+        engine, shape, o.path, route="const-empty", cost=None, ops=(),
+        _launch=launch, _finalize=lambda t: t,
+    )
+
+
+_LEGACY_COMPILE_KWARGS = (
+    "path", "colstore", "right_colstore", "snapshot_ts", "join_route",
+    "backend", "stream", "stream_chunk_rows",
+)
+
+
+def compile_plan(
+    node: PlanNode | PlanBuilder | RelationalMemoryEngine,
+    engine: RelationalMemoryEngine | PlanNode | PlanBuilder | None = None,
+    options: CompileOptions | None = None,
+    *,
+    optimize: bool | None = None,
+    **legacy,
+) -> PhysicalQuery:
+    """Lower a logical plan to a :class:`PhysicalQuery`.
+
+    Canonical spelling::
+
+        compile_plan(plan, engine, options=CompileOptions(...))
+
+    ``options`` carries every compile knob (path, snapshot, join route,
+    backend pin, streaming — see :class:`CompileOptions`); ``optimize=``
+    is a direct escape hatch overriding ``options.optimize`` (the
+    differential suites compile every case both ways and pin byte
+    equality).  The legacy spelling ``compile_plan(engine, plan,
+    path=..., snapshot_ts=..., ...)`` is still accepted for one release:
+    the argument order is sniffed, and the old keywords are folded into a
+    :class:`CompileOptions` with a :class:`DeprecationWarning`.
+
+    With ``optimize`` on (the default), the :mod:`repro.core.optimizer`
+    passes canonicalize the tree first (pushdown, pruning, predicate
+    normalization, trivial-predicate elimination) and the planner adds its
+    own plan-level eliminations (``eliminate-empty`` for provably-false
+    predicates; the inert-predicate lowering for provably-true ones).  The
+    compiled query records the before/after trees and the passes that fired
+    — ``PhysicalQuery.explain()`` prints the whole decision.
+    """
+    if isinstance(node, RelationalMemoryEngine):  # legacy (engine, plan) order
+        node, engine = engine, node
+    if not isinstance(engine, RelationalMemoryEngine):
+        raise TypeError(
+            "compile_plan needs a plan and an engine: "
+            "compile_plan(plan, engine, options=...)"
+        )
+    if legacy:
+        unknown = set(legacy) - set(_LEGACY_COMPILE_KWARGS)
+        if unknown:
+            raise TypeError(
+                f"compile_plan() got unexpected keyword(s) {sorted(unknown)}"
+            )
+        if options is not None:
+            raise TypeError(
+                "pass either options=CompileOptions(...) or the legacy "
+                "keywords, not both"
+            )
+        warnings.warn(
+            "compile_plan(engine, plan, path=..., snapshot_ts=..., ...) "
+            "keywords are deprecated; pass "
+            "options=CompileOptions(...) instead",
+            DeprecationWarning, stacklevel=2,
+        )
+        options = CompileOptions(**legacy)
+    o = options if options is not None else CompileOptions()
+    if optimize is not None:
+        o = dataclasses.replace(o, optimize=optimize)
+
+    if o.path not in ("rme", "row", "col"):
+        raise ValueError(f"unknown path {o.path!r}; want rme, row or col")
+    if o.backend is not None and o.backend != engine.backend:
+        raise PlanError(
+            f"plan compiled for backend {o.backend!r} but the engine is "
             f"{engine.backend!r}"
         )
-    _check_snapshot_path(path, snapshot_ts)
-    shape = decompose(node)
-    if stream and shape.kind != "project":
+    _check_snapshot_path(o.path, o.snapshot_ts)
+    logical = node.node if isinstance(node, PlanBuilder) else node
+    tree, applied = (optimize_trace(logical) if o.optimize
+                     else (logical, ()))
+    shape = decompose(tree)
+    if o.stream and shape.kind != "project":
         raise PlanError(
             f"stream=True serves projection-shaped plans only, not "
             f"{shape.kind!r} (scalar/grouped results have nothing to chunk)"
         )
-    if shape.kind == "aggregate":
-        return _compile_aggregate(engine, shape, path, colstore, snapshot_ts)
-    if shape.kind == "groupby":
-        return _compile_groupby(engine, shape, path, colstore, snapshot_ts)
-    if shape.kind == "join":
-        return _compile_join(engine, shape, path, colstore, right_colstore,
-                             snapshot_ts, join_route)
-    return _compile_project(engine, shape, path, colstore, snapshot_ts,
-                            stream, stream_chunk_rows)
+    extra: list[str] = []
+    join_order: tuple[tuple[str, str, int], ...] = ()
+    if (o.optimize and o.path == "rme" and shape.pred is not None
+            and shape.kind in ("project", "aggregate", "groupby")
+            and pred_class(shape.table, shape.pred) == "never"):
+        pq = _compile_const_empty(engine, shape, o)
+        extra.append("eliminate-empty")
+    elif shape.kind == "aggregate":
+        pq = _compile_aggregate(engine, shape, o)
+    elif shape.kind == "groupby":
+        pq = _compile_groupby(engine, shape, o)
+    elif shape.kind == "join":
+        if len(shape.joins) > 1:
+            pq, join_order = _compile_multi_join(engine, shape, o)
+        else:
+            pq = _compile_join(engine, shape, o)
+    else:
+        pq = _compile_project(engine, shape, o, extra)
+    pq.options = o
+    pq.logical = logical
+    pq.optimized = tree
+    pq.passes = tuple(applied) + tuple(extra)
+    pq.join_order = join_order
+    return pq

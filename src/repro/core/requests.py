@@ -262,6 +262,12 @@ class JoinOp:
     right_proj: str
     snapshot_ts: int | None = None
     partitions: object | None = None  # JoinPartitions from the build cache
+    # probe-side predicate pushed below the join (optimizer): fused into the
+    # probe scan exactly like a FilterOp's — unmatched/filtered rows carry
+    # zeros and matched=False in the JoinResult
+    pred_col: str | None = None
+    pred_op: str = "none"
+    pred_k: int | float = 0
 
     @property
     def table(self) -> RelationalTable:
@@ -270,19 +276,35 @@ class JoinOp:
     def lower(self) -> KR.ProjectRequest | KR.FilterRequest:
         check_join_encoding(self.table, self.right_table, self.key,
                             self.left_proj, self.right_proj)
-        if self.snapshot_ts is None:
+        if self.snapshot_ts is None and self.pred_op == "none":
             return KR.ProjectRequest(self.view.geometry)
-        # inert predicate over the (int32) key column: the request's mask is
-        # exactly the probe rows' MVCC visibility at the snapshot
+        # predicated (or snapshot-pinned) probe: the request's mask is the
+        # fused predicate AND the rows' MVCC visibility at the snapshot.
+        # With no real predicate this degenerates to the inert spelling over
+        # the (int32) key column whose mask is visibility alone.
+        pred_col = self.pred_col if self.pred_op != "none" else self.key
         return KR.FilterRequest(
             self.view.geometry,
-            **_pred_fields(self.table, self.key, "none", 0,
+            **_pred_fields(self.table, pred_col, self.pred_op, self.pred_k,
                            self.snapshot_ts, 0, "int32"),
         )
 
     def result_bytes(self) -> int:
         # JoinResult: s_proj (4B) + r_proj (4B) + matched (1B) per probe row
         return self.view.geometry.row_count * 9
+
+
+@dataclasses.dataclass
+class MultiJoinResult:
+    """A left-deep join chain's output: the shared probe projection, one
+    build-side column per join (in the *client's* spelling order), and the
+    conjunction of the per-join match masks.  Rows failing any join (or the
+    probe-side predicate/snapshot) carry zeros and ``matched=False`` in every
+    column — the same zero-fill contract as :class:`JoinResult`."""
+
+    s_proj: jax.Array
+    r_projs: tuple[jax.Array, ...]
+    matched: jax.Array
 
 
 ScanOp = ProjectOp | FilterOp | AggregateOp | GroupByOp | JoinOp

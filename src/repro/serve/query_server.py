@@ -139,8 +139,9 @@ import numpy as np
 
 from repro.core import faults
 from repro.core.engine import RelationalMemoryEngine
-from repro.core.plan import Join, PlanBuilder, PlanNode, Scan, decompose
+from repro.core.plan import PlanBuilder, PlanNode, Scan, decompose
 from repro.core.planner import (
+    CompileOptions,
     PhysicalQuery,
     _device_join_expressible,
     compile_plan,
@@ -437,6 +438,7 @@ class _Admitted:
     lane: str = "bulk"
     stream: bool = False
     stream_chunk_rows: int | None = None
+    options: CompileOptions | None = None
 
 
 @dataclasses.dataclass
@@ -575,6 +577,8 @@ class QueryServer:
         deadline_s: float | None = None,
         stream: bool = False,
         stream_chunk_rows: int | None = None,
+        options: CompileOptions | None = None,
+        optimize: bool | None = None,
     ) -> QueryTicket:
         """Admit a logical plan; returns immediately with a ticket.
 
@@ -584,10 +588,30 @@ class QueryServer:
         :class:`StreamingTicket` whose packed result arrives chunk-by-chunk
         (projection-shaped rme plans only; always bulk lane).  May raise
         :class:`ServerOverloaded` when ``max_queue`` is set.
+
+        ``options`` is the full :class:`~repro.core.planner.CompileOptions`
+        passthrough — when given it wins over the individual ``path`` /
+        ``colstore`` / ``right_colstore`` / ``stream`` / ``stream_chunk_rows``
+        parameters (``snapshot_ts`` inside it is still overridden by the
+        tick's own pin).  ``optimize=False`` skips the logical rewrite
+        passes for this query regardless of where the options came from.
         """
         if lane is not None and lane not in LANES:
             raise ValueError(f"unknown lane {lane!r}; want one of {LANES}")
         node = query.build() if isinstance(query, PlanBuilder) else query
+        if options is not None:
+            path = options.path
+            colstore = options.colstore
+            right_colstore = options.right_colstore
+            stream = options.stream
+            stream_chunk_rows = options.stream_chunk_rows
+        else:
+            options = CompileOptions(
+                path=path, colstore=colstore, right_colstore=right_colstore,
+                stream=stream, stream_chunk_rows=stream_chunk_rows,
+            )
+        if optimize is not None:
+            options = dataclasses.replace(options, optimize=optimize)
         if stream:
             lane = "bulk"  # a chunked large output is bulk by definition
         elif lane is None:
@@ -598,7 +622,7 @@ class QueryServer:
         return self._admit(_Admitted(
             ticket_cls(client, lane, deadline_s), node, path,
             colstore, right_colstore, lane=lane, stream=stream,
-            stream_chunk_rows=stream_chunk_rows,
+            stream_chunk_rows=stream_chunk_rows, options=options,
         ))
 
     def submit_insert(
@@ -938,12 +962,14 @@ class QueryServer:
                     snapshot_ts = max(
                         t.now() for t in _plan_tables(req.node)
                     )
-                pq = compile_plan(
-                    self.engine, req.node, path=req.path,
-                    colstore=req.colstore, right_colstore=req.right_colstore,
-                    snapshot_ts=snapshot_ts, stream=req.stream,
+                base = req.options or CompileOptions(
+                    path=req.path, colstore=req.colstore,
+                    right_colstore=req.right_colstore, stream=req.stream,
                     stream_chunk_rows=req.stream_chunk_rows,
                 )
+                if snapshot_ts is not None:
+                    base = dataclasses.replace(base, snapshot_ts=snapshot_ts)
+                pq = compile_plan(req.node, self.engine, options=base)
                 sig = self._plan_sig(req, pq)
                 if sig is not None and sig in self._poisoned:
                     compiled.append(None)
@@ -1355,9 +1381,10 @@ def _snapshot_capable(node: PlanNode, path: str) -> bool:
     its ticket."""
     if path != "rme":
         return False
-    if isinstance(node, Join):
-        try:
-            return _device_join_expressible(decompose(node))
-        except Exception:
-            return False
+    try:
+        shape = decompose(node)
+    except Exception:
+        return False
+    if shape.kind == "join":
+        return _device_join_expressible(shape)
     return True

@@ -1,0 +1,543 @@
+"""Differential suite for the logical plan optimizer + redesigned compile API.
+
+Every strategies.py case compiles each plan kind three ways — optimized
+(default), ``optimize=False``, and a deliberately decorated spelling
+(redundant Projects, Filter-above-Project) — and pins byte-identical
+results across {xla, mlp} × {single, sharded}, against the
+:mod:`repro.kernels.ref` oracle over the byte-aligned plain twin.
+
+Beyond equality, the suite pins the optimizer's *byte* claims:
+
+* prune-columns: a wide Project under an Aggregate strictly drops
+  ``bytes_from_dram`` (the pruned plan rides the fused scalar path);
+* eliminate-trivial-pred: a provably all-pass predicate leaves the union
+  geometry (inert ``"none"`` lowering) — strictly fewer bus-beat bytes;
+* eliminate-empty: a provably-false predicate compiles to a zero-op
+  constant result;
+* subsumption: covered scan requests in one ``execute_many`` batch are
+  served by slicing the one covering scan (spy on ``_serve_scan``);
+* cost-based join ordering: a 2-join chain probes once and orders its
+  build sides by estimated cold build bytes (warm cache first).
+
+The legacy ``compile_plan(engine, plan, path=...)`` spelling must keep
+working for one release — with a ``DeprecationWarning`` — and produce
+results identical to ``options=CompileOptions(...)``.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import strategies
+import test_compressed_execution as tce
+from repro.core import (
+    CompileOptions,
+    RelationalMemoryEngine,
+    RelationalTable,
+    compile_plan,
+    plan,
+)
+from repro.core.optimizer import optimize_trace, pred_class
+from repro.core.plan import (
+    Filter,
+    PlanError,
+    Predicate,
+    Project,
+    Scan,
+    decompose,
+)
+from repro.core.planner import clear_join_build_cache
+from repro.core.schema import Column, TableSchema
+from repro.serve.query_server import QueryServer
+
+I32 = np.iinfo(np.int32)
+
+
+# --------------------------------------------------------------------------
+# plan spellings
+# --------------------------------------------------------------------------
+
+def _logical(t: RelationalTable, kind: str, p: dict, decorated: bool):
+    """The ``kind`` plan of a case — optionally in a decorated spelling the
+    optimizer must canonicalize (redundant Projects, Filter above Project)."""
+    b = plan(t)
+    if kind == "project":
+        if decorated:
+            b = b.project(*t.schema.names)
+        return b.project(*p["cols"])
+    if kind == "filter":
+        if decorated:
+            return (b.project(*p["cols"])
+                    .filter(p["pred_col"], p["pred_op"], p["pred_k"]))
+        return (b.filter(p["pred_col"], p["pred_op"], p["pred_k"])
+                .project(*p["cols"]))
+    if kind == "aggregate":
+        b = b.filter(p["pred_col"], p["pred_op"], p["pred_k"])
+        if decorated:
+            b = b.project(*t.schema.names)
+        return b.sum(p["agg_col"])
+    # groupby / groupby_str
+    if decorated:
+        b = b.project(p["group_col"], p["agg_col"])
+    return b.groupby(p["group_col"], p["agg_col"], "sum", p["num_groups"])
+
+
+def _assert_same(kind: str, a, b):
+    if kind in ("project", "filter"):
+        if isinstance(a, tuple):
+            for x, y in zip(a, b):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        else:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        return
+    if kind == "aggregate":
+        assert float(a) == float(b)
+        return
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _check_oracle(kind: str, p: dict, enc_t, enc_res, plain_res, oracle):
+    """Plain twin == ref oracle byte-for-byte; encoded == oracle through the
+    decode-aware comparison (code words decode to the twin's values)."""
+    if kind in ("project", "filter"):
+        if isinstance(plain_res, tuple):
+            e_pack, e_mask = enc_res
+            p_pack, p_mask = plain_res
+            o_pack, o_mask = oracle
+            np.testing.assert_array_equal(np.asarray(p_mask),
+                                          np.asarray(o_mask))
+            np.testing.assert_array_equal(np.asarray(e_mask),
+                                          np.asarray(o_mask))
+            np.testing.assert_array_equal(np.asarray(p_pack),
+                                          np.asarray(o_pack))
+            tce._compare_packed(enc_t, p["cols"], e_pack, p_pack, mask=o_mask)
+        else:
+            np.testing.assert_array_equal(np.asarray(plain_res),
+                                          np.asarray(oracle))
+            tce._compare_packed(enc_t, p["cols"], enc_res, plain_res)
+        return
+    if kind == "aggregate":
+        # compile_plan finalizes the fused [sum, count] pair to the scalar
+        want = float(np.asarray(oracle)[0])
+        assert float(plain_res) == want
+        assert float(enc_res) == want
+        return
+    # groupby compiled with op "sum" finalizes to the sums row
+    want = np.asarray(oracle[0])
+    np.testing.assert_array_equal(np.asarray(plain_res), want)
+    np.testing.assert_array_equal(np.asarray(enc_res), want)
+
+
+# --------------------------------------------------------------------------
+# the differential matrix
+# --------------------------------------------------------------------------
+
+CASES = (
+    [("xla", None, s) for s in range(12)]
+    + [("mlp", None, s) for s in range(3)]
+    + [("xla", 3 + s % 2, s) for s in range(5)]
+)
+
+
+@pytest.mark.parametrize("revision,shards,seed", CASES)
+def test_differential_optimized_vs_unoptimized(revision, shards, seed):
+    """Optimized, unoptimized, and decorated spellings of every plan kind
+    agree byte-for-byte with each other and the ref oracle."""
+    enc_t, plain_t, ts = tce._build_twins(seed)
+    enc_eng = tce._engine(revision, shards)
+    plain_eng = tce._engine(revision, shards)
+    for kind in strategies.PLAN_KINDS:
+        p = strategies.plan_params(seed, kind)
+        opts = CompileOptions(snapshot_ts=ts if p["snapshot"] else None)
+
+        qd = _logical(enc_t, kind, p, decorated=True)
+        q = _logical(enc_t, kind, p, decorated=False)
+        pq = compile_plan(qd, enc_eng, options=opts)
+        report = pq.explain()
+        assert "route:" in report and "passes:" in report
+        e_opt = pq.run()
+        e_raw = compile_plan(qd, enc_eng, options=opts, optimize=False).run()
+        e_std = compile_plan(q, enc_eng, options=opts, optimize=False).run()
+        _assert_same(kind, e_opt, e_raw)
+        _assert_same(kind, e_opt, e_std)
+
+        p_opt = compile_plan(
+            _logical(plain_t, kind, p, decorated=True), plain_eng,
+            options=opts,
+        ).run()
+        p_raw = compile_plan(
+            _logical(plain_t, kind, p, decorated=False), plain_eng,
+            options=opts, optimize=False,
+        ).run()
+        _assert_same(kind, p_opt, p_raw)
+
+        oracle = tce._oracle(plain_t, kind, p, ts)
+        _check_oracle(kind, p, enc_t, e_opt, p_opt, oracle)
+
+
+# --------------------------------------------------------------------------
+# rewrite passes at the tree level
+# --------------------------------------------------------------------------
+
+def test_pushdown_and_prune_tree_shapes():
+    t, _, _ = strategies.case_tables(3)
+    node = plan(t).project("K", "V").filter("P", "gt", 0).build()
+    out, applied = optimize_trace(node)
+    assert "pushdown-filter" in applied
+    assert isinstance(out, Project)
+    assert isinstance(out.child, Filter)
+    assert isinstance(out.child.child, Scan)
+
+    node2 = plan(t).project(*t.schema.names).sum("V").build()
+    out2, applied2 = optimize_trace(node2)
+    assert "prune-columns" in applied2
+    assert isinstance(out2.child, Scan)
+    assert decompose(out2).columns == ("V",)
+
+
+def test_normalize_pred_collapses_spellings():
+    """Two value-space constants translating to the same dictionary code
+    rewrite to one canonical spelling — equal shapes the engine's
+    subsumption layer can then share."""
+    schema = TableSchema((Column("K", "int32", codec="dict"),
+                          Column("V", "int32")))
+    t = RelationalTable.from_columns(schema, {
+        "K": np.array([3, 12, 40, 3, 12], np.int32),
+        "V": np.arange(5, dtype=np.int32),
+    })
+    a, applied = optimize_trace(plan(t).filter("K", "gt", 7).project("V").build())
+    b, _ = optimize_trace(plan(t).filter("K", "gt", 9).project("V").build())
+    assert "normalize-pred" in applied
+    fa, fb = a.child, b.child
+    assert isinstance(fa, Filter) and isinstance(fb, Filter)
+    assert (fa.col, fa.op, fa.k) == (fb.col, fb.op, fb.k)
+    assert decompose(a).pred == decompose(b).pred
+
+    # float constants over int32 snap to the equivalent integer bound
+    c, applied_f = optimize_trace(plan(t).filter("V", "gt", 3.5).build())
+    assert "normalize-pred" in applied_f
+    assert isinstance(c, Filter) and c.k == 3
+
+    eng = RelationalMemoryEngine(revision="xla")
+    for spelling, canonical in (((("K", "gt", 7)), ("K", "gt", 3)),
+                                ((("V", "gt", 3.5)), ("V", "gt", 3))):
+        col, op, k = spelling
+        r1 = compile_plan(plan(t).filter(col, op, k).project("V"), eng).run()
+        r2 = compile_plan(plan(t).filter(*canonical).project("V"), eng,
+                          optimize=False).run()
+        for x, y in zip(r1, r2):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_pred_class_translated_domain():
+    schema = TableSchema((Column("K", "int32", codec="dict"),
+                          Column("V", "int32")))
+    t = RelationalTable.from_columns(schema, {
+        "K": np.array([-7, 0, 3], np.int32),
+        "V": np.zeros(3, np.int32),
+    })
+    assert pred_class(t, Predicate("K", "gt", -8)) == "all"
+    assert pred_class(t, Predicate("K", "gt", 3)) == "never"
+    assert pred_class(t, Predicate("K", "lt", -7)) == "never"
+    assert pred_class(t, Predicate("K", "gt", 0)) == "some"
+    assert pred_class(t, Predicate("V", "gt", I32.max)) == "never"
+    assert pred_class(t, Predicate("V", "lt", 5)) == "some"
+
+
+# --------------------------------------------------------------------------
+# byte claims: pruning, inert predicates, constant-false elimination
+# --------------------------------------------------------------------------
+
+def test_prune_columns_strictly_drops_bytes():
+    """A wide Project under Sum forces the unoptimized route onto a 5-column
+    materialized view; pruning rides the fused scalar path instead."""
+    _, plain_t, _ = tce._build_twins(4)  # 257 rows, no churn
+    q = plan(plain_t).project(*plain_t.schema.names).sum("V")
+
+    opt_eng = RelationalMemoryEngine(revision="xla")
+    pq = compile_plan(q, opt_eng)
+    assert "prune-columns" in pq.passes
+    assert pq.route == "fused-aggregate"
+    got = pq.run()
+
+    raw_eng = RelationalMemoryEngine(revision="xla")
+    want = compile_plan(q, raw_eng, optimize=False).run()
+    assert float(got) == float(want)
+    assert opt_eng.stats.bytes_from_dram < raw_eng.stats.bytes_from_dram
+
+
+def test_inert_pred_leaves_union_geometry():
+    """A provably all-pass predicate lowers to the inert ``"none"`` spelling:
+    the predicate word leaves the scan — strictly fewer bytes, same rows."""
+    enc_t, _, _ = tce._build_twins(4)  # skew dict K: min value -7, no churn
+    assert pred_class(enc_t, Predicate("K", "gt", -8)) == "all"
+    q = plan(enc_t).filter("K", "gt", -8).project("F", "V")
+
+    opt_eng = RelationalMemoryEngine(revision="xla")
+    pq = compile_plan(q, opt_eng)
+    assert "eliminate-trivial-pred" in pq.passes
+    packed, mask = pq.run()
+    assert bool(np.asarray(mask).all())
+
+    raw_eng = RelationalMemoryEngine(revision="xla")
+    packed_raw, mask_raw = compile_plan(q, raw_eng, optimize=False).run()
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(packed_raw))
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(mask_raw))
+    assert opt_eng.stats.bytes_from_dram < raw_eng.stats.bytes_from_dram
+
+
+def test_const_empty_plan_elimination():
+    _, plain_t, _ = tce._build_twins(4)
+    q = plan(plain_t).filter("P", "gt", I32.max).project("V")
+
+    opt_eng = RelationalMemoryEngine(revision="xla")
+    pq = compile_plan(q, opt_eng)
+    assert pq.route == "const-empty"
+    assert "eliminate-empty" in pq.passes
+    packed, mask = pq.run()
+    assert not bool(np.asarray(mask).any())
+    assert not np.asarray(packed).any()
+
+    raw_eng = RelationalMemoryEngine(revision="xla")
+    packed_raw, mask_raw = compile_plan(q, raw_eng, optimize=False).run()
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(packed_raw))
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(mask_raw))
+    assert opt_eng.stats.bytes_from_dram == 0
+    assert raw_eng.stats.bytes_from_dram > 0
+
+    # the scalar contract: an aggregate over a provably-false predicate is 0
+    agg = compile_plan(plan(plain_t).filter("P", "gt", I32.max).sum("V"),
+                       opt_eng)
+    assert agg.route == "const-empty" and agg.run() == 0.0
+
+
+# --------------------------------------------------------------------------
+# subsumption-aware scan sharing
+# --------------------------------------------------------------------------
+
+def test_subsumption_covered_tickets_share_one_scan(monkeypatch):
+    """Three projections where one covers the others: the batch serves all
+    from ONE covering scan — the covered requests are sliced, not scanned.
+
+    A wide row keeps the rme route competitive (narrow tables cost-route
+    projections to the full-row fallback, which emits no scan request)."""
+    rng = np.random.default_rng(11)
+    schema = TableSchema(tuple(Column(f"C{i}", "int32") for i in range(24)))
+    t = RelationalTable.from_columns(schema, {
+        f"C{i}": rng.integers(-50, 50, 300).astype(np.int32)
+        for i in range(24)
+    })
+    eng = RelationalMemoryEngine(revision="xla")
+
+    groups = (("C0", "C1", "C2", "C3"),  # the covering scan
+              ("C0", "C2"),
+              ("C1",))
+    pqs = [compile_plan(plan(t).project(*g), eng) for g in groups]
+    assert all(pq.route == "rme" and len(pq.ops) == 1 for pq in pqs)
+
+    calls = []
+    orig = eng._serve_scan
+
+    def spy(table, reqs, shared=False):
+        calls.append((len(reqs), shared))
+        return orig(table, reqs, shared=shared)
+
+    monkeypatch.setattr(eng, "_serve_scan", spy)
+    results = eng.execute_many([pq.ops[0] for pq in pqs])
+
+    assert calls == [(1, True)], f"want 1 shared covering scan, saw {calls}"
+    assert eng.stats.subsumed_requests == 2
+    assert eng.stats.shared_scans == 1
+
+    words = t.words()
+    for pq, res, cols in zip(pqs, results, groups):
+        got = np.asarray(pq.launch([res]))
+        want = np.stack(
+            [words[:, t.schema.word_offset(c)] for c in cols], axis=1
+        )
+        np.testing.assert_array_equal(got, want, err_msg=str(cols))
+
+
+# --------------------------------------------------------------------------
+# cost-based join ordering + build-side choice
+# --------------------------------------------------------------------------
+
+def _join_fixture(n=200, unique_probe=False, seed=42):
+    rng = np.random.default_rng(seed)
+    schema = TableSchema((Column("K1", "int32"), Column("K2", "int32"),
+                          Column("V", "int32")))
+    k1 = (rng.permutation(np.arange(n, dtype=np.int32)) if unique_probe
+          else rng.integers(0, 50, n).astype(np.int32))
+    probe = RelationalTable.from_columns(schema, {
+        "K1": k1,
+        "K2": rng.integers(0, 30, n).astype(np.int32),
+        "V": rng.integers(-50, 50, n).astype(np.int32),
+    })
+    bk1 = np.unique(rng.integers(0, 50, 40).astype(np.int32))
+    b1 = RelationalTable.from_columns(
+        TableSchema((Column("K1", "int32"), Column("B1", "int32"))),
+        {"K1": bk1, "B1": rng.integers(-9, 9, bk1.size).astype(np.int32)},
+    )
+    bk2 = np.unique(rng.integers(0, 30, 25).astype(np.int32))
+    b2 = RelationalTable.from_columns(
+        TableSchema((Column("K2", "int32"), Column("B2", "int32"))),
+        {"K2": bk2, "B2": rng.integers(-9, 9, bk2.size).astype(np.int32)},
+    )
+    return probe, b1, b2
+
+
+def test_multi_join_chain_matches_pairwise_joins():
+    clear_join_build_cache()
+    probe, b1, b2 = _join_fixture()
+    eng = RelationalMemoryEngine(revision="xla")
+
+    chain = (plan(probe).join(b1, "K1", "V", "B1")
+             .join(b2, "K2", "V", "B2"))
+    pq = compile_plan(chain, eng)
+    assert pq.route == "device-hash-join"
+    assert len(pq.join_order) == 2
+    assert "join[0]:" in pq.explain()
+    res = pq.run()
+
+    ref_eng = RelationalMemoryEngine(revision="xla")
+    device = CompileOptions(join_route="device-hash-join")
+    ra = compile_plan(plan(probe).join(b1, "K1", "V", "B1"), ref_eng,
+                      options=device).run()
+    rb = compile_plan(plan(probe).join(b2, "K2", "V", "B2"), ref_eng,
+                      options=device).run()
+    matched = np.asarray(ra.matched) & np.asarray(rb.matched)
+    v = probe.words()[:, probe.schema.word_offset("V")]
+
+    np.testing.assert_array_equal(np.asarray(res.matched), matched)
+    np.testing.assert_array_equal(np.asarray(res.s_proj),
+                                  np.where(matched, v, 0))
+    np.testing.assert_array_equal(np.asarray(res.r_projs[0]),
+                                  np.where(matched, np.asarray(ra.r_proj), 0))
+    np.testing.assert_array_equal(np.asarray(res.r_projs[1]),
+                                  np.where(matched, np.asarray(rb.r_proj), 0))
+
+
+def test_multi_join_orders_warm_build_first(monkeypatch):
+    """A warm partition cache prices its build at 0: the chain probes it
+    first even when the client spelled it second — and the chain's probe
+    requests are identical, so the whole chain costs ONE physical scan."""
+    clear_join_build_cache()
+    probe, b1, b2 = _join_fixture()
+    eng = RelationalMemoryEngine(revision="xla")
+
+    # warm b2's device build, leave b1 cold
+    compile_plan(plan(probe).join(b2, "K2", "V", "B2"), eng,
+                 options=CompileOptions(join_route="device-hash-join")).run()
+
+    chain = (plan(probe).join(b1, "K1", "V", "B1")
+             .join(b2, "K2", "V", "B2"))
+    pq = compile_plan(chain, eng)
+    keys = [entry[0] for entry in pq.join_order]
+    assert keys == ["K2", "K1"], pq.join_order
+    assert pq.join_order[0][2] == 0  # warm build: estimated 0 bytes
+    assert pq.join_order[1][2] > 0  # cold build carries a real estimate
+
+    calls = []
+    orig = eng._serve_scan
+
+    def spy(table, reqs, shared=False):
+        calls.append(len(reqs))
+        return orig(table, reqs, shared=shared)
+
+    monkeypatch.setattr(eng, "_serve_scan", spy)
+    res = pq.run()
+    # both JoinOps lowered to the same probe request over the shared union
+    # view — the engine deduplicates them into one scan
+    assert calls == [1], calls
+    assert np.asarray(res.matched).shape == (probe.row_count,)
+
+
+def test_flipped_join_route_matches_standard():
+    clear_join_build_cache()
+    probe, b1, _ = _join_fixture(unique_probe=True)
+    q = plan(probe).join(b1, "K1", "V", "B1")
+
+    std = compile_plan(q, RelationalMemoryEngine(revision="xla")).run()
+    flip_eng = RelationalMemoryEngine(revision="xla")
+    pq = compile_plan(q, flip_eng,
+                      options=CompileOptions(join_route="flipped-scan-join"))
+    assert pq.route == "flipped-scan-join"
+    flip = pq.run()
+
+    for field in ("s_proj", "r_proj", "matched"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(flip, field)),
+            np.asarray(getattr(std, field)), err_msg=field)
+
+
+def test_flipped_join_needs_unique_probe_keys():
+    clear_join_build_cache()
+    probe, b1, _ = _join_fixture(unique_probe=False)
+    eng = RelationalMemoryEngine(revision="xla")
+    with pytest.raises(PlanError, match="flipped"):
+        compile_plan(plan(probe).join(b1, "K1", "V", "B1"), eng,
+                     options=CompileOptions(join_route="flipped-scan-join"))
+
+
+# --------------------------------------------------------------------------
+# the compile API: CompileOptions, deprecation, explain, server passthrough
+# --------------------------------------------------------------------------
+
+def test_legacy_kwargs_warn_and_match():
+    t, _, _ = strategies.case_tables(4)
+    eng = RelationalMemoryEngine(revision="xla")
+    q = plan(t).sum("V")
+    with pytest.warns(DeprecationWarning, match="CompileOptions"):
+        legacy = compile_plan(eng, q, path="rme").run()
+    new = compile_plan(q, eng, options=CompileOptions()).run()
+    assert float(legacy) == float(new)
+
+    with pytest.raises(TypeError, match="not both"):
+        compile_plan(q, eng, options=CompileOptions(), path="rme")
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        compile_plan(q, eng, no_such_option=1)
+    with pytest.raises(TypeError, match="needs a plan and an engine"):
+        compile_plan(q)
+
+
+def test_explain_reports_trees_and_passes():
+    t, _, _ = strategies.case_tables(3)
+    eng = RelationalMemoryEngine(revision="xla")
+    q = plan(t).project("K", "V").filter("P", "gt", 0)
+
+    pq = compile_plan(q, eng)
+    report = pq.explain()
+    assert "logical:" in report and "optimized:" in report
+    assert "pushdown-filter" in report
+
+    raw = compile_plan(q, eng, optimize=False)
+    assert raw.passes == ()
+    assert "passes: (none)" in raw.explain()
+    assert "optimized:" not in raw.explain()  # same tree, printed once
+
+    via_options = compile_plan(q, eng, options=CompileOptions(optimize=False))
+    assert via_options.passes == ()
+
+
+def test_query_server_options_passthrough():
+    t, _, _ = strategies.case_tables(3)
+    eng = RelationalMemoryEngine(revision="xla")
+    server = QueryServer(eng)
+    q = plan(t).filter("P", "gt", 0).project("K", "V")
+
+    t_opts = server.submit(q, options=CompileOptions())
+    t_raw = server.submit(q, optimize=False)
+    server.run_tick()
+    r_opts, r_raw = t_opts.result(timeout=5), t_raw.result(timeout=5)
+    for x, y in zip(r_opts, r_raw):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    # options wins over the individual parameters it subsumes
+    t_col = server.submit(
+        plan(t).sum("V"), path="rme",
+        options=CompileOptions(path="col",
+                               colstore={"V": np.arange(t.row_count,
+                                                        dtype=np.int32)}),
+    )
+    server.run_tick()
+    assert t_col.result(timeout=5) == float(np.arange(t.row_count).sum())

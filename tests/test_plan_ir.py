@@ -85,14 +85,52 @@ def test_invalid_plans_raise(table):
     with pytest.raises(PlanError):
         decompose(plan(table).filter("A1", "gt", 0).filter("A2", "lt", 0)
                   .project("A3"))  # two fused predicates
-    with pytest.raises(PlanError):
-        decompose(plan(table).project("A1").sum("A1"))  # redundant project
     with pytest.raises(KeyError):
         decompose(plan(table).project("nope"))
     with pytest.raises(PlanError):
-        # join sides must be plain scans
+        # join sides must be plain scans (modulo probe-side Filters)
         decompose(Join(plan(table).project("A1").build(), Scan(table),
                        "A2", "A1", "A3"))
+
+
+def test_decompose_is_order_insensitive(table):
+    """Regression for the reordered spellings the rewrite passes produce."""
+    # Filter above Project above Filter — identical predicates collapse
+    s = decompose(plan(table).filter("A3", "gt", 2).project("A1")
+                  .filter("A3", "gt", 2))
+    assert s.kind == "project" and s.columns == ("A1",)
+    assert s.pred.col == "A3" and s.pred.k == 2
+    # nested Projects: the outermost defines the output group
+    s = decompose(plan(table).project("A1", "A4", "A7").project("A1", "A4"))
+    assert s.columns == ("A1", "A4")
+    # Project under Aggregate widens the scanned group (pruning's target)
+    s = decompose(plan(table).project("A1", "A4").sum("A1"))
+    assert s.kind == "aggregate" and s.columns == ("A1", "A4")
+    # ...and under GroupBy
+    s = decompose(plan(table).project("A5").groupby("A2", "A1"))
+    assert s.kind == "groupby" and s.columns == ("A1", "A2", "A5")
+    # two *distinct* predicates still exceed the fused kernels
+    with pytest.raises(PlanError):
+        decompose(plan(table).filter("A3", "gt", 2).project("A1")
+                  .filter("A3", "gt", 3))
+    # Filter above a Join becomes the probe-side predicate; Filter below
+    # the Join's probe side is the same shape
+    above = decompose(Filter(
+        plan(table).join(table, key="A2", left_proj="A1",
+                         right_proj="A3").build(), "A4", "gt", 1))
+    below = decompose(plan(table).filter("A4", "gt", 1)
+                      .join(table, key="A2", left_proj="A1", right_proj="A3"))
+    assert above.kind == below.kind == "join"
+    assert above.pred == below.pred and above.pred.col == "A4"
+    assert above.columns == below.columns
+    # a left-deep two-join chain flattens innermost-first
+    chain = decompose(
+        plan(table).join(table, key="A2", left_proj="A1", right_proj="A3")
+        .join(table, key="A4", left_proj="A5", right_proj="A6"))
+    assert chain.kind == "join" and len(chain.joins) == 2
+    assert chain.joins[0].key == "A2" and chain.joins[1].key == "A4"
+    assert chain.join is chain.joins[0]
+    assert chain.columns == ("A1", "A2", "A4", "A5")
 
 
 # ------------------------------------------------------- compiler routing
